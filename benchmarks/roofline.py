@@ -1,0 +1,89 @@
+"""Roofline report: formats the dry-run JSON into the EXPERIMENTS.md table.
+
+Reads the records produced by ``repro.launch.dryrun --out <json>`` (one per
+(arch x shape x mesh) cell) and renders, per cell:
+
+  compute_s    = HLO_FLOPs / (chips x 197 TFLOP/s)
+  memory_s     = HLO_bytes / (chips x 819 GB/s)
+  collective_s = collective_bytes / (chips x 50 GB/s ICI)
+
+plus the dominant term, the model-FLOPs utilization of the compiled step
+(6ND/2ND vs compiled FLOPs), and the roofline fraction
+``best_term / dominant_term`` (how far the dominant term is above the best
+achievable bound — 1.0 means perfectly balanced at the hardware limit).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_records(paths: List[str]) -> List[Dict]:
+    recs = []
+    for pattern in paths:
+        for f in sorted(glob.glob(pattern)):
+            with open(f) as fh:
+                data = json.load(fh)
+            recs.extend(data if isinstance(data, list) else [data])
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:6.1f}ms"
+    return f"{x * 1e6:6.1f}us"
+
+
+def render(recs: List[Dict], show_skips: bool = True) -> str:
+    out = []
+    hdr = (f"{'arch':<22} {'shape':<12} {'mesh':<8} {'compute':>9} "
+           f"{'memory':>9} {'collective':>11} {'bound':>7} {'MFU%':>6} "
+           f"{'useful%':>8}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in recs:
+        if "skip" in r:
+            if show_skips:
+                out.append(f"{r['arch']:<22} {r['shape']:<12} "
+                           f"SKIP: {r['skip']}")
+            continue
+        if "error" in r:
+            out.append(f"{r['arch']:<22} {r['shape']:<12} "
+                       f"ERROR: {r['error'][:70]}")
+            continue
+        rl = r["roofline_s"]
+        dom = r["bottleneck"]
+        # Model-FLOPs utilization if the step ran at the dominant-term time.
+        step_s = max(rl.values())
+        mfu = 100.0 * (r["model_flops_per_chip"] / 197e12) / max(step_s, 1e-12)
+        out.append(
+            f"{r['arch']:<22} {r['shape']:<12} {r['mesh']:<8} "
+            f"{fmt_s(rl['compute']):>9} {fmt_s(rl['memory']):>9} "
+            f"{fmt_s(rl['collective']):>11} {dom[:7]:>7} {mfu:6.1f} "
+            f"{100.0 * r.get('useful_flops_ratio', 0):8.1f}"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json", nargs="*", default=[], help="dry-run JSON files/globs")
+    ap.add_argument("--default-dir", default="benchmarks/results")
+    args = ap.parse_args(argv)
+    paths = args.json or [os.path.join(args.default_dir, "dryrun*.json")]
+    recs = load_records(paths)
+    if not recs:
+        print(f"no dry-run records found in {paths}; run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --out <json> first")
+        return []
+    print(render(recs))
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Table 2 — Weight quantization: clipping methods vs OCS vs OCS+clip (§5.2).
+
+Paper setup: ImageNet CNNs, weight bits 8-4 (activations at 8 bits — we
+keep activations float here to isolate the weight effect, as Table 6 does),
+columns: Clip {None, MSE, ACIQ, KL, Best}, OCS r {0.01, 0.02, 0.05}, and
+OCS + Best-Clip. Claims to validate:
+
+* no clipping needed at 8-7 bits (None ~ Best);
+* clipping wins at <=6 bits over None;
+* OCS (small r) >= Best Clip at 6-5 bits;
+* OCS + clip is the best at the lowest bitwidths.
+
+Subjects: the convnet (accuracy %) and the transformer LM (perplexity).
+"""
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+from repro.core.recipe import QuantRecipe
+
+from . import common
+
+CLIPS = [None, "mse", "aciq", "kl"]
+RATIOS = [0.01, 0.02, 0.05]
+
+
+def _recipe(bits, clip=None, ratio=0.0):
+    return QuantRecipe(w_bits=bits, w_clip=clip, ocs_ratio=ratio)
+
+
+def run_subject(name, quantize, evaluate, better, bits_list, fmt="{:.1f}"):
+    """better: +1 if higher is better (accuracy), -1 for perplexity."""
+    float_score = evaluate(None)
+    print(f"[{name}] float score: {fmt.format(float_score)}")
+    cells, records = {}, []
+    for bits in bits_list:
+        row = f"w{bits}"
+        clip_scores = {}
+        for clip in CLIPS:
+            s = evaluate(_recipe(bits, clip=clip))
+            clip_scores[clip or "none"] = s
+            cells[(row, f"clip:{clip or 'none'}")] = s
+        best_clip = max(clip_scores, key=lambda k: better * clip_scores[k])
+        cells[(row, "clip:best")] = clip_scores[best_clip]
+        for r in RATIOS:
+            s = evaluate(_recipe(bits, ratio=r))
+            cells[(row, f"ocs:{r}")] = s
+        for r in RATIOS:
+            bc = None if best_clip == "none" else best_clip
+            s = evaluate(_recipe(bits, clip=bc, ratio=r))
+            cells[(row, f"ocs+clip:{r}")] = s
+        records.append({"bits": bits, "best_clip": best_clip,
+                        **{f"{k}": v for (rr, k), v in cells.items() if rr == row}})
+        print(f"  {row}: " + " ".join(
+            f"{k.split(':')[-1]}={fmt.format(cells[(row, k)])}"
+            for k in [f"clip:{c or 'none'}" for c in CLIPS]
+            + [f"ocs:{r}" for r in RATIOS] + [f"ocs+clip:{r}" for r in RATIOS]))
+
+    cols = ([f"clip:{c or 'none'}" for c in CLIPS] + ["clip:best"]
+            + [f"ocs:{r}" for r in RATIOS] + [f"ocs+clip:{r}" for r in RATIOS])
+    rows = [f"w{b}" for b in bits_list]
+    title = f"Table 2 analog — weight PTQ, {name} (float={fmt.format(float_score)})"
+    print(common.render_table(title, rows, cols, cells, fmt=fmt))
+    return {"float": float_score, "rows": records}
+
+
+def run(quick: bool = False):
+    # Bit ranges sit at each subject's degradation onset (the small
+    # well-regularized in-container models are more quantization-robust than
+    # ImageNet CNNs, so the paper's 8-4 bit window shifts down; the *claims*
+    # are about the method ordering at the onset, which is preserved).
+    conv_bits = [6, 4, 3] if quick else [8, 6, 5, 4, 3]
+    lm_bits = [4, 3] if quick else [5, 4, 3, 2]
+
+    # --- convnet (accuracy, higher better) ---
+    params, _ = common.get_convnet()
+
+    def eval_conv(recipe):
+        p = params if recipe is None else common.fake_quant_convnet(params, recipe)
+        return common.convnet_accuracy(p)
+
+    conv = run_subject("convnet", None, eval_conv, +1, conv_bits)
+
+    # --- transformer LM (perplexity, lower better) ---
+    from repro.core.apply import fake_quantize_params
+
+    lm_params, _ = common.get_lm()
+
+    def eval_lm(recipe):
+        p = lm_params if recipe is None else fake_quantize_params(lm_params, recipe)
+        return common.lm_ppl(p)
+
+    lm = run_subject("transformer-lm", None, eval_lm, -1, lm_bits, fmt="{:.2f}")
+
+    common.save_json("table2", {"convnet": conv, "lm": lm})
+    return {"convnet": conv, "lm": lm}
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(**vars(ap.parse_args()))

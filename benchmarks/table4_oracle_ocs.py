@@ -1,0 +1,104 @@
+"""Table 4 — Oracle OCS on activations vs batch size (§5.3).
+
+Paper setup: 6 activation bits, r=0.02; Oracle OCS re-selects the split
+channels *per input batch* with exact knowledge of the activations. Claim to
+validate: the oracle recovers activation OCS (>= best clip at batch <= 32,
+improving as the batch shrinks and channel selection gets finer) —
+evidence that static profiling, not the OCS transform itself, is the
+limiting factor for activations.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.actquant import ActQuantCtx, act_quant_ctx
+from repro.core.recipe import QuantRecipe
+from repro.models.convnet import convnet_forward, make_synthetic_images
+
+from . import common
+from .table3_act_quant import build_ctx, calibrate_convnet, eval_under_ctx
+
+# Paper uses a6 on ImageNet models; this subject's degradation onset is a4.
+BITS = 4
+RATIO = 0.02
+
+
+def _oracle_clip(stats, ratio: float) -> float:
+    """Post-split grid range: top ceil(r*C) channels (by profiled max) halve.
+
+    The win of OCS is the *narrower grid*; the oracle re-picks channels per
+    batch but the static grid must already account for the halving, so it is
+    derived from calibration the same way the static-OCS grid is.
+    """
+    amax = np.sort(np.asarray(stats.abs_max))[::-1].copy()
+    n = max(1, int(np.ceil(ratio * len(amax))))
+    amax[:n] *= 0.5
+    return float(max(amax.max(), 1e-30))
+
+
+def oracle_accuracy(params, bits: int, ratio: float, batch_size: int,
+                    coll, n: int = 1024) -> float:
+    """Eval with per-batch oracle channel selection at the given batch size."""
+    clips = {s: _oracle_clip(st, ratio) for s, st in coll.sites.items()}
+    ctx = ActQuantCtx(bits=bits, clips=clips, oracle_ratio=ratio)
+
+    def fwd(p, x):
+        ctx.reset()
+        return convnet_forward(p, x, common.CONV_CFG)
+
+    d = make_synthetic_images(n, common.CONV_CFG, seed=777)
+    correct = 0
+    with act_quant_ctx(ctx):
+        jfwd = jax.jit(fwd)
+        for i in range(0, n, batch_size):
+            xb = jnp.asarray(d["images"][i : i + batch_size])
+            if xb.shape[0] != batch_size:
+                break
+            logits = jfwd(params, xb)
+            correct += int((np.argmax(np.asarray(logits), -1)
+                            == d["labels"][i : i + batch_size]).sum())
+    total = (n // batch_size) * batch_size
+    return 100.0 * correct / total
+
+
+def run(quick: bool = False):
+    params, _ = common.get_convnet()
+    w8 = common.fake_quant_convnet(params, QuantRecipe(w_bits=8))
+    coll = calibrate_convnet(params)
+
+    # References: no OCS (linear) and best clip at this bitwidth (from §5.3).
+    no_ocs = eval_under_ctx(w8, build_ctx(coll, BITS, None, 0.0))
+    best_clip = max(
+        eval_under_ctx(w8, build_ctx(coll, BITS, m, 0.0))
+        for m in ("mse", "aciq", "kl")
+    )
+    static_ocs = eval_under_ctx(w8, build_ctx(coll, BITS, None, RATIO))
+
+    batch_sizes = [1, 8, 128] if quick else [1, 2, 4, 8, 32, 128]
+    n = 512 if quick else 1024
+    rows = []
+    for bs in batch_sizes:
+        acc = oracle_accuracy(w8, BITS, RATIO, bs, coll, n=n)
+        rows.append({"batch": bs, "acc": acc})
+        print(f"  oracle batch={bs}: {acc:.1f}")
+
+    print(f"\nTable 4 analog — Oracle OCS (a{BITS}, r={RATIO}, convnet)")
+    print(f"{'batch':>8} | acc")
+    for r in rows:
+        print(f"{r['batch']:>8} | {r['acc']:.1f}")
+    print(f"{'no OCS':>8} | {no_ocs:.1f}")
+    print(f"{'static':>8} | {static_ocs:.1f}")
+    print(f"{'clip*':>8} | {best_clip:.1f}")
+    common.save_json("table4", {"rows": rows, "no_ocs": no_ocs,
+                                "static_ocs": static_ocs, "best_clip": best_clip})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(**vars(ap.parse_args()))

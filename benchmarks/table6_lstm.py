@@ -1,0 +1,62 @@
+"""Table 6 — LSTM LM perplexity with quantized weights (§6).
+
+Paper setup: 2-layer LSTM (650 hidden) on WikiText-2; weight bits {6, 5} x
+OCS expand ratio {0, 0.01, 0.02, 0.05} x clip {None, MSE, ACIQ, KL};
+activations and hidden state stay float. Claims to validate:
+
+* clipping does not improve this model (None is the best column);
+* OCS lowers perplexity monotonically with r, beating every clip method
+  (the paper's strongest OCS result).
+
+Subject: the scaled 2-layer LSTM trained on the synthetic stream.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.apply import fake_quantize_params
+from repro.core.recipe import QuantRecipe
+
+from . import common
+
+CLIPS = [None, "mse", "aciq", "kl"]
+RATIOS = [0.0, 0.01, 0.02, 0.05]
+
+
+def run(quick: bool = False):
+    params, _ = common.get_lstm()
+    float_ppl = common.lstm_ppl(params)
+    print(f"[table6] float ppl: {float_ppl:.2f}")
+
+    # Degradation onset for this subject is w4-w3 (the paper's 650-hidden
+    # WikiText-2 LSTM degrades at 6-5; claim ordering is what transfers).
+    bits_list = [4] if quick else [5, 4, 3]
+    ratios = [0.0, 0.05] if quick else RATIOS
+    cells, records = {}, []
+    for bits in bits_list:
+        for r in ratios:
+            row = f"w{bits} r={r}"
+            for clip in CLIPS:
+                recipe = QuantRecipe(w_bits=bits, w_clip=clip, ocs_ratio=r)
+                q = fake_quantize_params(params, recipe)
+                ppl = common.lstm_ppl(q)
+                cells[(row, f"clip:{clip or 'none'}")] = ppl
+            records.append({"bits": bits, "ratio": r,
+                            **{k: v for (rr, k), v in cells.items() if rr == row}})
+            print(f"  {row}: " + " ".join(
+                f"{c or 'none'}={cells[(row, 'clip:' + (c or 'none'))]:.2f}"
+                for c in CLIPS))
+
+    rows = [f"w{b} r={r}" for b in bits_list for r in ratios]
+    cols = [f"clip:{c or 'none'}" for c in CLIPS]
+    print(common.render_table(
+        f"Table 6 analog — LSTM LM perplexity (float={float_ppl:.2f}, lower=better)",
+        rows, cols, cells, fmt="{:.2f}"))
+    common.save_json("table6", {"float_ppl": float_ppl, "rows": records})
+    return records
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(**vars(ap.parse_args()))

@@ -1,0 +1,53 @@
+"""§3.4 variant — knapsack channel allocation vs the simple ceil(r*C) rule.
+
+The paper: "We also tried a more intelligent approach which formulates
+extra channel allocation as a knapsack problem ... Unfortunately, the
+knapsack approach is experimentally not better than the simple method, and
+for space reasons we do not show results with knapsack." The paper shows no
+numbers; we implement the variant (repro/core/allocate.py) and test the
+claim: at matched overhead, accuracy/perplexity should be ~equal (the
+knapsack wins its *objective* — total range reduction — but that does not
+transfer to end quality, which is the paper's point).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core.apply import fake_quantize_params
+from repro.core.recipe import QuantRecipe
+
+from . import common
+
+
+def run(quick: bool = False):
+    lm_params, _ = common.get_lm()
+    float_ppl = common.lm_ppl(lm_params)
+    bits_list = [3] if quick else [3, 2]
+    ratios = [0.02] if quick else [0.02, 0.05]
+    print(f"[table7] float ppl {float_ppl:.2f}")
+    rows = []
+    for bits in bits_list:
+        for r in ratios:
+            ppl = {}
+            for alloc in ("uniform", "knapsack"):
+                recipe = QuantRecipe(w_bits=bits, ocs_ratio=r, w_clip="mse",
+                                     alloc=alloc)
+                q = fake_quantize_params(lm_params, recipe)
+                ppl[alloc] = common.lm_ppl(q)
+            rows.append({"bits": bits, "ratio": r, **ppl})
+            print(f"  w{bits} r={r}: uniform {ppl['uniform']:.2f} | "
+                  f"knapsack {ppl['knapsack']:.2f}")
+
+    common.save_json("table7", rows)
+    # Paper's claim: knapsack is NOT better (within noise of uniform).
+    close = sum(
+        abs(x["knapsack"] - x["uniform"]) <= 0.15 * x["uniform"] for x in rows
+    )
+    print(f"\nclaim check (knapsack ~ uniform within 15%): {close}/{len(rows)} cells")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(**vars(ap.parse_args()))

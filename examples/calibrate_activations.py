@@ -1,0 +1,55 @@
+"""Activation calibration walkthrough (paper §3.4 / §5.3 / Table 4).
+
+Shows the TensorRT-style profiling flow the paper builds on:
+
+1. run a few *training* batches through the float model under a tap
+   collector (per-site histograms + per-channel outlier counts);
+2. derive per-site clip thresholds (MSE / ACIQ / KL) and activation-OCS
+   channel-split specs from the collected stats;
+3. evaluate activation PTQ at 6 bits: clipping vs static OCS vs Oracle OCS
+   (per-batch channel selection) — reproducing the paper's finding that the
+   oracle recovers what static profiling loses.
+
+Run:  PYTHONPATH=src python examples/calibrate_activations.py
+"""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+
+from benchmarks import common
+from benchmarks.table3_act_quant import build_ctx, calibrate_convnet, eval_under_ctx
+from benchmarks.table4_oracle_ocs import oracle_accuracy
+from repro.core.recipe import QuantRecipe
+
+BITS = 4  # this subject's activation-degradation onset (see benchmarks/table3)
+
+
+def main():
+    params, _ = common.get_convnet()
+    w8 = common.fake_quant_convnet(params, QuantRecipe(w_bits=8))
+    print("calibrating on 3 training batches...")
+    coll = calibrate_convnet(params, n_batches=3)
+    print(f"  {len(coll)} activation sites profiled")
+    site, stats = next(iter(coll.sites.items()))
+    order = stats.split_order()[:3]
+    print(f"  e.g. site {site}: top outlier channels {list(order)} "
+          f"(99th pct = {stats.hist.quantile(0.99):.2f}, "
+          f"max = {stats.hist.max_seen:.2f})")
+
+    float_acc = common.convnet_accuracy(params)
+    print(f"\nfloat accuracy: {float_acc:.1f}%   (activations at {BITS} bits below)")
+    for name, ctx in [
+        ("no clip", build_ctx(coll, BITS, None, 0.0)),
+        ("MSE clip", build_ctx(coll, BITS, "mse", 0.0)),
+        ("static OCS r=0.02", build_ctx(coll, BITS, None, 0.02)),
+    ]:
+        print(f"  {name:>18}: {eval_under_ctx(w8, ctx):.1f}%")
+    acc = oracle_accuracy(w8, BITS, 0.02, batch_size=8, coll=coll, n=512)
+    print(f"  {'Oracle OCS (bs=8)':>18}: {acc:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from .base import (  # noqa: F401
+    HymbaConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    SHAPES,
+)
+from .registry import get_config, list_archs, smoke_config  # noqa: F401

@@ -1,0 +1,23 @@
+"""hubert-xlarge [audio] — encoder-only, wav2vec2-style backbone
+(arXiv:2106.07447). 48L, d_model=1280, 16 heads (MHA), d_ff=5120, vocab=504
+(cluster targets). The conv feature extractor is a stub per the assignment:
+``input_specs`` provides precomputed frame embeddings [B, T, 1280].
+Encoder-only -> no decode step (decode_32k / long_500k skipped).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    block="dense",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    frontend="audio",
+    act="gelu",
+    norm="ln",
+)

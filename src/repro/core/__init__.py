@@ -1,0 +1,25 @@
+"""Core PTQ library: linear quantization, clipping, and Outlier Channel Splitting."""
+from .quantizer import (  # noqa: F401
+    QuantParams,
+    compute_scale,
+    dequantize,
+    fake_quant,
+    qmax,
+    quantize_int,
+    quantize_tensor,
+    storage_dtype,
+)
+from .histogram import StreamingHistogram, ChannelStats  # noqa: F401
+from .clipping import find_clip, CLIP_METHODS, mse_clip, aciq_clip, kl_clip  # noqa: F401
+from .ocs import (  # noqa: F401
+    OCSQuantLinear,
+    OCSSpec,
+    collapse_expanded,
+    duplicate_weight_rows,
+    expand_activations,
+    make_ocs_quant_linear,
+    n_splits_for_ratio,
+    oracle_expand,
+    split_activations_spec,
+    split_weights,
+)

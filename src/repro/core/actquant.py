@@ -1,0 +1,135 @@
+"""Activation quantization context (paper §5.3, Tables 3 & 4).
+
+Activation PTQ is evaluated by running the float model under a context that
+intercepts every quantizable activation site (the input of each linear /
+conv layer, identified by trace-time site ordinals) and applies:
+
+1. optional **activation OCS** — expand channels per a calibration-derived
+   :class:`~repro.core.ocs.OCSSpec` (split channels halved, weights' rows
+   duplicated *unchanged*, Eq. 4), or **Oracle OCS** (Table 4): per-batch
+   top-|x| channel selection with exact knowledge of this batch;
+2. **fake quantization** on the (possibly expanded) activations with a grid
+   *fixed from calibration* (the paper profiles 512 training images, then
+   freezes the grid for testing).
+
+The context is consulted by ``repro.models.layers.dense`` and the convnet's
+conv wrapper; outside a context both are zero-overhead. Site names repeat
+across layers ("mlp_up" in every block), so sites are disambiguated by a
+trace-time ordinal — evaluation must trace the layer loop unrolled
+(``scan=False``) so each layer gets its own grid, matching the paper's
+per-layer profiling.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+
+from .ocs import OCSSpec, expand_activations, oracle_expand
+from .quantizer import qmax
+
+__all__ = ["ActQuantCtx", "act_quant_ctx", "active_ctx", "site_key"]
+
+_ACTIVE: Optional["ActQuantCtx"] = None
+
+
+@dataclasses.dataclass
+class ActQuantCtx:
+    bits: int
+    clips: Dict[str, float]  # site -> clip threshold (calibrated)
+    specs: Dict[str, OCSSpec] = dataclasses.field(default_factory=dict)
+    oracle_ratio: float = 0.0  # >0: Table-4 per-batch oracle selection
+    _counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def reset(self):
+        self._counts = {}
+
+    def next_site(self, name: str) -> str:
+        k = self._counts.get(name, 0)
+        self._counts[name] = k + 1
+        return f"{name}#{k}"
+
+
+def active_ctx() -> Optional[ActQuantCtx]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def act_quant_ctx(ctx: ActQuantCtx):
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, ctx
+    ctx.reset()
+    try:
+        yield ctx
+    finally:
+        _ACTIVE = prev
+
+
+def site_key(name: str) -> Optional[str]:
+    """Advance the trace-time ordinal for ``name`` (None if no context)."""
+    if _ACTIVE is None:
+        return None
+    return _ACTIVE.next_site(name)
+
+
+def _fake_quant_fixed(x: jnp.ndarray, bits: int, clip: float) -> jnp.ndarray:
+    step = jnp.asarray(clip, jnp.float32) / qmax(bits)
+    q = jnp.clip(
+        jnp.floor(x.astype(jnp.float32) / step + 0.5), -qmax(bits), qmax(bits)
+    )
+    return (q * step).astype(x.dtype)
+
+
+def apply_act_quant(x: jnp.ndarray, w: jnp.ndarray, site: Optional[str]):
+    """Transform (activations, weight-rows) at one site under the context.
+
+    x: [..., Cin]; w: [Cin, ...] (first axis = input channels). Returns the
+    (possibly expanded) pair with activations fake-quantized on the
+    calibrated grid. No-op when no context or the site is unknown.
+    """
+    ctx = _ACTIVE
+    if ctx is None or site is None:
+        return x, w
+    clip = ctx.clips.get(site)
+    if ctx.oracle_ratio > 0:
+        import math
+
+        n = max(1, math.ceil(ctx.oracle_ratio * x.shape[-1]))  # ceil(r*C)
+        x, src = oracle_expand(x, n)
+        w = jnp.take(w, src, axis=0)
+        if clip is not None:
+            x = _fake_quant_fixed(x, ctx.bits, clip)
+        return x, w
+    spec = ctx.specs.get(site)
+    if spec is not None:
+        x = expand_activations(x, spec)
+        w = jnp.take(w, spec.src, axis=0)
+    if clip is not None:
+        x = _fake_quant_fixed(x, ctx.bits, clip)
+    return x, w
+
+
+def post_ocs_clip(stats, spec: Optional[OCSSpec], method: Optional[str], bits: int) -> float:
+    """Calibrated clip threshold for a site, accounting for OCS halving.
+
+    ``stats``: :class:`~repro.core.histogram.ChannelStats` from calibration.
+    With OCS, split channels contribute half their profiled max.
+    """
+    from .clipping import find_clip
+
+    if spec is None:
+        return find_clip(stats.hist, bits, method)
+    import numpy as np
+
+    mult = np.asarray(spec.mult)
+    src = np.asarray(spec.src)
+    eff_max = float(np.max(stats.abs_max[src] * mult)) if len(src) else 0.0
+    if method in (None, "none", "max"):
+        return max(eff_max, 1e-30)
+    # Clipping on top of OCS isn't used by the paper (Table 3 note); support
+    # it anyway by scaling the no-OCS threshold into the reduced range.
+    base = find_clip(stats.hist, bits, method)
+    no_ocs_max = max(float(stats.abs_max.max()), 1e-30)
+    return base * eff_max / no_ocs_max

@@ -1,0 +1,397 @@
+"""Outlier Channel Splitting (paper §3) — the core contribution.
+
+A linear layer ``y = x @ W`` (``W: [Cin, Cout]``) is expanded by duplicating
+input channels that contain outliers:
+
+* **weight OCS** (Eq. 3): duplicate input channel ``m``; the two copies of row
+  ``W[m]`` are *halved* (naive) or QA-split; activations are duplicated
+  unchanged (``x_exp[c] = x[src[c]]``).
+* **activation OCS** (Eq. 4): duplicate input channel ``m``; the weight rows
+  are copied unchanged and the two activation copies are halved.
+
+Both are captured by an affine expansion spec applied to activations::
+
+    x_exp[..., c] = x[..., src[c]] * mult[c] + bias[c]
+
+so the expanded layer is ``y = x_exp @ W_exp`` with functional equivalence
+``x_exp @ W_exp == x @ W`` in float.
+
+**Quantization-aware (QA) splitting** (§3.3): with grid step ``Δ`` and
+``Q(v) = Δ·⌊v/Δ + 1/2⌋`` (round half up), splitting ``w`` into
+``((w − Δ/2)/2, (w + Δ/2)/2)`` satisfies ``Q(w) = Q(w₁) + Q(w₂)`` exactly
+(Hermite's identity, Eq. 7/8). The step Δ depends on the post-split dynamic
+range, so we run a short fixed-point iteration: simulate with naive halving to
+estimate Δ, re-split QA-style, re-derive Δ (converges in 1–2 rounds; the
+correction is O(Δ/4)).
+
+**Channel selection** (§3.4): split one channel at a time, always the channel
+holding the current global max |value|; ``ceil(r·C)`` splits for expansion
+ratio ``r``. Activations use calibration stats (99th-percentile exceedance
+counts, §5.3) or the per-batch Oracle (Table 4).
+
+Splitting itself is host-side numpy (PTQ is an offline pipeline stage); the
+expansion spec + expanded integer weights are consumed by jitted serving code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .clipping import find_clip
+from .histogram import ChannelStats, StreamingHistogram
+from .quantizer import QuantParams, qmax, quantize_tensor
+
+__all__ = [
+    "OCSSpec",
+    "n_splits_for_ratio",
+    "split_weights",
+    "split_activations_spec",
+    "expand_activations",
+    "collapse_expanded",
+    "oracle_expand",
+    "OCSQuantLinear",
+]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OCSSpec:
+    """Affine channel-expansion spec: x_exp[c] = x[src[c]] * mult[c] + bias[c]."""
+
+    src: jnp.ndarray  # int32 [C_exp]
+    mult: jnp.ndarray  # f32   [C_exp]
+    bias: jnp.ndarray  # f32   [C_exp]
+
+    @property
+    def n_expanded(self) -> int:
+        return self.src.shape[0]
+
+    @staticmethod
+    def identity(n_channels: int) -> "OCSSpec":
+        return OCSSpec(
+            src=jnp.arange(n_channels, dtype=jnp.int32),
+            mult=jnp.ones(n_channels, dtype=jnp.float32),
+            bias=jnp.zeros(n_channels, dtype=jnp.float32),
+        )
+
+
+def n_splits_for_ratio(n_channels: int, ratio: float) -> int:
+    """ceil(r * C) splits (paper §3.4); 0 for r == 0."""
+    if ratio <= 0:
+        return 0
+    return int(math.ceil(ratio * n_channels))
+
+
+def expanded_channels(
+    cin: int, ratio: float, *, pad_to: int = 1, groups: int = 1
+) -> int:
+    """Expanded (and padded) contraction dim after OCS — shape arithmetic only.
+
+    Must stay in lockstep with :func:`make_ocs_quant_linear`; the dry-run
+    builds ShapeDtypeStructs from this without running the host-side split.
+    """
+    n = n_splits_for_ratio(cin, ratio)
+    if groups <= 1:
+        c = cin + n
+        return c + ((-c) % pad_to)
+    per = int(math.ceil(n / groups))
+    gsz = cin // groups + per
+    gsz = gsz + ((-gsz) % pad_to)
+    return gsz * groups
+
+
+def expand_activations(x: jnp.ndarray, spec: OCSSpec) -> jnp.ndarray:
+    """Apply the expansion spec along the last axis of x."""
+    return jnp.take(x, spec.src, axis=-1) * spec.mult + spec.bias
+
+
+# ---------------------------------------------------------------------------
+# Weight OCS (host-side, offline)
+
+
+def _split_rows_once(w: np.ndarray, src: np.ndarray, idx: int, delta: float, qa: bool):
+    """Split row ``idx`` of expanded weight ``w`` into two rows."""
+    row = w[idx]
+    if qa and delta > 0:
+        # (w - Δ/2)/2 , (w + Δ/2)/2 — exact quantization preservation (Eq. 6/7).
+        r1 = (row - 0.5 * delta) / 2.0
+        r2 = (row + 0.5 * delta) / 2.0
+    else:
+        r1 = row / 2.0
+        r2 = row / 2.0
+    w = np.concatenate([w, r2[None]], axis=0)
+    w[idx] = r1
+    src = np.concatenate([src, src[idx : idx + 1]], axis=0)
+    return w, src
+
+
+def _run_splits(w: np.ndarray, n_splits: int, delta: float, qa: bool):
+    src = np.arange(w.shape[0], dtype=np.int32)
+    w = w.copy()
+    for _ in range(n_splits):
+        # Channel containing the current global max |value| (§3.4).
+        idx = int(np.argmax(np.abs(w).max(axis=1)))
+        w, src = _split_rows_once(w, src, idx, delta, qa)
+    return w, src
+
+
+def _run_splits_grouped(
+    w: np.ndarray, n_total: int, delta: float, qa: bool, groups: int
+):
+    """Split within ``groups`` contiguous channel groups (TP-shard locality).
+
+    Each group receives ``ceil(n_total / groups)`` splits of *its own* current
+    max channel, so duplicated channels stay on the same tensor-parallel shard
+    as their source and the expanded dim stays evenly shardable. ``groups=1``
+    reproduces the paper's global selection exactly.
+    """
+    if groups <= 1:
+        return _run_splits(w, n_total, delta, qa)
+    c = w.shape[0]
+    if c % groups:
+        raise ValueError(f"channels {c} not divisible by groups {groups}")
+    per = int(math.ceil(n_total / groups))
+    gsz = c // groups
+    outs, srcs = [], []
+    for g in range(groups):
+        wg, sg = _run_splits(w[g * gsz : (g + 1) * gsz], per, delta, qa)
+        outs.append(wg)
+        srcs.append(sg + g * gsz)
+    return np.concatenate(outs, axis=0), np.concatenate(srcs, axis=0)
+
+
+def split_weights(
+    w: np.ndarray,
+    ratio: float,
+    bits: int,
+    *,
+    qa: bool = True,
+    clip_method: Optional[str] = None,
+    fixed_point_iters: int = 2,
+    groups: int = 1,
+    n_splits: Optional[int] = None,
+) -> Tuple[np.ndarray, OCSSpec, float]:
+    """Weight OCS on ``w: [Cin, Cout]``.
+
+    Returns ``(w_expanded, spec, clip_threshold)`` where ``spec`` duplicates
+    activations unchanged (mult=1, bias=0) and ``clip_threshold`` is the
+    post-split threshold chosen by ``clip_method`` (max|w| when None) — feed it
+    to the quantizer as the grid range. ``n_splits`` overrides the per-layer
+    ``ceil(r*C)`` count (knapsack allocation, §3.4).
+    """
+    w = np.asarray(w, dtype=np.float32)
+    if w.ndim != 2:
+        raise ValueError(f"split_weights expects [Cin, Cout], got {w.shape}")
+    n = n_splits_for_ratio(w.shape[0], ratio) if n_splits is None else int(n_splits)
+    if n == 0:
+        spec = OCSSpec.identity(w.shape[0])
+        t = find_clip(w, bits, clip_method)
+        return w, spec, float(t)
+
+    # Pass 1: naive halving to estimate the post-split grid step.
+    w_est, src_est = _run_splits_grouped(w, n, 0.0, False, groups)
+    thresh = find_clip(w_est, bits, clip_method)
+    delta = thresh / qmax(bits)
+    if qa:
+        w_exp, src = w_est, src_est
+        for _ in range(max(1, fixed_point_iters)):
+            w_exp, src = _run_splits_grouped(w, n, delta, True, groups)
+            new_thresh = find_clip(w_exp, bits, clip_method)
+            new_delta = new_thresh / qmax(bits)
+            if abs(new_delta - delta) <= 1e-7 * max(delta, 1e-12):
+                thresh, delta = new_thresh, new_delta
+                break
+            thresh, delta = new_thresh, new_delta
+    else:
+        w_exp, src = w_est, src_est
+
+    spec = OCSSpec(
+        src=jnp.asarray(src, dtype=jnp.int32),
+        mult=jnp.ones(len(src), dtype=jnp.float32),
+        bias=jnp.zeros(len(src), dtype=jnp.float32),
+    )
+    return w_exp, spec, float(thresh)
+
+
+# ---------------------------------------------------------------------------
+# Activation OCS (calibration-driven) and Oracle OCS
+
+
+def split_activations_spec(
+    stats: ChannelStats,
+    ratio: float,
+    *,
+    act_delta: float = 0.0,
+    qa: bool = False,
+) -> OCSSpec:
+    """Build an expansion spec that splits the top-outlier activation channels.
+
+    Each selected channel (by 99th-percentile exceedance count, §5.3) is split
+    once: both copies carry mult=1/2 (Eq. 4). With ``qa`` and a known
+    activation grid step, biases ∓Δ/4 make the split quantization-preserving.
+    """
+    c = stats.n_channels
+    n = n_splits_for_ratio(c, ratio)
+    order = stats.split_order()[:n]
+    src = list(range(c))
+    mult = [1.0] * c
+    bias = [0.0] * c
+    for ch in order:
+        ch = int(ch)
+        mult[ch] = 0.5
+        bias[ch] = -0.25 * act_delta if qa else 0.0
+        src.append(ch)
+        mult.append(0.5)
+        bias.append(+0.25 * act_delta if qa else 0.0)
+    return OCSSpec(
+        src=jnp.asarray(src, dtype=jnp.int32),
+        mult=jnp.asarray(mult, dtype=jnp.float32),
+        bias=jnp.asarray(bias, dtype=jnp.float32),
+    )
+
+
+def duplicate_weight_rows(w: jnp.ndarray, spec: OCSSpec) -> jnp.ndarray:
+    """Weight expansion for *activation* OCS: rows are copied unchanged."""
+    return jnp.take(w, spec.src, axis=0)
+
+
+def oracle_expand(
+    x: jnp.ndarray, n_split: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle OCS (Table 4): per-batch dynamic channel selection.
+
+    Picks the ``n_split`` channels with the largest |value| *in this batch*,
+    returns ``(x_expanded, src)`` with the selected channels halved (both
+    copies). ``src`` must be used to gather weight rows. Fully traceable
+    (static n_split, dynamic indices).
+    """
+    c = x.shape[-1]
+    ch_max = jnp.max(jnp.abs(x.reshape(-1, c)), axis=0)
+    _, top = jax.lax.top_k(ch_max, n_split)
+    halve = jnp.zeros((c,), jnp.float32).at[top].set(1.0)
+    mult = jnp.where(halve > 0, 0.5, 1.0)
+    x_main = x * mult
+    x_dup = jnp.take(x, top, axis=-1) * 0.5
+    src = jnp.concatenate([jnp.arange(c, dtype=jnp.int32), top.astype(jnp.int32)])
+    return jnp.concatenate([x_main, x_dup], axis=-1), src
+
+
+# ---------------------------------------------------------------------------
+# Collapse (for fast equivalence checks / fake-quant evaluation)
+
+
+def collapse_expanded(
+    w_exp: np.ndarray, spec: OCSSpec, n_orig: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold an expanded layer back to original shape.
+
+    Returns ``(w_eff [n_orig, Cout], y_bias [Cout])`` such that
+    ``x_exp @ w_exp == x @ w_eff + y_bias`` for every x.
+    """
+    w_exp = np.asarray(w_exp, dtype=np.float64)
+    src = np.asarray(spec.src)
+    mult = np.asarray(spec.mult, dtype=np.float64)
+    bias = np.asarray(spec.bias, dtype=np.float64)
+    w_eff = np.zeros((n_orig, w_exp.shape[1]), dtype=np.float64)
+    np.add.at(w_eff, src, mult[:, None] * w_exp)
+    y_bias = bias @ w_exp
+    return w_eff.astype(np.float32), y_bias.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused state for a quantized linear layer
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OCSQuantLinear:
+    """Serving-ready quantized linear: expanded int weights + expansion spec.
+
+    ``y = (expand_activations(x, spec) [quantized to a_bits at serve time])
+          @ dequant(weight)``
+    """
+
+    weight: QuantParams  # int values [C_exp(+pad), Cout]
+    spec: OCSSpec
+    n_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+    a_bits: Optional[int] = dataclasses.field(metadata=dict(static=True), default=None)
+    a_scale: Optional[jnp.ndarray] = None  # activation scale from calibration
+
+    def dequant_weight(self, dtype=jnp.float32) -> jnp.ndarray:
+        return self.weight.dequant(dtype)
+
+
+def _pad_expanded(w_exp: np.ndarray, spec: OCSSpec, pad: int):
+    if pad == 0:
+        return w_exp, spec
+    w_exp = np.concatenate(
+        [w_exp, np.zeros((pad, w_exp.shape[1]), w_exp.dtype)], axis=0
+    )
+    spec = OCSSpec(
+        src=jnp.concatenate([spec.src, jnp.zeros(pad, jnp.int32)]),
+        mult=jnp.concatenate([spec.mult, jnp.zeros(pad, jnp.float32)]),
+        bias=jnp.concatenate([spec.bias, jnp.zeros(pad, jnp.float32)]),
+    )
+    return w_exp, spec
+
+
+def make_ocs_quant_linear(
+    w: np.ndarray,
+    ratio: float,
+    bits: int,
+    *,
+    qa: bool = True,
+    clip_method: Optional[str] = None,
+    per_channel: bool = False,
+    pad_to: int = 1,
+    groups: int = 1,
+) -> OCSQuantLinear:
+    """Full offline weight pipeline: OCS split -> (clip) -> integer quantize.
+
+    ``pad_to`` zero-pads the expanded contraction dim to a multiple (MXU tile
+    alignment); zero rows quantize exactly to 0 and the spec maps them to
+    channel 0 with mult 0. With ``groups > 1`` (tensor-parallel shards) the
+    split is shard-local and each group is padded independently so the
+    expanded dim remains evenly shardable.
+    """
+    w_exp, spec, thresh = split_weights(
+        w, ratio, bits, qa=qa, clip_method=clip_method, groups=groups
+    )
+    if groups > 1:
+        gsz = w_exp.shape[0] // groups
+        pad = (-gsz) % pad_to
+        if pad:
+            parts_w, parts_s = [], []
+            for g in range(groups):
+                wg, sg = _pad_expanded(
+                    w_exp[g * gsz : (g + 1) * gsz],
+                    OCSSpec(
+                        src=spec.src[g * gsz : (g + 1) * gsz],
+                        mult=spec.mult[g * gsz : (g + 1) * gsz],
+                        bias=spec.bias[g * gsz : (g + 1) * gsz],
+                    ),
+                    pad,
+                )
+                parts_w.append(wg)
+                parts_s.append(sg)
+            w_exp = np.concatenate(parts_w, axis=0)
+            spec = OCSSpec(
+                src=jnp.concatenate([s.src for s in parts_s]),
+                mult=jnp.concatenate([s.mult for s in parts_s]),
+                bias=jnp.concatenate([s.bias for s in parts_s]),
+            )
+    else:
+        w_exp, spec = _pad_expanded(w_exp, spec, (-w_exp.shape[0]) % pad_to)
+    clip = None if per_channel else thresh
+    qp = quantize_tensor(
+        jnp.asarray(w_exp),
+        bits,
+        channel_axis=1 if per_channel else None,
+        clip=clip,
+    )
+    return OCSQuantLinear(weight=qp, spec=spec, n_orig=int(w.shape[0]))

@@ -1,0 +1,67 @@
+"""Quantization recipes — the user-facing configuration of the PTQ pipeline.
+
+A recipe captures everything Table 2/3 of the paper varies: bitwidths, the
+clip method per tensor class, the OCS expansion ratio, QA vs naive splitting,
+and which layers to skip (the paper never quantizes the first layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+__all__ = ["QuantRecipe", "PAPER_BASELINE", "W8A8_SERVING"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    # Weight quantization.
+    w_bits: int = 8
+    w_clip: Optional[str] = None  # None/'none' | 'mse' | 'aciq' | 'kl'
+    ocs_ratio: float = 0.0  # weight OCS expand ratio r (ceil(r*C) splits)
+    qa_split: bool = True  # quantization-aware splitting (§3.3)
+    per_channel: bool = False  # beyond-paper: per-output-channel scales
+    # Activation quantization (None = keep activations in float).
+    a_bits: Optional[int] = None
+    a_clip: Optional[str] = "mse"
+    ocs_ratio_act: float = 0.0  # activation OCS ratio (§5.3)
+    # Layer selection: substrings; a param path containing any is skipped.
+    # embed/meta_tokens: the paper never quantizes the first layer (§5);
+    # router: tiny and routing is brittle under quantization; conv: depthwise
+    # conv kernels have no shared input-channel rows to split (DESIGN §5);
+    # a_log / "/d" (+ dt_bias via "bias"): per-head SSM scalars whose stacked
+    # [L, heads] layout merely looks like a matmul weight.
+    skip_patterns: Tuple[str, ...] = (
+        "embed", "meta", "router", "norm", "scale", "bias", "conv",
+        "a_log", "/d",
+    )
+    # MXU alignment padding of the expanded contraction dim (serving path).
+    pad_to: int = 1
+    # Split allocation across layers: 'uniform' = ceil(r*C) per layer (the
+    # paper's default) | 'knapsack' = global budget, greedy by range
+    # reduction per byte (the paper's §3.4 variant; see core/allocate.py).
+    alloc: str = "uniform"
+
+    def wants_weight_quant(self) -> bool:
+        return self.w_bits < 32
+
+    def wants_act_quant(self) -> bool:
+        return self.a_bits is not None
+
+    def should_skip(self, path: str) -> bool:
+        p = path.lower()
+        return any(s in p for s in self.skip_patterns)
+
+
+# The paper's per-tensor, no-retraining baseline configuration.
+PAPER_BASELINE = QuantRecipe(w_bits=8, w_clip=None, ocs_ratio=0.0, a_bits=8)
+
+# Production serving default: W8A8, OCS r=0.02 + MSE clip, per-channel scales.
+W8A8_SERVING = QuantRecipe(
+    w_bits=8,
+    w_clip="mse",
+    ocs_ratio=0.02,
+    per_channel=True,
+    a_bits=8,
+    a_clip="mse",
+    pad_to=128,
+)

@@ -1,0 +1,92 @@
+"""Activation tapping for calibration (TensorRT-style profiling, paper §3.4/§5).
+
+Models call ``tap.tag(site_name, x)`` at every quantizable activation site
+(the input of each linear layer). Outside a calibration context this is a
+no-op (and always a no-op under jit tracing); inside ``collecting(...)`` the
+values are accumulated into per-site :class:`ChannelStats` + histograms.
+
+Calibration runs eagerly on a small number of batches (the paper uses 512
+training images; we default to a handful of synthetic batches), so host-side
+numpy accumulation is appropriate.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from .histogram import ChannelStats
+
+__all__ = ["Collector", "collecting", "tag", "active_collector"]
+
+_ACTIVE: Optional["Collector"] = None
+
+
+class Collector:
+    """Accumulates per-site channel statistics across calibration batches.
+
+    Site names repeat across layers ("mlp_up" in every block), so sites are
+    keyed ``name#ordinal`` with the ordinal counting occurrences *within one
+    forward pass* (``begin_batch`` resets it). Running calibration and
+    evaluation with the same unrolled layer loop makes the ordinals line up
+    with :mod:`repro.core.actquant`'s trace-time sites — per-layer grids, as
+    the paper profiles them.
+    """
+
+    def __init__(self, percentile: float = 0.99):
+        self.percentile = percentile
+        self.sites: Dict[str, ChannelStats] = {}
+        self._counts: Dict[str, int] = {}
+
+    def begin_batch(self) -> None:
+        self._counts = {}
+
+    def add(self, name: str, x: np.ndarray) -> None:
+        k = self._counts.get(name, 0)
+        self._counts[name] = k + 1
+        key = f"{name}#{k}"
+        c = x.shape[-1]
+        st = self.sites.get(key)
+        if st is None:
+            st = self.sites[key] = ChannelStats(
+                n_channels=c, percentile=self.percentile
+            )
+        if st.n_channels != c:
+            raise ValueError(
+                f"site {key!r}: channel count changed {st.n_channels} -> {c}"
+            )
+        st.update(x)
+
+    def __getitem__(self, name: str) -> ChannelStats:
+        return self.sites[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.sites
+
+    def __len__(self) -> int:
+        return len(self.sites)
+
+
+@contextlib.contextmanager
+def collecting(collector: Collector):
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, collector
+    try:
+        yield collector
+    finally:
+        _ACTIVE = prev
+
+
+def active_collector() -> Optional[Collector]:
+    return _ACTIVE
+
+
+def tag(name: str, x) -> None:
+    """Record activation values for ``name`` if a collector is active."""
+    if _ACTIVE is None:
+        return
+    if isinstance(x, jax.core.Tracer):
+        return  # under jit: tagging is a structural no-op
+    _ACTIVE.add(name, np.asarray(x))

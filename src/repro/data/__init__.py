@@ -1,0 +1,6 @@
+from .pipeline import (  # noqa: F401
+    CalibrationSampler,
+    DataState,
+    SyntheticLM,
+    make_batch_iterator,
+)

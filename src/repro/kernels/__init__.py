@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the quantized-serving hot spots.
+
+* ``quant_matmul``   — blocked W8A8 / weight-only-int8 matmul, f32 epilogue.
+* ``ocs_matmul``     — the paper-specific kernel: matmul with *fused* OCS
+                       channel expansion (no HBM materialization of the
+                       expanded activations).
+* ``dynamic_quant``  — fused per-row activation quantization (absmax+round).
+
+Each kernel file holds the pl.pallas_call + BlockSpecs; ``ref.py`` holds the
+pure-jnp oracles and ``ops.py`` the jitted backend-dispatch wrappers.
+"""
+from .ops import dynamic_quant, ocs_quant_matmul, quant_matmul  # noqa: F401

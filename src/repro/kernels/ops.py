@@ -1,0 +1,82 @@
+"""Jitted dispatch wrappers over the Pallas kernels.
+
+On TPU the Pallas kernels run natively (compiled by Mosaic); on any other
+backend the wrappers either run the kernels in interpret mode (``force=
+"interpret"``, used by the correctness tests) or fall back to the pure-jnp
+oracles in :mod:`repro.kernels.ref`, which XLA compiles efficiently on CPU.
+Production code calls these wrappers and never touches the kernels directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dynamic_quant import dynamic_quant as _dynamic_quant_pallas
+from .ocs_matmul import ocs_quant_matmul as _ocs_matmul_pallas
+from .quant_matmul import quant_matmul as _quant_matmul_pallas
+
+__all__ = ["quant_matmul", "dynamic_quant", "ocs_quant_matmul", "backend_mode"]
+
+
+def backend_mode(force: Optional[str] = None) -> str:
+    """'pallas' on TPU, 'ref' elsewhere; ``force`` overrides ('interpret')."""
+    if force in ("pallas", "ref", "interpret"):
+        return force
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("force", "out_dtype"))
+def quant_matmul(
+    x, w8, w_scale, x_scale=None, *, force: Optional[str] = None, out_dtype=None
+):
+    """y = dequant(x?) @ dequant(w8). See quant_matmul.py for modes."""
+    mode = backend_mode(force)
+    if mode == "ref":
+        xs = jnp.ones((), jnp.float32) if x_scale is None else x_scale
+        return ref.quant_matmul_ref(x, w8, xs, w_scale, out_dtype or jnp.float32) \
+            if x.dtype == jnp.int8 else _weight_only_ref(x, w8, w_scale, out_dtype)
+    return _quant_matmul_pallas(
+        x, w8, w_scale, x_scale, out_dtype=out_dtype,
+        interpret=(mode == "interpret"),
+    )
+
+
+def _weight_only_ref(x, w8, w_scale, out_dtype=None):
+    acc = jax.lax.dot_general(
+        x.astype(jnp.float32),
+        w8.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc = acc * jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    return acc.astype(out_dtype or x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "force"))
+def dynamic_quant(x, *, bits: int = 8, force: Optional[str] = None):
+    """Per-row dynamic quantization: x [M, K] -> (q int8, scale [M])."""
+    mode = backend_mode(force)
+    if mode == "ref":
+        return ref.dynamic_quant_ref(x, bits)
+    return _dynamic_quant_pallas(x, bits=bits, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("force", "out_dtype"))
+def ocs_quant_matmul(
+    x, w8, w_scale, src_tail, x_scale=None, tail_mult=None,
+    *, force: Optional[str] = None, out_dtype=None,
+):
+    """Fused OCS-expansion matmul (see ocs_matmul.py)."""
+    mode = backend_mode(force)
+    if mode == "ref":
+        return ref.ocs_quant_matmul_ref(
+            x, w8, w_scale, src_tail, x_scale, tail_mult, out_dtype
+        )
+    return _ocs_matmul_pallas(
+        x, w8, w_scale, src_tail, x_scale, tail_mult=tail_mult,
+        out_dtype=out_dtype, interpret=(mode == "interpret"),
+    )

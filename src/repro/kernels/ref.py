@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quant_matmul_ref", "dynamic_quant_ref", "ocs_gather_ref"]
+
+
+def quant_matmul_ref(
+    x8: jnp.ndarray,
+    w8: jnp.ndarray,
+    x_scale: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """W8A8 matmul oracle: int8 x int8 -> int32 -> f32 epilogue.
+
+    x8: [M, K] int8; w8: [K, N] int8; x_scale: [M] or scalar; w_scale: [N] or
+    scalar. y = (x8 @ w8) * x_scale[:, None] * w_scale[None, :].
+    """
+    acc = jax.lax.dot_general(
+        x8, w8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    xs = jnp.asarray(x_scale, jnp.float32)
+    ws = jnp.asarray(w_scale, jnp.float32)
+    if xs.ndim == 1:
+        xs = xs[:, None]
+    if ws.ndim == 1:
+        ws = ws[None, :]
+    return (acc.astype(jnp.float32) * xs * ws).astype(out_dtype)
+
+
+def dynamic_quant_ref(x: jnp.ndarray, bits: int = 8):
+    """Per-row dynamic quantization oracle.
+
+    x: [M, K] float -> (q [M, K] int8, scale [M] f32) with
+    scale = max|row| / qmax and q = clip(floor(x/scale + 0.5)).
+    """
+    qmax = (1 << (bits - 1)) - 1
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1)
+    scale = jnp.maximum(amax, 1e-30) / qmax
+    q = jnp.clip(jnp.floor(x.astype(jnp.float32) / scale[:, None] + 0.5), -qmax, qmax)
+    return q.astype(jnp.int8), scale
+
+
+def ocs_gather_ref(
+    x: jnp.ndarray, src: jnp.ndarray, mult: jnp.ndarray, bias: jnp.ndarray
+) -> jnp.ndarray:
+    """OCS channel-expansion oracle: y[m, c] = x[m, src[c]] * mult[c] + bias[c]."""
+    return jnp.take(x, src, axis=-1) * mult + bias
+
+
+def ocs_quant_matmul_ref(
+    x: jnp.ndarray,
+    w8: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    src_tail: jnp.ndarray,
+    x_scale=None,
+    tail_mult=None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """OCS-expanded matmul oracle: materialize x_exp = [x | x[:, src]] then matmul.
+
+    Mirrors :func:`repro.kernels.ocs_matmul.ocs_quant_matmul` (same scale
+    semantics, same accumulation dtypes) but pays the HBM materialization the
+    kernel avoids.
+    """
+    int_path = x.dtype == jnp.int8
+    if out_dtype is None:
+        out_dtype = jnp.float32 if int_path else x.dtype
+    tail = jnp.take(x, src_tail, axis=1)
+    if tail_mult is not None:
+        tail = tail * tail_mult
+    x_exp = jnp.concatenate([x, tail], axis=1)
+    acc_t = jnp.int32 if int_path else jnp.float32
+    if not int_path:
+        x_exp = x_exp.astype(jnp.float32)
+        w = w8.astype(jnp.float32)
+    else:
+        w = w8
+    acc = jax.lax.dot_general(
+        x_exp, w, (((1,), (0,)), ((), ())), preferred_element_type=acc_t
+    ).astype(jnp.float32)
+    if x_scale is not None:
+        acc = acc * jnp.asarray(x_scale, jnp.float32).reshape(-1, 1)
+    acc = acc * jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    return acc.astype(out_dtype)

@@ -1,0 +1,364 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` visits every while-loop body exactly ONCE, so a
+step with scanned layers (x30) and gradient-accumulation (x8) under-reports
+FLOPs/bytes/collective traffic by ~240x. This module re-derives the three
+roofline terms from ``compiled.as_text()`` with loop bodies scaled by their
+trip counts:
+
+* builds the computation call graph (fusions, while bodies/conditions,
+  calls, conditionals);
+* extracts while trip counts from the canonical jax pattern
+  ``compare(iter, constant(N)), direction=LT`` in the loop condition;
+* per-op costs: dots = 2 * |result| * contraction size; whitelisted
+  elementwise ops = |result|; bytes = operands + results of *top-level* ops
+  (internal fusion ops don't touch HBM, mirroring HloCostAnalysis);
+* collectives (all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute) accumulate result bytes per kind — correctly scaled
+  when they live inside loop bodies.
+
+The result is a consistent methodology for every (arch x shape) cell whether
+its layers are scanned or unrolled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple  # noqa: F401 (Tuple in memo key)
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+# Elementwise/transcendental ops counted as 1 flop per output element.
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "power", "tanh", "negate", "select", "and", "or", "xor", "not",
+    "compare", "convert", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "cosine", "sine", "abs", "sign", "clamp",
+    "remainder", "atan2", "logistic", "cbrt", "erf", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "popcnt", "clz",
+}
+
+_REDUCE_OPS = {"reduce", "reduce-window"}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ARR_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\s*\{\s*$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?"
+)
+
+
+def _arrays_in(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _ARR_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _arrays_in(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _n_elements(type_str: str) -> int:
+    total = 0
+    for _, dims in _arrays_in(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    result_type: str
+    operands_str: str
+    attrs: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: List[_Op]
+    types: Optional[Dict[str, str]] = None  # op name -> result type
+
+    def type_map(self) -> Dict[str, str]:
+        if self.types is None:
+            self.types = {op.name: op.result_type for op in self.ops}
+        return self.types
+
+
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_portion(op: _Op) -> str:
+    """Text of the operand list (rest of line up to the closing paren)."""
+    depth = 1
+    for i, ch in enumerate(op.operands_str):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return op.operands_str[:i]
+    return op.operands_str
+
+
+def _operand_types(comp: _Computation, op: _Op) -> List[str]:
+    """Result types of the op's operands (handles untyped %name operands)."""
+    portion = _operand_portion(op)
+    typed = _arrays_in(portion)
+    if typed:
+        return [portion]  # types inline: caller parses the whole portion
+    tmap = comp.type_map()
+    return [tmap[n] for n in _NAME_RE.findall(portion) if n in tmap]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_bytes: Dict[str, float]
+    collective_counts: Dict[str, float]
+    bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    def top_bytes(self, n: int = 12):
+        return sorted(self.bytes_by_kind.items(), key=lambda kv: -kv[1])[:n]
+
+
+def _parse_computations(hlo: str) -> Tuple[Dict[str, _Computation], str]:
+    comps: Dict[str, _Computation] = {}
+    entry = ""
+    cur: Optional[_Computation] = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line)
+        if m:
+            cur = _Computation(m.group(1), [])
+            comps[cur.name] = cur
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, rtype, kind, rest = om.groups()
+            # split operands from trailing attributes at the closing paren —
+            # good enough: we only need attr text for calls/dims.
+            cur.ops.append(_Op(name, kind, rtype, rest, rest))
+    return comps, entry
+
+
+def _dot_flops(comp: _Computation, op: _Op) -> float:
+    out_elems = _n_elements(op.result_type)
+    otypes = _operand_types(comp, op)
+    ops_arrays = _arrays_in(" ".join(otypes))
+    if not ops_arrays:
+        return 0.0
+    lhs_dims = ops_arrays[0][1]
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contraction = 1
+    if m and m.group(1):
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contraction *= lhs_dims[idx]
+    return 2.0 * out_elems * contraction
+
+
+def _operand_bytes(comp: _Computation, op: _Op) -> int:
+    return sum(_type_bytes(t) for t in _operand_types(comp, op))
+
+
+def _while_trip_count(cond: _Computation) -> int:
+    const = None
+    direction = None
+    for op in cond.ops:
+        if op.kind == "constant":
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.operands_str)
+            if m:
+                const = int(m.group(1))
+        if op.kind == "compare":
+            dm = re.search(r"direction=(\w+)", op.attrs)
+            if dm:
+                direction = dm.group(1)
+    if const is not None and direction in ("LT", "NE"):
+        return max(const, 1)
+    if const is not None and direction == "LE":
+        return max(const + 1, 1)
+    return 1  # unknown dynamic loop: count once (conservative)
+
+
+def _called_names(op: _Op) -> List[str]:
+    names = []
+    for m in _CALL_ATTR_RE.finditer(op.attrs):
+        for n in m.group(1).split(","):
+            names.append(n.strip().lstrip("%"))
+    return names
+
+
+def _leading_dim(type_str: str) -> Optional[int]:
+    arrs = _arrays_in(type_str)
+    if len(arrs) == 1 and arrs[0][1]:
+        return arrs[0][1][0]
+    return None
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = _parse_computations(hlo)
+    memo: Dict[Tuple[str, int], HloCost] = {}
+
+    def stacked_scale(comp: _Computation, op: _Op, trips: int) -> float:
+        """Byte scale for scan-stacked accumulator traffic.
+
+        A loop body updating/reading a ``[T, ...]`` buffer (scan xs/ys or
+        checkpoint residuals) touches only 1/T of it per trip; XLA's DUS/DS
+        are in-place. Counting the full buffer every trip overstates bytes
+        by T (measured 6-33x on the chunk-scanned hymba/mamba cells). The
+        heuristic: inside a known-trip-count body, any op whose result (or
+        largest operand) has leading dim == T is counted at 1/T.
+        """
+        if trips <= 1:
+            return 1.0
+        if _leading_dim(op.result_type) == trips:
+            return 1.0 / trips
+        for t in _operand_types(comp, op):
+            for _, dims in _arrays_in(t):
+                if dims and dims[0] == trips:
+                    return 1.0 / trips
+        return 1.0
+
+    def cost_of(cname: str, depth: int = 0, trips_ctx: int = 1) -> HloCost:
+        key = (cname, trips_ctx)
+        if key in memo:
+            return memo[key]
+        comp = comps.get(cname)
+        if comp is None or depth > 64:
+            return HloCost(0.0, 0.0, {}, {})
+        flops = 0.0
+        bytes_ = 0.0
+        coll: Dict[str, float] = {}
+        coll_n: Dict[str, float] = {}
+        by_kind: Dict[str, float] = {}
+
+        def add_bytes(kind: str, b: float):
+            nonlocal bytes_
+            bytes_ += b
+            by_kind[kind] = by_kind.get(kind, 0.0) + b
+
+        for op in comp.ops:
+            kind = op.kind
+            scale = stacked_scale(comp, op, trips_ctx)
+            base = kind[:-6] if kind.endswith("-start") else kind
+            if base in _COLLECTIVES:
+                if kind.endswith("-done"):
+                    continue  # counted at -start
+                b = _type_bytes(op.result_type)
+                coll[base] = coll.get(base, 0.0) + b
+                coll_n[base] = coll_n.get(base, 0.0) + 1
+                add_bytes(base, b + _operand_bytes(comp, op))
+                continue
+            if kind == "while":
+                body_name = cond_name = None
+                m_body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                m_cond = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                if m_body:
+                    body_name = m_body.group(1)
+                if m_cond:
+                    cond_name = m_cond.group(1)
+                # XLA records the statically-known trip count directly.
+                m_tc = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', op.attrs)
+                if m_tc:
+                    trips = max(int(m_tc.group(1)), 1)
+                elif cond_name in comps:
+                    trips = _while_trip_count(comps[cond_name])
+                else:
+                    trips = 1
+                if body_name in comps:
+                    sub = cost_of(body_name, depth + 1, trips)
+                    flops += sub.flops * trips
+                    bytes_ += sub.bytes * trips
+                    for k, v in sub.bytes_by_kind.items():
+                        by_kind[k] = by_kind.get(k, 0.0) + v * trips
+                    for k, v in sub.collective_bytes.items():
+                        coll[k] = coll.get(k, 0.0) + v * trips
+                    for k, v in sub.collective_counts.items():
+                        coll_n[k] = coll_n.get(k, 0.0) + v * trips
+                continue
+            if kind in _REDUCE_OPS:
+                # A reduction performs ~1 op per *input* element.
+                flops += sum(_n_elements(t) for t in _operand_types(comp, op))
+                add_bytes(kind, scale * (_type_bytes(op.result_type) + _operand_bytes(comp, op)))
+                continue
+            if kind in ("fusion", "call", "conditional", "custom-call", "map", "sort", "scatter"):
+                subs = _called_names(op)
+                mult = 1.0
+                for sname in subs:
+                    if sname in comps:
+                        sub = cost_of(sname, depth + 1, trips_ctx)
+                        # For fusions the internal ops are register-resident:
+                        # count their flops but NOT their bytes.
+                        flops += sub.flops * mult
+                        for k, v in sub.collective_bytes.items():
+                            coll[k] = coll.get(k, 0.0) + v
+                        for k, v in sub.collective_counts.items():
+                            coll_n[k] = coll_n.get(k, 0.0) + v
+                add_bytes(kind, scale * (_type_bytes(op.result_type) + _operand_bytes(comp, op)))
+                continue
+            if kind == "dot":
+                flops += _dot_flops(comp, op)
+                add_bytes(kind, scale * (_type_bytes(op.result_type) + _operand_bytes(comp, op)))
+                continue
+            if kind in _ELEMENTWISE:
+                flops += _n_elements(op.result_type)
+                add_bytes("elementwise", scale * (_type_bytes(op.result_type) + _operand_bytes(comp, op)))
+                continue
+            if kind in (
+                "copy", "transpose", "reshape", "broadcast", "concatenate",
+                "slice", "dynamic-slice", "dynamic-update-slice", "gather",
+                "pad", "reverse", "iota", "bitcast", "bitcast-convert",
+                "get-tuple-element", "tuple", "parameter", "constant",
+                "reduce-precision", "rng", "rng-bit-generator", "copy-start",
+                "copy-done", "optimization-barrier", "after-all",
+            ):
+                if kind in ("get-tuple-element", "tuple", "parameter", "constant", "bitcast", "reshape", "after-all", "optimization-barrier"):
+                    continue  # no data movement
+                add_bytes(kind, scale * (_type_bytes(op.result_type) + _operand_bytes(comp, op)))
+                continue
+            # Unknown op: count bytes conservatively.
+            add_bytes(kind, scale * _type_bytes(op.result_type))
+        res = HloCost(flops, bytes_, coll, coll_n, by_kind)
+        memo[key] = res
+        return res
+
+    return cost_of(entry)

@@ -1,0 +1,24 @@
+"""Production mesh factory.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device,
+while the dry-run sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before its first jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_debug_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 chips per pod (TPU v5e); 2 pods for the multi-pod dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for subprocess sharding tests (8 host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

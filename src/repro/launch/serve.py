@@ -1,0 +1,123 @@
+"""Serving launcher: checkpoint -> OCS PTQ -> batched quantized serving.
+
+The deployment half of the paper's scenario. Loads a float checkpoint (or a
+freshly initialized model), runs the offline PTQ pipeline (weight OCS +
+clipping + integer quantization — zero training data needed, §3.4), then
+serves batched requests through :class:`repro.serving.ServingEngine` with
+the int8 parameter tree.
+
+``--compare-float`` serves the same requests with the float weights and
+reports the token-level agreement — the serving-side analogue of the
+paper's accuracy tables.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, list_archs, smoke_config
+from repro.core.apply import quantize_params
+from repro.core.recipe import QuantRecipe
+from repro.models import transformer as T
+from repro.optim import adamw_init
+from repro.serving import Request, ServingEngine
+
+
+def build_parser():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="deepseek-7b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--kv-bits", type=int, default=0,
+                    help="8 = int8 KV cache (see EXPERIMENTS.md §Perf C1)")
+    ap.add_argument("--ocs-ratio", type=float, default=0.02)
+    ap.add_argument("--clip", default="mse")
+    ap.add_argument("--float-serve", action="store_true",
+                    help="skip PTQ, serve float weights")
+    ap.add_argument("--compare-float", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def _make_requests(n, vocab, rng, max_new):
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(4, 12))
+        prompt = rng.integers(0, vocab, plen).tolist()
+        reqs.append(Request(uid=i, prompt=prompt, max_new_tokens=max_new))
+    return reqs
+
+
+def serve_once(cfg, params, reqs, max_batch, max_len):
+    eng = ServingEngine(cfg, params, max_batch=max_batch, max_len=max_len)
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run()
+    wall = time.time() - t0
+    s = eng.stats()
+    s["wall_s"] = round(wall, 2)
+    s["tokens_per_s"] = round(s["decoded_tokens"] / max(wall, 1e-9), 1)
+    return done, s
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.kv_bits:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, kv_bits=args.kv_bits)
+    rng = np.random.default_rng(args.seed)
+
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.ckpt_dir:
+        ckpt = CheckpointManager(args.ckpt_dir, async_write=False)
+        (params, _opt), meta = ckpt.restore((params, adamw_init(params)))
+        params = jax.tree.map(jnp.asarray, params)
+        print(f"[serve] restored {meta.get('arch')} step {ckpt.latest_step()}")
+
+    if not args.float_serve:
+        recipe = QuantRecipe(
+            w_bits=args.bits, w_clip=args.clip, ocs_ratio=args.ocs_ratio,
+            per_channel=True, pad_to=1,
+        )
+        t0 = time.time()
+        qparams = quantize_params(params, recipe)
+        print(f"[ptq] quantized in {time.time() - t0:.1f}s "
+              f"(w{args.bits}, ocs r={args.ocs_ratio}, clip={args.clip})")
+    else:
+        qparams = params
+
+    reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new)
+    done, stats = serve_once(cfg, qparams, reqs, args.max_batch, args.max_len)
+    print(f"[serve] {stats}")
+
+    if args.compare_float and not args.float_serve:
+        freqs = _make_requests(args.n_requests, cfg.vocab,
+                               np.random.default_rng(args.seed), args.max_new)
+        fdone, fstats = serve_once(cfg, params, freqs, args.max_batch, args.max_len)
+        by_uid = {r.uid: r.output for r in fdone}
+        agree = total = 0
+        for r in done:
+            ref = by_uid.get(r.uid, [])
+            for a, b in zip(r.output, ref):
+                agree += int(a == b)
+                total += 1
+        print(f"[serve] int8-vs-float token agreement: {agree}/{total} "
+              f"({100.0 * agree / max(total, 1):.1f}%)")
+    return stats
+
+
+if __name__ == "__main__":
+    main()

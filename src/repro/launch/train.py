@@ -1,0 +1,177 @@
+"""Training launcher: data -> train_step -> checkpoint/restart -> PTQ.
+
+The end-to-end driver for the paper's pipeline: train a float LM, then
+post-training-quantize it with OCS (no retraining) and report the quality
+delta. Fault tolerance is first-class:
+
+* auto-restore from the newest complete checkpoint in ``--ckpt-dir``
+  (``--simulate-failure N`` kills the process at step N to exercise it;
+  rerunning the same command resumes exactly, including the data stream);
+* async atomic checkpoints every ``--ckpt-every`` steps, keep-3;
+* heartbeat file after every step (external watchdog contract);
+* straggler flagging from rolling step times.
+
+Mesh: ``--mesh debug`` (1-8 CPU devices) for in-container runs; on a pod the
+same script runs under ``--mesh production`` (16x16) with the identical code
+path — shardings come from the logical rules either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config, list_archs, smoke_config
+from repro.core.apply import fake_quantize_params
+from repro.core.recipe import QuantRecipe
+from repro.data import DataState, SyntheticLM
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.steps import TrainHyper, make_train_step
+from repro.models import transformer as T
+from repro.optim import adamw_init
+from repro.runtime import HeartbeatMonitor, StepTimer
+from repro.sharding.specs import SINGLE_POD_RULES, param_spec_tree, use_rules
+
+
+def build_parser():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="deepseek-7b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default="single", choices=["single", "debug", "production"])
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--simulate-failure", type=int, default=0,
+                    help="exit(1) after this step (fault-tolerance drill)")
+    ap.add_argument("--ptq-after", action="store_true",
+                    help="run OCS PTQ + eval after training (paper pipeline)")
+    ap.add_argument("--ptq-bits", type=int, default=5)
+    ap.add_argument("--ptq-ratio", type=float, default=0.02)
+    return ap
+
+
+def evaluate(params, cfg, ds, n_batches: int = 4, start: int = 10_000):
+    """Mean eval loss on held-out steps (beyond any training step index)."""
+    losses = []
+    for i in range(n_batches):
+        batch = ds.batch_at(start + i)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        losses.append(float(T.loss_fn(params, batch, cfg)))
+    return float(np.mean(losses))
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+
+    if args.mesh == "production":
+        mesh = make_production_mesh()
+    elif args.mesh == "debug":
+        n = jax.device_count()
+        mesh = make_debug_mesh(data=max(1, n // 2), model=min(2, n))
+    else:
+        mesh = make_debug_mesh(data=1, model=1)
+
+    ds = SyntheticLM(cfg.vocab, args.seq, args.batch, seed=args.seed)
+    hyper = TrainHyper(lr=args.lr, warmup=max(args.steps // 20, 5),
+                       total_steps=args.steps, n_micro=args.n_micro)
+    step_fn = make_train_step(cfg, hyper)
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    hb = HeartbeatMonitor(
+        os.path.join(args.ckpt_dir or "/tmp", "heartbeat.json")
+    )
+    timer = StepTimer()
+
+    with use_rules(mesh, SINGLE_POD_RULES):
+        params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+        opt_state = adamw_init(params)
+        start_step = 0
+        if ckpt and ckpt.latest_step() is not None:
+            (params, opt_state), meta = ckpt.restore((params, opt_state))
+            params = jax.tree.map(jnp.asarray, params)
+            opt_state = jax.tree.map(jnp.asarray, opt_state)
+            start_step = int(meta["data"]["step"])
+            print(f"[train] restored step {start_step} from {args.ckpt_dir}")
+
+        p_sh = param_spec_tree(params, mesh, SINGLE_POD_RULES)
+        o_sh = param_spec_tree(opt_state, mesh, SINGLE_POD_RULES)
+        jstep = jax.jit(
+            step_fn,
+            in_shardings=(p_sh, o_sh, None),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+        metrics_f = open(args.metrics_out, "a") if args.metrics_out else None
+        t_start = time.time()
+        for step in range(start_step, args.steps):
+            timer.start()
+            batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+            params, opt_state, m = jstep(params, opt_state, batch)
+            loss = float(m["loss"])
+            dt = timer.stop()
+            hb.beat(step, {"loss": loss})
+            if timer.is_straggling:
+                print(f"[health] step {step}: straggling "
+                      f"({dt:.3f}s vs median {timer.median():.3f}s)", file=sys.stderr)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                rec = {"step": step, "loss": round(loss, 4),
+                       "grad_norm": round(float(m["grad_norm"]), 3),
+                       "lr": float(m["lr"]), "dt_s": round(dt, 3)}
+                print(f"[train] {rec}")
+                if metrics_f:
+                    metrics_f.write(json.dumps(rec) + "\n")
+                    metrics_f.flush()
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          meta={"data": DataState(args.seed, step + 1).to_dict(),
+                                "arch": cfg.name})
+            if args.simulate_failure and step + 1 >= args.simulate_failure:
+                print(f"[train] SIMULATED FAILURE at step {step + 1}", file=sys.stderr)
+                if ckpt:
+                    ckpt.wait()
+                os._exit(1)
+
+        if ckpt:
+            ckpt.save(args.steps, (params, opt_state),
+                      meta={"data": DataState(args.seed, args.steps).to_dict(),
+                            "arch": cfg.name})
+            ckpt.wait()
+            ckpt.close()
+        wall = time.time() - t_start
+        print(f"[train] done: {args.steps - start_step} steps in {wall:.1f}s")
+
+        if args.ptq_after:
+            # The paper's pipeline: float model -> OCS PTQ (no retraining).
+            f32_loss = evaluate(params, cfg, ds)
+            results = {"float": round(f32_loss, 4)}
+            for name, recipe in [
+                ("clip_mse", QuantRecipe(w_bits=args.ptq_bits, w_clip="mse")),
+                ("ocs", QuantRecipe(w_bits=args.ptq_bits, ocs_ratio=args.ptq_ratio)),
+                ("ocs+clip", QuantRecipe(w_bits=args.ptq_bits, w_clip="mse",
+                                          ocs_ratio=args.ptq_ratio)),
+            ]:
+                qp = fake_quantize_params(params, recipe)
+                results[name] = round(evaluate(qp, cfg, ds), 4)
+            print(f"[ptq] w{args.ptq_bits} eval loss: {results}")
+            return results
+    return None
+
+
+if __name__ == "__main__":
+    main()

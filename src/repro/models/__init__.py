@@ -1,0 +1,2 @@
+from . import attention, layers, mlp, moe, ssm, transformer  # noqa: F401
+from .transformer import TransformerLM  # noqa: F401

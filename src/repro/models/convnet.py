@@ -1,0 +1,198 @@
+"""Small residual CNN — the paper-faithful CNN benchmark subject (Tables 1-5).
+
+The paper evaluates OCS on ImageNet CNNs (and Table 1 on ResNet-20 /
+CIFAR-10). Neither dataset ships offline, so the benchmarks train this
+ResNet-20-shaped network on a synthetic class-template image task (Gaussian
+class prototypes + noise + random shifts) — hard enough that quantization
+error visibly degrades accuracy, small enough to train on 1 CPU core in
+about a minute. The paper's *claims* (QA > naive at low bits, OCS >= clip at
+moderate bits, overhead ~= r) are what the tables validate.
+
+OCS on convolutions (paper §3.2): splitting input channel ``c`` duplicates
+the 2-D activation channel and *all* filter taps connected to it. With HWIO
+weights this is exactly a row split of the ``[Cin, H*W*Cout]`` matricization
+— the same :func:`repro.core.ocs.split_weights` used for linear layers, so
+the CNN exercises the identical core code path as the LM zoo.
+
+First layer is never quantized (paper §5: "The first layer was not
+quantized ... contains only 3 input channels meaning OCS would incur a
+large overhead").
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import actquant, tap
+
+__all__ = [
+    "ConvNetConfig",
+    "convnet_params_shape",
+    "init_convnet",
+    "convnet_forward",
+    "convnet_loss",
+    "make_synthetic_images",
+    "conv_w_to_2d",
+    "conv_w_from_2d",
+]
+
+
+class ConvNetConfig:
+    def __init__(self, n_classes: int = 10, width: int = 16, n_blocks: int = 3,
+                 img: int = 16):
+        self.n_classes = n_classes
+        self.width = width
+        self.n_blocks = n_blocks  # residual blocks per stage (3 stages)
+        self.img = img
+
+    @property
+    def stage_widths(self) -> List[int]:
+        return [self.width, 2 * self.width, 4 * self.width]
+
+
+def _conv_shape(cin: int, cout: int, k: int = 3) -> Tuple[int, ...]:
+    return (k, k, cin, cout)  # HWIO
+
+
+def convnet_params_shape(cfg: ConvNetConfig) -> Dict:
+    shapes: Dict = {"stem": {"conv_w": _conv_shape(3, cfg.width)}}
+    cin = cfg.width
+    for s, w in enumerate(cfg.stage_widths):
+        for b in range(cfg.n_blocks):
+            blk = {
+                "conv1_w": _conv_shape(cin if b == 0 else w, w),
+                "conv2_w": _conv_shape(w, w),
+            }
+            if b == 0 and cin != w:
+                blk["proj_w"] = _conv_shape(cin, w, 1)
+            shapes[f"s{s}b{b}"] = blk
+        cin = w
+    shapes["head"] = {"fc_w": (cin, cfg.n_classes)}
+    return shapes
+
+
+def init_convnet(cfg: ConvNetConfig, key) -> Dict:
+    shapes = convnet_params_shape(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda s: isinstance(s, tuple)
+    )
+    keys = jax.random.split(key, len(flat))
+
+    def init_one(k, shape):
+        fan_in = int(np.prod(shape[:-1]))
+        return jax.random.normal(k, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+    return treedef.unflatten([init_one(k, s) for k, (_, s) in zip(keys, flat)])
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _qconv(x, w, name: str, stride: int = 1):
+    """Conv with calibration tap + activation-PTQ context (paper §5.3).
+
+    Mirrors ``layers.dense``: under an ActQuantCtx the input channels are
+    (optionally OCS-expanded, with the conv weight's Cin axis gathered to
+    match) then fake-quantized on the calibrated grid.
+    """
+    tap.tag(name, x)
+    site = actquant.site_key(name)
+    if site is not None:
+        ctx = actquant.active_ctx()
+        clip = ctx.clips.get(site)
+        if ctx.oracle_ratio > 0:
+            from repro.core.ocs import oracle_expand
+
+            n = max(1, int(np.ceil(ctx.oracle_ratio * x.shape[-1])))
+            x, src = oracle_expand(x, n)
+            w = jnp.take(w, src, axis=2)
+        else:
+            spec = ctx.specs.get(site)
+            if spec is not None:
+                from repro.core.ocs import expand_activations
+
+                x = expand_activations(x, spec)
+                w = jnp.take(w, spec.src, axis=2)
+        if clip is not None:
+            x = actquant._fake_quant_fixed(x, ctx.bits, clip)
+    return _conv(x, w, stride)
+
+
+def convnet_forward(params: Dict, x: jnp.ndarray, cfg: ConvNetConfig) -> jnp.ndarray:
+    """x: [B, H, W, 3] -> logits [B, n_classes]."""
+    # Stem is the un-quantized first layer (paper §5) — plain conv, no site.
+    h = jax.nn.relu(_conv(x, params["stem"]["conv_w"]))
+    for s, w in enumerate(cfg.stage_widths):
+        for b in range(cfg.n_blocks):
+            p = params[f"s{s}b{b}"]
+            stride = 2 if (b == 0 and s > 0) else 1
+            y = jax.nn.relu(_qconv(h, p["conv1_w"], f"s{s}b{b}_c1", stride))
+            y = _qconv(y, p["conv2_w"], f"s{s}b{b}_c2")
+            sc = h if "proj_w" not in p else _conv(h, p["proj_w"], stride)
+            if sc.shape != y.shape:  # stride-only mismatch (same width)
+                sc = sc[:, ::stride, ::stride, :]
+            h = jax.nn.relu(y + sc)
+    h = jnp.mean(h, axis=(1, 2))  # global average pool
+    tap.tag("fc", h)
+    site = actquant.site_key("fc")
+    wfc = params["head"]["fc_w"]
+    if site is not None:
+        h, wfc = actquant.apply_act_quant(h, wfc, site)
+    return h @ wfc
+
+
+def convnet_loss(params, batch, cfg: ConvNetConfig):
+    logits = convnet_forward(params, batch["images"], cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_synthetic_images(
+    n: int, cfg: ConvNetConfig, seed: int = 0
+) -> Dict[str, np.ndarray]:
+    """Class-template images: prototype + shift + noise (deterministic)."""
+    root = np.random.RandomState(1234)  # fixed prototypes across splits
+    protos = root.randn(cfg.n_classes, cfg.img, cfg.img, 3).astype(np.float32)
+    # Low-pass the prototypes (3x box blur) so classes are spatial structure,
+    # not pixel noise — shift augmentation then actually makes the task convy.
+    for _ in range(3):
+        protos = (
+            protos
+            + np.roll(protos, 1, axis=1) + np.roll(protos, -1, axis=1)
+            + np.roll(protos, 1, axis=2) + np.roll(protos, -1, axis=2)
+        ) / 5.0
+    protos *= 3.0 / max(protos.std(), 1e-6)
+    rng = np.random.RandomState(seed)
+    labels = rng.randint(cfg.n_classes, size=n)
+    imgs = protos[labels].copy()
+    shifts = rng.randint(-2, 3, size=(n, 2))
+    for i in range(n):
+        imgs[i] = np.roll(imgs[i], shifts[i], axis=(0, 1))
+    imgs += 2.0 * rng.randn(*imgs.shape).astype(np.float32)
+    return {"images": imgs.astype(np.float32), "labels": labels.astype(np.int32)}
+
+
+# ---------------------------------------------------------------------------
+# OCS matricization helpers (HWIO conv weight <-> [Cin, H*W*Cout])
+
+
+def conv_w_to_2d(w: np.ndarray) -> np.ndarray:
+    """HWIO [H, W, Cin, Cout] -> [Cin, H*W*Cout] (input-channel rows)."""
+    h, ww, cin, cout = w.shape
+    return np.transpose(w, (2, 0, 1, 3)).reshape(cin, h * ww * cout)
+
+
+def conv_w_from_2d(w2d: np.ndarray, hw_shape: Tuple[int, int], cout: int) -> np.ndarray:
+    """[Cin', H*W*Cout] -> HWIO [H, W, Cin', Cout]."""
+    h, ww = hw_shape
+    cin = w2d.shape[0]
+    return np.transpose(w2d.reshape(cin, h, ww, cout), (1, 2, 0, 3))

@@ -1,0 +1,134 @@
+"""Shared layer primitives with first-class PTQ integration.
+
+``dense`` is the single entry point for every matmul in the model zoo. Its
+weight argument is either a float array (training / float serving) or an
+:class:`OCSQuantLinear` (post-PTQ serving) — in the latter case the OCS
+channel expansion (paper Eq. 3/4) is applied to the activations, activations
+are optionally quantized with the calibrated grid, and the matmul runs against
+the integer weights:
+
+* ``w8a8``  — true int8 x int8 -> int32 ``dot_general`` (MXU int path),
+  scaled in the f32 epilogue. This is the production serving mode.
+* ``dequant`` — int weights dequantized into the compute dtype (weight-only
+  quantization; the HLO still reads int8 bytes from HBM, which is where the
+  memory-roofline win comes from).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ocs import OCSQuantLinear, expand_activations
+from repro.core.quantizer import qmax
+from repro.core import actquant, tap
+
+__all__ = ["dense", "rms_norm", "layer_norm", "embed", "act_quant", "swiglu", "gelu"]
+
+Weight = Union[jnp.ndarray, OCSQuantLinear]
+
+
+def _int8_matmul(x8, w8, out_scale, out_dtype):
+    acc = jax.lax.dot_general(
+        x8,
+        w8,
+        (((x8.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return (acc.astype(jnp.float32) * out_scale).astype(out_dtype)
+
+
+# When True (TPU deployment), 2-D quantized matmuls route through the Pallas
+# kernels (fused OCS expansion, no HBM materialization of expanded
+# activations). Default False: the pure-XLA path is what the 512-device
+# dry-run lowers (GSPMD partitions it; a custom-call would not shard).
+USE_PALLAS_SERVING = False
+
+
+def _pallas_ocs_matmul(w: OCSQuantLinear, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.kernels import ops as kops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    src_tail = w.spec.src[w.n_orig:]
+    mult_tail = w.spec.mult[w.n_orig:]
+    w_scale = w.weight.scale
+    if w_scale.ndim == 0:
+        w_scale = jnp.broadcast_to(w_scale, (w.weight.values.shape[-1],))
+    y = kops.ocs_quant_matmul(
+        x2, w.weight.values, w_scale, src_tail, tail_mult=mult_tail,
+        out_dtype=x.dtype,
+    )
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def dense(w: Weight, x: jnp.ndarray, *, name: str = "", mode: str = "dequant"):
+    """y = x @ w with quantization-aware dispatch. x: [..., Cin]."""
+    if isinstance(w, OCSQuantLinear):
+        tap.tag(name, x)
+        if (
+            USE_PALLAS_SERVING
+            and mode == "dequant"
+            and w.weight.values.ndim == 2
+            and jnp.asarray(w.spec.bias).ndim == 1
+        ):
+            return _pallas_ocs_matmul(w, x)
+        xe = expand_activations(x, w.spec)
+        if mode == "w8a8" and w.a_bits is not None and w.a_scale is not None:
+            # Static (calibrated) activation grid -> int8; weights already int.
+            a_s = w.a_scale
+            x8 = jnp.clip(
+                jnp.floor(xe / a_s + 0.5), -qmax(w.a_bits), qmax(w.a_bits)
+            ).astype(jnp.int8)
+            # w scale is broadcast-ready ([,1,1] per-tensor or [,1,Cout]).
+            out_scale = w.weight.scale * a_s
+            return _int8_matmul(x8, w.weight.values, out_scale, x.dtype)
+        wf = w.weight.dequant(x.dtype)
+        return xe.astype(x.dtype) @ wf
+    tap.tag(name, x)
+    site = actquant.site_key(name)
+    if site is not None:  # activation-PTQ evaluation context (Tables 3/4)
+        x, w = actquant.apply_act_quant(x, w.astype(x.dtype), site)
+    return x @ w.astype(x.dtype)
+
+
+def rms_norm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(
+    scale: jnp.ndarray, bias: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-5
+) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def embed(table: jnp.ndarray, ids: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def act_quant(
+    x: jnp.ndarray, bits: Optional[int], clip: Optional[jnp.ndarray]
+) -> jnp.ndarray:
+    """Fake-quantize an activation with a *fixed* calibrated grid (paper §5)."""
+    if bits is None or clip is None:
+        return x
+    step = jnp.asarray(clip, jnp.float32) / qmax(bits)
+    q = jnp.clip(jnp.floor(x.astype(jnp.float32) / step + 0.5), -qmax(bits), qmax(bits))
+    return (q * step).astype(x.dtype)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def gelu(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x)

@@ -1,0 +1,30 @@
+"""Feed-forward blocks: SwiGLU (LLaMA-family) and GELU (encoder-family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import logical
+from .layers import dense
+
+__all__ = ["mlp_params_shape", "mlp"]
+
+
+def mlp_params_shape(cfg: ModelConfig, d_ff: int = 0):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act == "swiglu":
+        return {"w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+    return {"w_in": (d, f), "w_out2": (f, d)}
+
+
+def mlp(params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.act == "swiglu":
+        g = dense(params["w_gate"], x, name="mlp_gate")
+        u = dense(params["w_up"], x, name="mlp_up")
+        h = jax.nn.silu(g) * u
+        h = logical(h, "batch", "seq", "ff")
+        return dense(params["w_down"], h, name="mlp_down")
+    h = jax.nn.gelu(dense(params["w_in"], x, name="mlp_in"))
+    h = logical(h, "batch", "seq", "ff")
+    return dense(params["w_out2"], h, name="mlp_out")

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + O(1) decode.
+
+Follows the discrete SSD formulation of Dao & Gu 2024 (arXiv:2405.21060):
+within chunks of length Q the recurrence is computed in its quadratic
+"attention-like" dual form (MXU-friendly einsums); across chunks a short
+lax.scan carries the [heads, head_dim, d_state] SSM state. Decode is a pure
+O(1) state update — this is what makes ``long_500k`` tractable for the SSM
+and hybrid architectures.
+
+Projections (in_proj/out_proj) go through :func:`layers.dense` and are
+therefore OCS-quantizable; the recurrence itself is elementwise/scan work
+with no weight matrix (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import logical, logical_guarded
+from .layers import dense, rms_norm
+
+__all__ = [
+    "ssm_params_shape",
+    "mamba2",
+    "mamba2_decode",
+    "init_ssm_cache",
+]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = cfg.d_inner
+    heads = cfg.ssm_heads
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, heads, conv_dim
+
+
+def ssm_params_shape(cfg: ModelConfig) -> Dict:
+    s, d_in, heads, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + heads  # z, xBC, dt
+    return {
+        "in_proj": (d, proj_out),
+        "conv_w": (conv_dim, s.conv_width),
+        "conv_b": (conv_dim,),
+        "A_log": (heads,),
+        "D": (heads,),
+        "dt_bias": (heads,),
+        "norm_scale": (d_in,),
+        "out_proj": (d_in, d),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv. x: [B, S, C]; w: [C, W]."""
+    width = w.shape[1]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for j in range(width):  # static, tiny width (4)
+        out = out + pad[:, j : j + x.shape[1], :] * w[:, j]
+    return out + b
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s, d_in, heads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : d_in + d_in + 2 * gn]
+    dt = zxbcdt[..., d_in + d_in + 2 * gn :]
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD. x:[b,s,h,p] dt:[b,s,h] A:[h] B,C:[b,s,g,n] -> y, final_state.
+
+    Heads are grouped: h = g * r. Returns y [b,s,h,p] and state [b,g,r,p,n].
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    r = h // g
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    c = s // q
+
+    xf = x.astype(jnp.float32).reshape(b, c, q, g, r, p)
+    dtf = dt.astype(jnp.float32).reshape(b, c, q, g, r)
+    Bf = B.astype(jnp.float32).reshape(b, c, q, g, n)
+    Cf = C.astype(jnp.float32).reshape(b, c, q, g, n)
+    dA = dtf * A.reshape(g, r)  # [b,c,q,g,r]
+    cum = jnp.cumsum(dA, axis=2)
+
+    # Intra-chunk (quadratic dual form): scores over (query i, key j <= i).
+    # The exponent is masked *before* exp (upper triangle -> -inf -> 0);
+    # masking after exp would produce inf * 0 = NaN.
+    S = jnp.einsum("bcqgn,bckgn->bcqkg", Cf, Bf)
+    diff = cum[:, :, :, None] - cum[:, :, None, :]  # [b,c,q,k,g,r]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.exp(jnp.where(tri[None, None, :, :, None, None], diff, -jnp.inf))
+    y_diag = jnp.einsum("bcqkg,bcqkgr,bckgr,bckgrp->bcqgrp", S, decay, dtf, xf)
+
+    # Chunk states: contribution of each chunk to the carried SSM state.
+    # Emit chunk-major ("c" leading) directly: lax.scan consumes/produces
+    # leading-axis stacks, and a moveaxis on the [*,c,g,r,p,n] state tensors
+    # costs a full materialized transpose per layer (measured 16% of the
+    # memory roofline on hymba train_4k before this layout change).
+    decay_states = jnp.exp(cum[:, :, -1:, :, :] - cum)  # [b,c,q,g,r]
+    states = jnp.einsum("bckgn,bckgr,bckgrp->cbgrpn", Bf, dtf * decay_states, xf)
+    chunk_decay = jnp.exp(jnp.moveaxis(cum[:, :, -1], 1, 0))  # [c,b,g,r] (small)
+
+    def body(carry, inp):
+        st_c, dk_c = inp
+        new = carry * dk_c[..., None, None] + st_c
+        return new, carry  # emit the state *entering* this chunk
+
+    init = jnp.zeros((b, g, r, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(body, init, (states, chunk_decay))
+
+    # Inter-chunk output: queries read the state entering their chunk
+    # ([c,b,...] operand consumed directly, no transpose back).
+    y_off = jnp.einsum("bcqgn,cbgrpn,bcqgr->bcqgrp", Cf, prev_states, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def mamba2(
+    params, u: jnp.ndarray, cfg: ModelConfig, *, return_state: bool = False
+):
+    """Full-sequence Mamba2 block. u: [B, S, d] -> [B, S, d].
+
+    The whole block runs batch-parallel over (data x model): SSM recurrences
+    have no cross-batch interaction, and batch-resharding at the block
+    boundary avoids the partial replication GSPMD falls into when the fused
+    projections / head counts don't divide the 'model' axis (see
+    ``batch_ssm`` in repro.sharding.specs). ``logical_guarded`` degrades to
+    the plain batch sharding when the batch is too small to split further.
+    """
+    s_cfg, d_in, heads, conv_dim = _dims(cfg)
+    b, s, _ = u.shape
+    u = logical_guarded(u, "batch_ssm", "seq", "embed")
+    zxbcdt = dense(params["in_proj"], u, name="ssm_in")
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    gn = s_cfg.n_groups * s_cfg.d_state
+    x = xbc[..., :d_in].reshape(b, s, heads, s_cfg.head_dim)
+    B = xbc[..., d_in : d_in + gn].reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    C = xbc[..., d_in + gn :].reshape(b, s, s_cfg.n_groups, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    x = logical_guarded(x, "batch_ssm", "seq", None, None)
+    y, state = _ssd_chunked(x, dt, A, B, C, s_cfg.chunk)
+    y = (y.astype(jnp.float32) + params["D"].reshape(heads, 1) * x.astype(jnp.float32)).astype(u.dtype)
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(params["norm_scale"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = dense(params["out_proj"], y, name="ssm_out")
+    out = logical(out, "batch", "seq", "embed")
+    if return_state:
+        return out, state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_in, heads, conv_dim = _dims(cfg)
+    return {
+        "state": jnp.zeros(
+            (batch, s.n_groups, heads // s.n_groups, s.head_dim, s.d_state),
+            jnp.float32,
+        ),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(params, u: jnp.ndarray, cache, cfg: ModelConfig):
+    """One-token decode: O(1) state update. u: [B, 1, d]."""
+    s_cfg, d_in, heads, conv_dim = _dims(cfg)
+    b = u.shape[0]
+    g, r = s_cfg.n_groups, heads // s_cfg.n_groups
+    zxbcdt = dense(params["in_proj"], u, name="ssm_in")  # [B,1,*]
+    z, xbc, dt = _split_proj(zxbcdt[:, 0], cfg)
+    # Depthwise conv over the rolling window.
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bwc,cw->bc", win.astype(jnp.float32), params["conv_w"]) + params["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    gn = s_cfg.n_groups * s_cfg.d_state
+    x = xbc[..., :d_in].reshape(b, g, r, s_cfg.head_dim)
+    B = xbc[..., d_in : d_in + gn].reshape(b, g, s_cfg.d_state)
+    C = xbc[..., d_in + gn :].reshape(b, g, s_cfg.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"]).reshape(b, g, r)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32)).reshape(g, r)
+    dA = jnp.exp(dt * A)  # [b,g,r]
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bgn,bgr,bgrp->bgrpn", B, dt, x.astype(jnp.float32)
+    )
+    y = jnp.einsum("bgn,bgrpn->bgrp", C, state)
+    y = y + params["D"].reshape(g, r, 1) * x.astype(jnp.float32)
+    y = y.reshape(b, d_in).astype(u.dtype)
+    y = rms_norm(params["norm_scale"], y * jax.nn.silu(z).astype(u.dtype), cfg.norm_eps)
+    out = dense(params["out_proj"], y[:, None, :].astype(u.dtype), name="ssm_out")
+    new_cache = {"state": state, "conv": win[:, 1:]}
+    return out, new_cache

@@ -1,0 +1,456 @@
+"""TransformerLM — composable LM covering all assigned architecture families.
+
+Block types:
+* ``dense``  — GQA attention + (SwiGLU|GELU) MLP   (glm4, minitron, deepseek-7b,
+               qwen3 (qk-norm), qwen2-vl (M-RoPE), hubert (encoder, no causal))
+* ``moe``    — GQA attention + MoE FFN             (deepseek-moe, phi3.5-moe)
+* ``mamba2`` — SSD state-space block, attention-free (mamba2-1.3b)
+* ``hymba``  — parallel attention + SSM heads sharing one input, meta tokens,
+               sliding-window attention with a few global layers (hymba-1.5b)
+
+Layers run under ``lax.scan`` with stacked parameters (HLO size independent of
+depth — critical for the 512-device dry-run) or unrolled (``scan=False``) for
+eager calibration taps and heterogeneous decode caches. Forward modes:
+
+* ``forward``      — full-sequence logits (training / encoder).
+* ``loss_fn``      — mean token cross-entropy (f32 softmax).
+* ``prefill``      — full sequence -> last-token logits + decode caches.
+* ``decode_step``  — one token against the caches (the ``serve_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import logical
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .attention import (
+    attention,
+    attention_decode,
+    attention_params_shape,
+    init_kv_cache,
+)
+from .layers import dense, embed, rms_norm, layer_norm
+from .mlp import mlp, mlp_params_shape
+from .moe import moe, moe_params_shape
+from .ssm import init_ssm_cache, mamba2, mamba2_decode, ssm_params_shape
+
+__all__ = ["TransformerLM"]
+
+
+def _norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rms":
+        return rms_norm(p["scale"], x, cfg.norm_eps)
+    return layer_norm(p["scale"], p["bias"], x, cfg.norm_eps)
+
+
+def _norm_shape(cfg: ModelConfig, d: int):
+    if cfg.norm == "rms":
+        return {"scale": (d,)}
+    return {"scale": (d,), "bias": (d,)}
+
+
+def layer_params_shape(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    shapes: Dict[str, Any] = {"norm1": _norm_shape(cfg, d)}
+    if cfg.block in ("dense", "moe", "hymba"):
+        shapes["attn"] = attention_params_shape(cfg)
+    if cfg.block == "dense":
+        shapes["norm2"] = _norm_shape(cfg, d)
+        shapes["mlp"] = mlp_params_shape(cfg)
+    elif cfg.block == "moe":
+        shapes["norm2"] = _norm_shape(cfg, d)
+        shapes["moe"] = moe_params_shape(cfg)
+    elif cfg.block == "mamba2":
+        shapes["ssm"] = ssm_params_shape(cfg)
+    elif cfg.block == "hymba":
+        shapes["ssm"] = ssm_params_shape(cfg)
+        shapes["attn_fuse_norm"] = {"scale": (d,)}
+        shapes["ssm_fuse_norm"] = {"scale": (d,)}
+        shapes["norm2"] = _norm_shape(cfg, d)
+        shapes["mlp"] = mlp_params_shape(cfg)
+    else:
+        raise ValueError(cfg.block)
+    return shapes
+
+
+def model_params_shape(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    shapes: Dict[str, Any] = {
+        "embed": (cfg.vocab, d),
+        "final_norm": _norm_shape(cfg, d),
+        "layers": jax.tree.map(
+            lambda s: (cfg.n_layers,) + s,
+            layer_params_shape(cfg),
+            is_leaf=lambda s: isinstance(s, tuple),
+        ),
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (d, cfg.vocab)
+    if cfg.block == "hymba":
+        shapes["meta_tokens"] = (cfg.hymba.n_meta_tokens, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    from repro.core.apply import path_str
+
+    shapes = model_params_shape(cfg)
+    is_shape = lambda s: isinstance(s, tuple)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes, is_leaf=is_shape)
+    keys = jax.random.split(key, len(flat))
+
+    def init_one(k, path, shape):
+        p = path_str(path).lower()
+        vector = len(shape) == 1 or (len(shape) == 2 and shape[0] == cfg.n_layers)
+        if "scale" in p or "norm" in p:
+            return jnp.ones(shape, dtype)
+        if "a_log" in p:
+            base = jnp.log(jnp.linspace(1.0, 16.0, shape[-1], dtype=jnp.float32))
+            return jnp.broadcast_to(base, shape).astype(jnp.float32)
+        if "dt_bias" in p or p.endswith("conv_b"):
+            return jnp.zeros(shape, jnp.float32)
+        if p.endswith("/d") or p.split("/")[-1] == "d":
+            return jnp.ones(shape, jnp.float32)
+        if vector:
+            return jnp.zeros(shape, dtype)
+        if "embed" in p or "meta_tokens" in p:
+            std = 0.02
+        else:
+            std = 1.0 / math.sqrt(shape[-2])
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dtype)
+
+    leaves = [init_one(k, path, shape) for k, (path, shape) in zip(keys, flat)]
+    return treedef.unflatten(leaves)
+
+
+# ---------------------------------------------------------------------------
+# Block forward (full sequence)
+
+
+def _block(cfg: ModelConfig, p, x, positions, layer_flag=None):
+    """One layer, full sequence.
+
+    ``layer_flag``: hymba is-global switch — a static bool when layers run
+    in homogeneous segments (enables the statically-skipped window path in
+    attention), or a traced bool under a mixed scan (decode fallback).
+    """
+    kind = "full" if not cfg.causal else "causal"
+    if cfg.block == "dense":
+        h = _norm(cfg, p["norm1"], x)
+        x = x + attention(p["attn"], h, cfg, positions=positions, kind=kind)
+        h = _norm(cfg, p["norm2"], x)
+        x = x + mlp(p["mlp"], h, cfg)
+    elif cfg.block == "moe":
+        h = _norm(cfg, p["norm1"], x)
+        x = x + attention(p["attn"], h, cfg, positions=positions, kind=kind)
+        h = _norm(cfg, p["norm2"], x)
+        x = x + moe(p["moe"], h, cfg)
+    elif cfg.block == "mamba2":
+        h = _norm(cfg, p["norm1"], x)
+        x = x + mamba2(p["ssm"], h, cfg)
+    elif cfg.block == "hymba":
+        h = _norm(cfg, p["norm1"], x)
+        if isinstance(layer_flag, (bool, np.bool_)):  # static segment
+            a_kind = "causal" if layer_flag else "window"
+            a_flag = None
+        else:
+            a_kind = "window"
+            a_flag = layer_flag
+        a = attention(
+            p["attn"],
+            h,
+            cfg,
+            positions=positions,
+            kind=a_kind,
+            window=cfg.hymba.swa_window,
+            is_global=a_flag,
+            n_prefix=cfg.hymba.n_meta_tokens,
+        )
+        s = mamba2(p["ssm"], h, cfg)
+        fused = 0.5 * (
+            rms_norm(p["attn_fuse_norm"]["scale"], a, cfg.norm_eps)
+            + rms_norm(p["ssm_fuse_norm"]["scale"], s, cfg.norm_eps)
+        )
+        x = x + fused
+        h = _norm(cfg, p["norm2"], x)
+        x = x + mlp(p["mlp"], h, cfg)
+    else:
+        raise ValueError(cfg.block)
+    return x
+
+
+def _hymba_flags(cfg: ModelConfig) -> np.ndarray:
+    """Static (host) per-layer is-global flags; jnp-converted only for scan."""
+    flags = np.zeros(cfg.n_layers, dtype=bool)
+    for i in cfg.hymba.global_layers:
+        flags[i] = True
+    return flags
+
+
+def _segments(flags: np.ndarray):
+    """Contiguous same-flag runs: [(lo, hi, flag), ...] covering all layers."""
+    out = []
+    lo = 0
+    for i in range(1, len(flags) + 1):
+        if i == len(flags) or flags[i] != flags[lo]:
+            out.append((lo, i, bool(flags[lo])))
+            lo = i
+    return out
+
+
+def _positions(cfg: ModelConfig, b: int, s: int, offset: int = 0):
+    pos = jnp.arange(s) + offset
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[None, :, None], (b, s, 3))
+    return jnp.broadcast_to(pos[None, :], (b, s))
+
+
+def forward(
+    params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    scan: bool = True,
+    embeds: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Full-sequence logits. tokens: [B, S] int32 (or embeds [B, S, d])."""
+    if embeds is not None:
+        x = embeds.astype(jnp.bfloat16)
+        b, s = x.shape[0], x.shape[1]
+    else:
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+    x = logical(x, "batch", "seq", "embed")
+
+    n_meta = cfg.hymba.n_meta_tokens if cfg.block == "hymba" else 0
+    if n_meta:
+        meta = jnp.broadcast_to(
+            params["meta_tokens"].astype(x.dtype), (b, n_meta, cfg.d_model)
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+    positions = _positions(cfg, b, s + n_meta)
+
+    flags = _hymba_flags(cfg) if cfg.block == "hymba" else None
+    if scan and flags is not None:
+        # Segmented scan: contiguous runs of same-kind layers (the 3 global
+        # layers become their own segments) so the window/global choice is
+        # STATIC inside each body — unlocking the skipped-chunk window path.
+        # HLO holds one body per segment (~5 for hymba) instead of 1; depth
+        # independence within segments is preserved.
+        for lo, hi, glob in _segments(flags):
+            sub = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+            body = lambda carry, p, _g=bool(glob): (
+                _block(cfg, p, carry, positions, _g),
+                None,
+            )
+            if cfg.remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, sub)
+    elif scan:
+        body = lambda carry, p: (_block(cfg, p, carry, positions, None), None)
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["layers"])
+            f_i = bool(flags[i]) if flags is not None else None
+            x = _block(cfg, p_i, x, positions, f_i)
+
+    if n_meta:
+        x = x[:, n_meta:]
+    x = _norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(head, x, name="lm_head")
+    return logical(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(
+    params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig, *, scan: bool = True
+) -> jnp.ndarray:
+    """Mean token cross-entropy (f32). batch: tokens/labels [B, S] (+embeds)."""
+    logits = forward(
+        params, batch.get("tokens"), cfg, scan=scan, embeds=batch.get("embeds")
+    ).astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Decode path
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-layer decode caches (+ scalar position).
+
+    Caches are a *list of per-layer trees*, not stacked [L, ...] arrays:
+    decode unrolls the layer loop so every cache tensor is updated by exactly
+    one dynamic_update_slice and XLA aliases the donated buffer in place.
+    (A scanned [L, ...] cache forces xs/ys double buffering — measured 22 GB
+    of temps for deepseek-7b decode_32k before this layout.)
+    """
+    if not cfg.causal:
+        raise ValueError("encoder-only models have no decode step")
+
+    if cfg.block in ("dense", "moe"):
+        return {
+            "layers": [
+                {"attn": init_kv_cache(cfg, batch, max_len, dtype=dtype)}
+                for _ in range(cfg.n_layers)
+            ],
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.block == "mamba2":
+        return {
+            "layers": [
+                {"ssm": init_ssm_cache(cfg, batch, dtype=dtype)}
+                for _ in range(cfg.n_layers)
+            ],
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.block == "hymba":
+        flags = np.zeros(cfg.n_layers, bool)
+        for i in cfg.hymba.global_layers:
+            flags[i] = True
+        caches = []
+        for i in range(cfg.n_layers):
+            window = 0 if flags[i] else cfg.hymba.swa_window
+            caches.append(
+                {
+                    "attn": init_kv_cache(cfg, batch, max_len, window=window, dtype=dtype),
+                    "meta_k": jnp.zeros(
+                        (batch, cfg.hymba.n_meta_tokens, cfg.n_kv_heads, cfg.hd), dtype
+                    ),
+                    "meta_v": jnp.zeros(
+                        (batch, cfg.hymba.n_meta_tokens, cfg.n_kv_heads, cfg.hd), dtype
+                    ),
+                    "ssm": init_ssm_cache(cfg, batch, dtype=dtype),
+                }
+            )
+        return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.block)
+
+
+def _decode_block(cfg: ModelConfig, p, x, cache, pos, window: int = 0):
+    """One layer, one token. Returns (x, new_cache)."""
+    if cfg.block in ("dense", "moe"):
+        h = _norm(cfg, p["norm1"], x)
+        a, new_attn = attention_decode(p["attn"], h, cache, pos, cfg)
+        x = x + a
+        h = _norm(cfg, p["norm2"], x)
+        x = x + (moe(p["moe"], h, cfg) if cfg.block == "moe" else mlp(p["mlp"], h, cfg))
+        return x, new_attn
+    if cfg.block == "mamba2":
+        h = _norm(cfg, p["norm1"], x)
+        s, new_ssm = mamba2_decode(p["ssm"], h, cache, cfg)
+        return x + s, new_ssm
+    if cfg.block == "hymba":
+        h = _norm(cfg, p["norm1"], x)
+        a, new_attn = attention_decode(
+            p["attn"],
+            h,
+            cache["attn"],
+            pos,
+            cfg,
+            window=window,
+            kv_prefix=(cache["meta_k"], cache["meta_v"]),
+        )
+        s, new_ssm = mamba2_decode(p["ssm"], h, cache["ssm"], cfg)
+        fused = 0.5 * (
+            rms_norm(p["attn_fuse_norm"]["scale"], a, cfg.norm_eps)
+            + rms_norm(p["ssm_fuse_norm"]["scale"], s, cfg.norm_eps)
+        )
+        x = x + fused
+        h = _norm(cfg, p["norm2"], x)
+        x = x + mlp(p["mlp"], h, cfg)
+        new_cache = {
+            "attn": new_attn,
+            "meta_k": cache["meta_k"],
+            "meta_v": cache["meta_v"],
+            "ssm": new_ssm,
+        }
+        return x, new_cache
+    raise ValueError(cfg.block)
+
+
+def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
+    """serve_step: one new token [B, 1] -> (logits [B, V], new caches).
+
+    The layer loop is unrolled (see ``init_cache``): per-layer cache tensors
+    are donated and updated in place; stacked params are sliced per layer
+    (cheap relative to the cache traffic that dominates decode).
+    """
+    pos = caches["pos"]
+    x = embed(params["embed"], token)
+    x = logical(x, "batch", "seq", "embed")
+
+    flags = _hymba_flags(cfg) if cfg.block == "hymba" else None
+    new_layers = []
+    for i in range(cfg.n_layers):
+        p_i = jax.tree.map(lambda a: a[i], params["layers"])
+        if cfg.block == "hymba":
+            window = 0 if bool(flags[i]) else cfg.hymba.swa_window
+            x, nc = _decode_block(cfg, p_i, x, caches["layers"][i], pos, window)
+        elif cfg.block in ("dense", "moe"):
+            x, nc_attn = _decode_block(cfg, p_i, x, caches["layers"][i]["attn"], pos)
+            nc = {"attn": nc_attn}
+        elif cfg.block == "mamba2":
+            x, nc_ssm = _decode_block(cfg, p_i, x, caches["layers"][i]["ssm"], pos)
+            nc = {"ssm": nc_ssm}
+        else:
+            raise ValueError(cfg.block)
+        new_layers.append(nc)
+    new_caches = {"layers": new_layers, "pos": pos + 1}
+
+    x = _norm(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = dense(head, x, name="lm_head")[:, 0, :]
+    return logical(logits, "batch", "vocab"), new_caches
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, max_len: int):
+    """Run the full prompt, return (last logits, caches ready for decode).
+
+    Implemented as forward + cache construction for attention archs; for
+    SSM/hybrid archs the chunked scan returns the final state directly.
+    For the dry-run shapes only ``forward`` (prefill compute) matters.
+    """
+    logits = forward(params, tokens, cfg)
+    return logits[:, -1, :]
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerLM:
+    """Thin, stateless facade bundling the functional API."""
+
+    cfg: ModelConfig
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.cfg, key, dtype)
+
+    def forward(self, params, tokens, **kw):
+        return forward(params, tokens, self.cfg, **kw)
+
+    def loss(self, params, batch, **kw):
+        return loss_fn(params, batch, self.cfg, **kw)
+
+    def init_cache(self, batch, max_len, dtype=jnp.bfloat16):
+        return init_cache(self.cfg, batch, max_len, dtype)
+
+    def decode_step(self, params, token, caches):
+        return decode_step(params, token, caches, self.cfg)
+
+    def prefill(self, params, tokens, max_len: int):
+        return prefill(params, tokens, self.cfg, max_len)

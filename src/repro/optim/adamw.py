@@ -1,0 +1,76 @@
+"""AdamW with cosine schedule, global-norm clipping, f32 master state.
+
+Implemented directly (no optax dependency) so the whole training stack is
+self-contained. State is a pytree mirroring the params (m, v in f32) and
+therefore shards exactly like the params under FSDP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "cosine_schedule", "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    m: object  # pytree like params (f32)
+    v: object  # pytree like params (f32)
+    count: jnp.ndarray  # scalar int32
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(
+        m=zeros,
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.reduce(
+        lambda a, x: a + jnp.sum(jnp.square(x.astype(jnp.float32))), tree, 0.0
+    )
+    return jnp.sqrt(sq)
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int):
+    step = step.astype(jnp.float32)
+    warm = base_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Tuple[object, AdamWState]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+    mhat_s = 1.0 / (1.0 - b1**c)
+    vhat_s = 1.0 / (1.0 - b2**c)
+
+    def upd(p, mm, vv):
+        u = (mm * mhat_s) / (jnp.sqrt(vv * vhat_s) + eps)
+        wd = weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        return (p.astype(jnp.float32) - lr * (u + wd)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, AdamWState(m=m, v=v, count=count)

@@ -1,0 +1,3 @@
+from .compress import CompressionState, compressed_psum, init_compression  # noqa: F401
+from .health import HeartbeatMonitor, StepTimer  # noqa: F401
+from .elastic import reshard_tree  # noqa: F401

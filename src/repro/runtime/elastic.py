@@ -1,0 +1,30 @@
+"""Elastic re-meshing: resume a checkpoint on a different device topology.
+
+Checkpoints store unsharded arrays (see :mod:`repro.checkpoint.manager`), so
+elasticity is purely a *placement* problem: given the restored host arrays
+and the new mesh, re-derive every leaf's NamedSharding from the same logical
+rules that produced the original shardings and ``device_put`` accordingly.
+Shrinking 2x16x16 -> 16x16 (pod loss) or growing 16x16 -> 2x16x16 (pod
+join) both reduce to this function plus a data-pipeline step offset (exact,
+because batches are pure functions of the step index).
+
+Divisibility guards in :func:`repro.sharding.specs.param_sharding` make the
+re-shard total: a dim that no longer divides the new axis simply falls back
+to replication rather than failing the restore.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding.specs import LogicalRules, param_spec_tree
+
+__all__ = ["reshard_tree"]
+
+
+def reshard_tree(tree, mesh: Mesh, rules: LogicalRules):
+    """Place restored host arrays onto ``mesh`` under ``rules``."""
+    shardings = param_spec_tree(tree, mesh, rules)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings
+    )

@@ -1,0 +1,108 @@
+"""Straggler detection and liveness for the synchronous training fleet.
+
+In a synchronous pjit/GSPMD job every step is a barrier: one slow host drags
+the whole fleet. At 1000+ nodes two failure classes dominate:
+
+* **stragglers** — a host that is alive but persistently slow (thermal
+  throttling, a failing HBM stack, noisy neighbor on the NIC). Detection:
+  per-step wall-time tracked against a rolling median; a host whose steps
+  exceed ``factor x median`` for ``patience`` consecutive windows is flagged
+  so the orchestrator can cordon it and trigger an elastic re-mesh (see
+  :mod:`repro.runtime.elastic`).
+* **hangs/crashes** — a host that stops making progress entirely. Detection:
+  a heartbeat file updated after every step; an external watchdog (or the
+  neighbor hosts) restarts the job from the latest checkpoint when the
+  heartbeat goes stale for ``timeout`` seconds.
+
+Both are host-side observers with zero impact on the jitted step. In this
+single-process container the monitor watches the one local "host"; the same
+code runs per-host on a real fleet with ``host_id`` set.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+__all__ = ["StepTimer", "HeartbeatMonitor"]
+
+
+class StepTimer:
+    """Rolling per-step timing with straggler flagging."""
+
+    def __init__(self, window: int = 50, factor: float = 1.5, patience: int = 3):
+        self.window: Deque[float] = deque(maxlen=window)
+        self.factor = factor
+        self.patience = patience
+        self._over = 0
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> float:
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        med = self.median()
+        if med > 0 and dt > self.factor * med:
+            self._over += 1
+        else:
+            self._over = 0
+        self.window.append(dt)
+        return dt
+
+    def median(self) -> float:
+        if not self.window:
+            return 0.0
+        s = sorted(self.window)
+        return s[len(s) // 2]
+
+    @property
+    def is_straggling(self) -> bool:
+        return self._over >= self.patience
+
+
+class HeartbeatMonitor:
+    """File-based liveness: writer side (train loop) + watchdog side."""
+
+    def __init__(self, path: str, host_id: int = 0, timeout: float = 300.0):
+        self.path = path
+        self.host_id = host_id
+        self.timeout = timeout
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def beat(self, step: int, extra: Optional[Dict] = None):
+        rec = {
+            "host": self.host_id,
+            "step": int(step),
+            "time": time.time(),
+            **(extra or {}),
+        }
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, self.path)
+
+    def read(self) -> Optional[Dict]:
+        try:
+            with open(self.path) as f:
+                return json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def stale_hosts(self, paths: List[str]) -> List[int]:
+        """Watchdog: which heartbeat files have gone stale?"""
+        now = time.time()
+        out = []
+        for p in paths:
+            try:
+                with open(p) as f:
+                    rec = json.load(f)
+                if now - rec["time"] > self.timeout:
+                    out.append(int(rec["host"]))
+            except (FileNotFoundError, json.JSONDecodeError, KeyError):
+                out.append(-1)  # unreadable = presumed dead
+        return out

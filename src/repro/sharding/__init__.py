@@ -1,0 +1,10 @@
+from .specs import (  # noqa: F401
+    LogicalRules,
+    SINGLE_POD_RULES,
+    MULTI_POD_RULES,
+    activation_rules,
+    logical,
+    param_sharding,
+    param_spec_tree,
+    use_rules,
+)

@@ -1,0 +1,269 @@
+"""Logical-axis sharding rules (FSDP x TP x EP, + pod DP axis).
+
+Models annotate activations with *logical* axis names
+(``logical(x, "batch", "seq", "embed")``); the active rule set maps logical
+names to mesh axes. Parameter shardings are derived from the parameter path +
+shape by :func:`param_sharding` — the same rules power the single-pod
+(16 data x 16 model) and multi-pod (2 pod x 16 data x 16 model) meshes.
+
+Sharding philosophy (MaxText-style 2D sharding):
+
+* ``batch``   -> ('pod', 'data')  — pure data parallelism across pods.
+* ``embed``   -> 'data' on the *parameter* contraction dim (FSDP / ZeRO-3:
+  XLA all-gathers weights just-in-time; the latency-hiding scheduler overlaps
+  the gathers with compute).
+* ``heads`` / ``ff`` / ``vocab`` / ``expert`` -> 'model' (tensor / expert
+  parallelism; one psum per block on the row-parallel output).
+* sequence stays unsharded for the assigned shapes (batch >= data axis); the
+  chunked-attention path keeps memory linear in seq.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LogicalRules",
+    "SINGLE_POD_RULES",
+    "MULTI_POD_RULES",
+    "logical",
+    "use_rules",
+    "param_sharding",
+    "param_spec_tree",
+    "activation_rules",
+]
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    table: Dict[str, Axis]
+
+    def get(self, name: Optional[str]) -> Axis:
+        if name is None:
+            return None
+        return self.table.get(name)
+
+    def spec(self, *names: Optional[str]) -> P:
+        return P(*(self.get(n) for n in names))
+
+
+SINGLE_POD_RULES = LogicalRules(
+    {
+        "batch": "data",
+        # SSM blocks are embarrassingly parallel over batch but their fused
+        # projections/heads often fail TP divisibility (hymba: 25 q heads,
+        # 50 ssm heads, 6482-wide in_proj vs a 16-way 'model' axis), which
+        # leaves GSPMD partially replicating the whole SSD chain. Resharding
+        # the block batch-wise over (data x model) removes every replicated
+        # op at the cost of one boundary reshard per block (guarded: falls
+        # back to plain batch sharding when batch % (data*model) != 0).
+        "batch_ssm": ("data", "model"),
+        "fsdp": "data",
+        "seq": None,
+        # Query-sequence sharding for attention blocks whose head counts
+        # don't divide the model axis (see models/attention.py).
+        "seq_attn": "model",
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "ff": "model",
+        "vocab": "model",
+        "expert": "model",
+        "ssm_heads": "model",
+        "conv_dim": "model",
+        "state": None,
+    }
+)
+
+MULTI_POD_RULES = LogicalRules(
+    {
+        **SINGLE_POD_RULES.table,
+        "batch": ("pod", "data"),
+        "batch_ssm": ("pod", "data", "model"),
+    }
+)
+
+_ACTIVE: Optional[Tuple[Mesh, LogicalRules]] = None
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: LogicalRules):
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, (mesh, rules)
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def activation_rules() -> Optional[Tuple[Mesh, LogicalRules]]:
+    return _ACTIVE
+
+
+def logical(x, *names: Optional[str]):
+    """Constrain ``x``'s sharding by logical axis names (no-op outside a mesh)."""
+    if _ACTIVE is None:
+        return x
+    mesh, rules = _ACTIVE
+    if x.ndim != len(names):
+        raise ValueError(f"rank {x.ndim} != {len(names)} logical names {names}")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, rules.spec(*names))
+    )
+
+
+def guarded_spec(mesh: Mesh, shape, names, rules: LogicalRules) -> P:
+    """Logical names -> PartitionSpec with divisibility + axis-reuse guards.
+
+    Tuple axes degrade by *prefix* (("pod","data","model") -> ("pod","data")
+    -> ("pod") -> None) until the dim divides the axis product — so one rule
+    table serves meshes where a dim is only partially shardable.
+    """
+    axes = []
+    used = set()
+    for dim, name in zip(shape, names):
+        ax = rules.get(name)
+        if ax is None:
+            axes.append(None)
+            continue
+        cand = list(ax) if isinstance(ax, tuple) else [ax]
+        cand = [a for a in cand if a not in used]
+        while cand:
+            total = int(np.prod([mesh.shape[a] for a in cand]))
+            if dim % total == 0 and dim >= total:
+                break
+            cand.pop()
+        if not cand:
+            axes.append(None)
+            continue
+        axes.append(tuple(cand) if len(cand) > 1 else cand[0])
+        used.update(cand)
+    return P(*axes)
+
+
+def logical_guarded(x, *names: Optional[str]):
+    """Like :func:`logical` but with divisibility-guarded axis fallback."""
+    if _ACTIVE is None:
+        return x
+    mesh, rules = _ACTIVE
+    if x.ndim != len(names):
+        raise ValueError(f"rank {x.ndim} != {len(names)} logical names {names}")
+    spec = guarded_spec(mesh, x.shape, names, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings by path pattern.
+#
+# Patterns are matched against the '/'-joined tree path. Axis names are
+# logical; the last two dims of a weight are (Cin, Cout) and leading dims are
+# layer/expert stacks. OCSQuantLinear leaves are sharded component-wise
+# (values like the float kernel; spec/scale replicated or contraction-sharded).
+
+# (regex, logical names for the *trailing* dims; leading stack dims get
+#  None (layers) / 'expert' (the E dim of expert stacks) automatically).
+_PARAM_RULES = [
+    (r"embed", ("vocab", "embed_fsdp")),  # [V, d]
+    (r"lm_head|out_head", ("fsdp", "vocab")),  # [d, V]
+    (r"(wq|wk|wv|wkv|qkv)", ("fsdp", "heads")),  # [d, H*hd]
+    (r"wo\b|w_o|attn_out", ("heads", "fsdp")),  # [H*hd, d]
+    (r"(w_gate|w_up|w_in|w1|w3)", ("fsdp", "ff")),  # [d, f]
+    (r"(w_down|w_out2|w2)", ("ff", "fsdp")),  # [f, d]
+    (r"router", (None, None)),  # [d, E] replicated (tiny, accuracy-critical)
+    (r"in_proj", ("fsdp", "ff")),  # ssm [d, d_all]
+    (r"out_proj", ("ff", "fsdp")),  # ssm [d_inner, d]
+    (r"conv_w", ("conv_dim", None)),  # depthwise [conv_dim, K]
+    (r"meta_tokens", (None, None)),
+]
+
+_VECTOR_RULES = [
+    (r"(A_log|dt_bias|D)\b", ("ssm_heads",)),
+    (r"conv_b", ("conv_dim",)),
+]
+
+
+def _match_trailing(path: str):
+    for pat, names in _PARAM_RULES:
+        if re.search(pat, path):
+            return names
+    return None
+
+
+def _leading_names(path: str, n_lead: int):
+    # Expert stacks: [L, E, ...] or [E, ...]; the expert dim is sharded.
+    names = [None] * n_lead
+    if re.search(r"expert", path) and n_lead >= 1:
+        names[-1] = "expert"
+    return names
+
+
+def param_spec(path: str, shape, rules: LogicalRules) -> P:
+    """PartitionSpec for a float parameter leaf."""
+    path = path.lower()
+    if len(shape) == 0:
+        return P()
+    if len(shape) == 1:
+        for pat, names in _VECTOR_RULES:
+            if re.search(pat, path):
+                return rules.spec(*names)
+        return P()
+    trailing = _match_trailing(path)
+    if trailing is None:
+        # Unknown matrices: replicate leading, FSDP the biggest trailing dim.
+        names = [None] * len(shape)
+        names[-2 if shape[-2] >= shape[-1] else -1] = "fsdp"
+        return rules.spec(*names)
+    n_lead = len(shape) - 2
+    lead = _leading_names(path, n_lead)
+    # Special-case vectors stacked per layer ([L, d] norms hit len>=2 above
+    # only when a rule matched; otherwise fall through to replicate).
+    tt = ["embed_fsdp" if t == "embed_fsdp" else t for t in trailing]
+    # 'embed_fsdp': shard embedding's d over data only if large.
+    tt = [("fsdp" if t == "embed_fsdp" else t) for t in tt]
+    return rules.spec(*(lead + list(tt)))
+
+
+def param_sharding(path: str, leaf, mesh: Mesh, rules: LogicalRules):
+    """NamedSharding for any leaf (float array or OCSQuantLinear component).
+
+    Guards: a dim is only sharded if divisible by its axis size, and each mesh
+    axis is used at most once (e.g. MoE expert stacks put 'expert' on the
+    'model' axis, so the experts' inner TP dims must fall back to replicated).
+    """
+    shape = np.shape(leaf)
+    spec = param_spec(path, shape, rules)
+    fixed = []
+    used = set()
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        if any(a in used for a in axes):
+            fixed.append(None)
+            continue
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % total == 0:
+            fixed.append(ax)
+            used.update(axes)
+        else:
+            fixed.append(None)
+    return NamedSharding(mesh, P(*fixed))
+
+
+def param_spec_tree(params, mesh: Mesh, rules: LogicalRules):
+    """Tree of NamedShardings matching ``params`` (handles quantized leaves)."""
+    from repro.core.apply import path_str
+
+    def visit(path, leaf):
+        return param_sharding(path_str(path), leaf, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,79 @@
+"""Knapsack channel allocation (§3.4 variant) + QA-split optimality property."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.allocate import knapsack_allocate, range_reduction_curve
+from repro.core.ocs import split_weights
+
+
+def test_range_curve_matches_real_splits():
+    rng = np.random.RandomState(0)
+    w = rng.randn(24, 8).astype(np.float32)
+    w[3, 2] = 11.0
+    w[7, 5] = -9.0
+    curve = range_reduction_curve(w, 5)
+    for k in range(6):
+        w_exp, _, _ = split_weights(w, 0.0, 8, qa=False, n_splits=k)
+        assert np.isclose(curve[k], np.abs(w_exp).max(), rtol=1e-6), k
+
+
+def test_knapsack_respects_budget_and_prefers_outlier_layers():
+    rng = np.random.RandomState(1)
+    clean = rng.randn(32, 16).astype(np.float32)
+    spiky = rng.randn(32, 16).astype(np.float32)
+    spiky[4, 4] = 30.0  # single huge outlier: one split removes half the range
+    alloc = knapsack_allocate([("clean", clean), ("spiky", spiky)], ratio=0.03)
+    total = sum(alloc.values()) * 16
+    assert total <= 0.03 * (clean.size + spiky.size) + 1e-9
+    assert alloc["spiky"] >= 1  # the high-reward layer gets the budget first
+    assert alloc["spiky"] >= alloc["clean"]
+
+
+def test_knapsack_total_range_reduction_beats_uniform():
+    """At equal overhead, the knapsack's objective (sum of fractional range
+    reductions) must be >= uniform's — it optimizes exactly that."""
+    rng = np.random.RandomState(2)
+    layers = []
+    for i in range(4):
+        w = rng.randn(40, 12).astype(np.float32)
+        w[rng.randint(40), rng.randint(12)] *= (2.0 + 3.0 * i)
+        layers.append((f"l{i}", w))
+    ratio = 0.05
+    alloc = knapsack_allocate(layers, ratio)
+
+    def objective(allocation):
+        tot = 0.0
+        for name, w in layers:
+            k = allocation[name]
+            curve = range_reduction_curve(w, max(k, 1))
+            tot += (curve[0] - curve[k]) / curve[0]
+        return tot
+
+    uniform = {name: int(np.ceil(ratio * w.shape[0])) for name, w in layers}
+    # Match total cost (uniform may slightly exceed the knapsack budget).
+    assert objective(alloc) >= objective(uniform) - 0.02
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    w=st.floats(min_value=-100, max_value=100),
+    a=st.floats(min_value=-60, max_value=60),
+)
+def test_qa_split_is_optimal(w, a):
+    """Paper §3.3 (proof omitted there): no split (w1, w2 = w - w1) has lower
+    total quantization error than the QA split, for unit grid step."""
+
+    def q(v):  # Q(v) = floor(v + 1/2), the paper's rounding
+        return np.floor(v + 0.5)
+
+    def err(w1, w2):
+        return abs((q(w1) + q(w2)) - w)
+
+    qa = err((w - 0.5) / 2.0, (w + 0.5) / 2.0)
+    alt = err(a, w - a)
+    assert qa <= alt + 1e-9
+    # And QA is exactly quantization-preserving: Q(w1)+Q(w2) == Q(w).
+    assert q((w - 0.5) / 2.0) + q((w + 0.5) / 2.0) == q(w)

@@ -1,0 +1,147 @@
+"""Convnet + LSTM benchmark subjects and the activation-quant context."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tap
+from repro.core.actquant import ActQuantCtx, act_quant_ctx, post_ocs_clip
+from repro.core.ocs import split_activations_spec
+from repro.models.convnet import (
+    ConvNetConfig,
+    conv_w_from_2d,
+    conv_w_to_2d,
+    convnet_forward,
+    convnet_loss,
+    init_convnet,
+    make_synthetic_images,
+)
+from repro.models.lstm import (
+    LSTMConfig,
+    init_lstm,
+    lstm_forward,
+    lstm_loss,
+)
+
+CFG = ConvNetConfig(n_classes=4, width=8, n_blocks=1, img=8)
+
+
+def test_convnet_shapes_and_grad():
+    params = init_convnet(CFG, jax.random.PRNGKey(0))
+    d = make_synthetic_images(4, CFG, seed=0)
+    logits = convnet_forward(params, jnp.asarray(d["images"]), CFG)
+    assert logits.shape == (4, CFG.n_classes)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    loss, grads = jax.value_and_grad(convnet_loss)(
+        params, {"images": jnp.asarray(d["images"]),
+                 "labels": jnp.asarray(d["labels"])}, CFG)
+    assert np.isfinite(float(loss))
+    gnorm = sum(float(jnp.sum(g * g)) for g in jax.tree.leaves(grads))
+    assert gnorm > 0
+
+
+def test_conv_matricization_roundtrip():
+    rng = np.random.RandomState(0)
+    w = rng.randn(3, 3, 8, 16).astype(np.float32)
+    w2d = conv_w_to_2d(w)
+    assert w2d.shape == (8, 3 * 3 * 16)
+    np.testing.assert_array_equal(conv_w_from_2d(w2d, (3, 3), 16), w)
+
+
+def test_conv_ocs_channel_split_equivalence():
+    """Matricized row split == duplicating the 2D activation channel (Eq. 3)."""
+    from repro.core.ocs import split_weights
+
+    rng = np.random.RandomState(1)
+    w = rng.randn(3, 3, 6, 5).astype(np.float32)
+    w[:, :, 2, :] *= 10.0  # make channel 2 the outlier
+    x = jnp.asarray(rng.randn(2, 8, 8, 6), jnp.float32)
+
+    w2d = conv_w_to_2d(w)
+    # ceil(0.17 * 6) = 2 splits; both target outlier channel 2 (its halves
+    # remain the largest values after the first split).
+    w2d_exp, spec, _ = split_weights(w2d, ratio=0.17, bits=8, qa=False)
+    assert spec.n_expanded == 8
+    assert int(spec.src[-1]) == 2 and int(spec.src[-2]) == 2
+    w_exp = conv_w_from_2d(w2d_exp, (3, 3), 5)
+
+    x_exp = jnp.take(x, jnp.asarray(np.asarray(spec.src)), axis=-1)
+    conv = lambda xx, ww: jax.lax.conv_general_dilated(
+        xx, ww, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(
+        conv(x_exp, jnp.asarray(w_exp)), conv(x, jnp.asarray(w)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_lstm_forward_and_learning_signal():
+    cfg = LSTMConfig(vocab=32, hidden=16, n_layers=2)
+    params = init_lstm(cfg, jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.RandomState(0).randint(0, 32, (2, 12)))
+    logits = lstm_forward(params, tokens, cfg)
+    assert logits.shape == (2, 12, 32)
+    assert not np.any(np.isnan(np.asarray(logits)))
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    loss, grads = jax.value_and_grad(lstm_loss)(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    assert float(jnp.abs(grads["l0"]["wx"]).max()) > 0
+
+
+def test_tap_collector_per_layer_sites():
+    """Ordinals separate repeated site names across layers."""
+    params = init_convnet(CFG, jax.random.PRNGKey(0))
+    coll = tap.Collector()
+    d = make_synthetic_images(2, CFG, seed=0)
+    with tap.collecting(coll):
+        for _ in range(2):
+            coll.begin_batch()
+            convnet_forward(params, jnp.asarray(d["images"]), CFG)
+    # n_blocks=1, 3 stages -> 6 conv sites + fc; all distinct keys.
+    assert len(coll) == 7, sorted(coll.sites)
+    assert "s0b0_c1#0" in coll.sites and "fc#0" in coll.sites
+    assert coll.sites["fc#0"].hist.total > 0
+
+
+def test_act_quant_ctx_expands_and_quantizes():
+    params = init_convnet(CFG, jax.random.PRNGKey(0))
+    coll = tap.Collector()
+    d = make_synthetic_images(4, CFG, seed=0)
+    x = jnp.asarray(d["images"])
+    with tap.collecting(coll):
+        coll.begin_batch()
+        base = convnet_forward(params, x, CFG)
+
+    clips, specs = {}, {}
+    for site, stats in coll.sites.items():
+        spec = split_activations_spec(stats, 0.05)
+        specs[site] = spec
+        clips[site] = post_ocs_clip(stats, spec, None, 8)
+    ctx = ActQuantCtx(bits=8, clips=clips, specs=specs)
+
+    def fwd(p, xx):
+        ctx.reset()
+        return convnet_forward(p, xx, CFG)
+
+    with act_quant_ctx(ctx):
+        out = jax.jit(fwd)(params, x)
+    # 8-bit with OCS: functionally close to float (quant error only).
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=0.1, atol=0.35)
+    # And genuinely quantized: some difference must exist.
+    assert float(jnp.abs(out - base).max()) > 0
+
+
+def test_act_quant_oracle_path():
+    from repro.models.layers import dense
+
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(4, 16), jnp.float32)
+    w = jnp.asarray(rng.randn(16, 8), jnp.float32)
+    base = x @ w
+    ctx = ActQuantCtx(bits=8, clips={"lin#0": float(jnp.abs(x).max())},
+                      oracle_ratio=0.1)
+    with act_quant_ctx(ctx):
+        ctx.reset()
+        out = dense(w, x, name="lin")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=0.05, atol=0.05)

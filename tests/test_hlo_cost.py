@@ -1,0 +1,73 @@
+"""Unit tests for the trip-count-aware HLO cost model (roofline §Methodology)."""
+import textwrap
+
+from repro.launch.hlo_cost import analyze_hlo
+
+# Minimal synthetic HLO: a while loop with known trip count 8 whose body does
+# one f32[64,64]x[64,64] dot, one all-reduce of f32[64,64], and one
+# dynamic-update-slice into an f32[8,64,64] stacked buffer.
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %body (p: (s32[], f32[64,64], f32[8,64,64])) -> (s32[], f32[64,64], f32[8,64,64]) {
+      %p = (s32[], f32[64,64], f32[8,64,64]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+      %buf = f32[8,64,64]{2,1,0} get-tuple-element(%p), index=2
+      %d = f32[64,64]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[64,64]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+      %xr = f32[1,64,64]{2,1,0} reshape(%ar)
+      %zero = s32[] constant(0)
+      %dus = f32[8,64,64]{2,1,0} dynamic-update-slice(%buf, %xr, %i, %zero, %zero)
+      %one = s32[] constant(1)
+      %ip = s32[] add(%i, %one)
+      ROOT %t = (s32[], f32[64,64], f32[8,64,64]) tuple(%ip, %ar, %dus)
+    }
+
+    %cond (pc: (s32[], f32[64,64], f32[8,64,64])) -> pred[] {
+      %pc = (s32[], f32[64,64], f32[8,64,64]) parameter(0)
+      %ic = s32[] get-tuple-element(%pc), index=0
+      %n = s32[] constant(8)
+      ROOT %lt = pred[] compare(%ic, %n), direction=LT
+    }
+
+    %sum (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (in: f32[64,64]) -> (s32[], f32[64,64], f32[8,64,64]) {
+      %in = f32[64,64]{1,0} parameter(0)
+      %c0 = s32[] constant(0)
+      %b0 = f32[8,64,64]{2,1,0} broadcast(%c0), dimensions={}
+      %init = (s32[], f32[64,64], f32[8,64,64]) tuple(%c0, %in, %b0)
+      ROOT %w = (s32[], f32[64,64], f32[8,64,64]) while(%init), condition=%cond, body=%body
+    }
+""")
+
+
+def test_trip_count_scaling():
+    c = analyze_hlo(HLO)
+    # dot flops: 2 * 64*64 * 64 per trip, x8 trips.
+    assert c.flops >= 2 * 64 * 64 * 64 * 8
+    # elementwise add contributes a little; dots dominate.
+    assert c.flops < 2 * 64 * 64 * 64 * 8 * 1.2
+
+
+def test_collectives_scaled_by_trips():
+    c = analyze_hlo(HLO)
+    # all-reduce result bytes: 64*64*4 per trip, x8.
+    assert c.collective_bytes["all-reduce"] == 64 * 64 * 4 * 8
+    assert c.collective_counts["all-reduce"] == 8
+
+
+def test_stacked_buffer_not_overcounted():
+    c = analyze_hlo(HLO)
+    buf = 8 * 64 * 64 * 4
+    # The [8,64,64] DUS must be charged ~once over the loop (result/T per
+    # trip), NOT 8 full buffers: total stacked-kind bytes stay ~2x buffer
+    # (operand+result regions), far below 8x.
+    dus = c.bytes_by_kind.get("dynamic-update-slice", 0.0)
+    assert dus <= 2.5 * buf, (dus, buf)
+    assert dus >= 0.5 * buf

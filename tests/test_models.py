@@ -1,0 +1,208 @@
+"""Per-architecture smoke tests (assignment deliverable).
+
+For each of the 10 assigned architectures: instantiate the REDUCED config of
+the same family, run one forward and one train step on CPU, assert output
+shapes and absence of NaNs. Plus decode-path consistency checks (prefill via
+full forward == step-by-step decode) for the families with a serve path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config, SHAPES
+from repro.models import transformer as T
+
+ALL_ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=32):
+    rng = np.random.default_rng(0)
+    if cfg.frontend == "audio":
+        return {
+            "embeds": jnp.asarray(
+                rng.normal(size=(b, s, cfg.d_model)).astype(np.float32)
+            ),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, size=(b, s))),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, size=(b, s))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, size=(b, s))),
+    }
+
+
+def test_all_archs_registered():
+    assert len(ALL_ARCHS) == 10
+    for a in ALL_ARCHS:
+        cfg = get_config(a)
+        assert cfg.n_layers > 0 and cfg.d_model > 0 and cfg.vocab > 0
+
+
+def test_full_configs_match_assignment():
+    c = get_config("hymba-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        32, 1600, 25, 5, 5504, 32001,
+    ) and c.ssm.d_state == 16
+    c = get_config("deepseek-moe-16b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k, c.moe.n_shared) == (
+        28, 2048, 64, 6, 2,
+    )
+    c = get_config("phi3.5-moe-42b-a6.6b")
+    assert (c.moe.n_experts, c.moe.top_k, c.d_ff) == (16, 2, 6400)
+    c = get_config("glm4-9b")
+    assert (c.n_layers, c.d_model, c.n_kv_heads, c.d_ff, c.vocab) == (
+        40, 4096, 2, 13696, 151552,
+    )
+    c = get_config("minitron-8b")
+    assert (c.d_ff, c.vocab) == (16384, 256000)
+    c = get_config("deepseek-7b")
+    assert (c.n_layers, c.n_kv_heads, c.d_ff) == (30, 32, 11008)
+    c = get_config("qwen3-14b")
+    assert c.qk_norm and (c.n_layers, c.d_model, c.d_ff) == (40, 5120, 17408)
+    c = get_config("mamba2-1.3b")
+    assert (c.n_layers, c.d_model, c.ssm.d_state) == (48, 2048, 128)
+    c = get_config("qwen2-vl-7b")
+    assert c.mrope_sections == (16, 24, 24) and c.d_model == 3584
+    c = get_config("hubert-xlarge")
+    assert not c.causal and (c.n_layers, c.d_model, c.vocab) == (48, 1280, 504)
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg)
+    b, s = batch["labels"].shape
+
+    logits = T.forward(params, batch.get("tokens"), cfg, embeds=batch.get("embeds"))
+    assert logits.shape == (b, s, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+
+    loss, grads = jax.value_and_grad(lambda p: T.loss_fn(p, batch, cfg))(params)
+    assert np.isfinite(float(loss))
+    gnorm = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.square(x.astype(jnp.float32)))), grads, 0.0
+    )
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = smoke_config(arch)
+    if not cfg.causal:
+        pytest.skip("encoder-only: no decode step (per assignment)")
+    params = T.init_params(cfg, jax.random.key(0))
+    caches = T.init_cache(cfg, 2, 64)
+    logits, caches = T.decode_step(params, jnp.zeros((2, 1), jnp.int32), caches, cfg)
+    assert logits.shape == (2, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
+    assert int(caches["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "mamba2-1.3b", "qwen3-14b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must agree with the full-sequence forward."""
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.key(1))
+    rng = np.random.default_rng(1)
+    s = 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, s)))
+    full = T.forward(params, toks, cfg).astype(jnp.float32)
+
+    caches = T.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, caches = T.decode_step(params, toks[:, t : t + 1], caches, cfg)
+        outs.append(np.asarray(lg.astype(jnp.float32)))
+    dec = np.stack(outs, axis=1)  # [1, s, V]
+    # bf16 compute: tolerances are loose but trends must match exactly.
+    np.testing.assert_allclose(dec, np.asarray(full), rtol=0.15, atol=0.15)
+    # Argmax agreement on later positions (past numerical noise).
+    agree = (dec[0, 2:].argmax(-1) == np.asarray(full)[0, 2:].argmax(-1)).mean()
+    assert agree >= 0.8
+
+
+def test_scan_unroll_equivalence():
+    cfg = smoke_config("glm4-9b")
+    params = T.init_params(cfg, jax.random.key(2))
+    toks = jnp.asarray(np.random.default_rng(2).integers(0, cfg.vocab, (2, 16)))
+    a = T.forward(params, toks, cfg, scan=True).astype(jnp.float32)
+    b = T.forward(params, toks, cfg, scan=False).astype(jnp.float32)
+    # bf16 compute: scan and unrolled layouts accumulate in different orders.
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0.05, atol=0.05)
+
+
+def test_chunked_attention_matches_direct():
+    """Online-softmax chunked attention == direct softmax attention."""
+    import dataclasses
+    from repro.models.attention import attention, attention_params_shape
+    from repro.models import transformer as TT
+
+    cfg = dataclasses.replace(smoke_config("glm4-9b"), attn_chunk=8)
+    cfg2 = dataclasses.replace(cfg, attn_chunk=64)  # one chunk = direct-ish
+    rng = np.random.default_rng(3)
+    p = {
+        k: jnp.asarray(rng.normal(size=s).astype(np.float32)) * 0.1
+        for k, s in attention_params_shape(cfg).items()
+    }
+    x = jnp.asarray(rng.normal(size=(2, 64, cfg.d_model)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    y1 = attention(p, x, cfg, positions=pos)
+    y2 = attention(p, x, cfg2, positions=pos)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-3, atol=2e-3)
+
+
+def test_moe_all_tokens_routed():
+    """With ample capacity no token should be dropped (combine sums gates=1)."""
+    from repro.models.moe import moe, moe_params_shape
+    import dataclasses
+
+    cfg = smoke_config("deepseek-moe-16b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0, n_shared=0)
+    )
+    rng = np.random.default_rng(4)
+    shapes = moe_params_shape(cfg)
+    p = jax.tree.map(
+        lambda s: jnp.asarray(rng.normal(size=s).astype(np.float32)) * 0.05,
+        shapes,
+        is_leaf=lambda s: isinstance(s, tuple),
+    )
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)).astype(np.float32))
+    y = moe(p, x, cfg)
+    assert y.shape == x.shape
+    assert not bool(jnp.any(jnp.isnan(y)))
+    # Identity experts check: if all experts compute ~0 (tiny weights), output ~0
+    # is fine; the real invariant is shape + finiteness + gradient flow.
+    g = jax.grad(lambda pp: jnp.sum(moe(pp, x, cfg) ** 2))(p)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+def test_mamba2_state_decode_matches_chunked():
+    """SSD chunked scan == sequential O(1) state updates (same recurrence)."""
+    import dataclasses
+    from repro.models import ssm as S
+
+    cfg = smoke_config("mamba2-1.3b")
+    rng = np.random.default_rng(5)
+    shapes = S.ssm_params_shape(cfg)
+    p = {}
+    for k, sh in shapes.items():
+        if k == "A_log":
+            p[k] = jnp.asarray(np.log(rng.uniform(1, 4, size=sh)).astype(np.float32))
+        elif k in ("dt_bias", "conv_b"):
+            p[k] = jnp.zeros(sh, jnp.float32)
+        elif k in ("D", "norm_scale"):
+            p[k] = jnp.ones(sh, jnp.float32)
+        else:
+            p[k] = jnp.asarray(rng.normal(size=sh).astype(np.float32)) * 0.2
+    s_len = 24
+    u = jnp.asarray(rng.normal(size=(1, s_len, cfg.d_model)).astype(np.float32))
+    y_full = S.mamba2(p, u, cfg)
+    cache = S.init_ssm_cache(cfg, 1, dtype=jnp.float32)
+    ys = []
+    for t in range(s_len):
+        y_t, cache = S.mamba2_decode(p, u[:, t : t + 1], cache, cfg)
+        ys.append(np.asarray(y_t)[:, 0])
+    y_seq = np.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), y_seq, rtol=2e-2, atol=2e-2)

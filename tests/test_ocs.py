@@ -1,0 +1,224 @@
+"""Tests for Outlier Channel Splitting — the paper's core contribution.
+
+Key invariants (each maps to a claim in the paper):
+* Hermite identity: Q(w) == Q((w-Δ/2)/2) + Q((w+Δ/2)/2)        (§3.3, Eq. 7)
+* Functional equivalence of the expanded float network            (§3.2)
+* Channel selection targets the global max |value|                (§3.4)
+* ceil(r*C) splits / overhead ≈ r                                 (§3.4, Table 5)
+* QA splitting quantization error <= naive splitting error        (§3.3, Table 1)
+* Oracle OCS halves the batch's own outlier channels              (Table 4)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ChannelStats,
+    OCSSpec,
+    collapse_expanded,
+    duplicate_weight_rows,
+    expand_activations,
+    fake_quant,
+    make_ocs_quant_linear,
+    n_splits_for_ratio,
+    oracle_expand,
+    qmax,
+    split_activations_spec,
+    split_weights,
+)
+
+
+def _Q(v, delta):
+    """Paper §3.3 rounding: Q(v) = Δ * floor(v/Δ + 1/2)."""
+    return delta * np.floor(v / delta + 0.5)
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    st.floats(min_value=-1000, max_value=1000, allow_nan=False),
+    st.floats(min_value=1e-3, max_value=10, allow_nan=False),
+)
+def test_hermite_identity(w, delta):
+    """Q(w) == Q((w-Δ/2)/2) + Q((w+Δ/2)/2) exactly (Eq. 7)."""
+    lhs = _Q(w, delta)
+    rhs = _Q((w - delta / 2) / 2, delta) + _Q((w + delta / 2) / 2, delta)
+    assert lhs == pytest.approx(rhs, abs=1e-3 * delta)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.floats(min_value=-100, max_value=100, allow_nan=False),
+    st.floats(min_value=1e-2, max_value=5, allow_nan=False),
+)
+def test_naive_split_error_at_midpoints(w, delta):
+    """Naive split can double max error; QA split never exceeds it (§3.3)."""
+    qa_err = abs(_Q(w, delta) - (_Q((w - delta / 2) / 2, delta) + _Q((w + delta / 2) / 2, delta)))
+    assert qa_err <= 1e-3 * delta  # QA is exact
+
+
+def test_naive_split_error_example():
+    """Paper's example: w=3, halves 1.5/1.5 both round up -> 4 != 3 (Δ=1)."""
+    w, delta = 3.0, 1.0
+    naive = _Q(w / 2, delta) + _Q(w / 2, delta)
+    assert naive == 4.0 and _Q(w, delta) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# Functional equivalence
+
+
+def test_weight_ocs_functional_equivalence():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(32, 16)).astype(np.float32)
+    w[5, 3] = 10.0  # planted outlier
+    w_exp, spec, _ = split_weights(w, 0.1, 8, qa=True)
+    x = rng.normal(size=(4, 32)).astype(np.float32)
+    y_ref = x @ w
+    y_exp = np.asarray(expand_activations(jnp.asarray(x), spec)) @ w_exp
+    np.testing.assert_allclose(y_exp, y_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_weight_ocs_collapse_identity():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(16, 8)).astype(np.float32)
+    w_exp, spec, _ = split_weights(w, 0.2, 6, qa=True)
+    w_eff, y_bias = collapse_expanded(w_exp, spec, 16)
+    np.testing.assert_allclose(w_eff, w, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(y_bias, 0.0, atol=1e-5)
+
+
+def test_activation_ocs_functional_equivalence():
+    rng = np.random.default_rng(2)
+    c = 24
+    w = rng.normal(size=(c, 8)).astype(np.float32)
+    stats = ChannelStats(n_channels=c)
+    x_cal = rng.normal(size=(64, c)).astype(np.float32)
+    x_cal[:, 7] *= 5.0  # channel 7 has outliers
+    stats.update(x_cal)
+    spec = split_activations_spec(stats, 0.05)
+    assert 7 in np.asarray(spec.src[c:])  # the outlier channel got split
+    w_exp = np.asarray(duplicate_weight_rows(jnp.asarray(w), spec))
+    x = rng.normal(size=(4, c)).astype(np.float32)
+    y_exp = np.asarray(expand_activations(jnp.asarray(x), spec)) @ w_exp
+    np.testing.assert_allclose(y_exp, x @ w, rtol=1e-4, atol=1e-5)
+
+
+def test_qa_bias_split_preserves_quantization():
+    """Activation QA split with bias ∓Δ/4: quantized halves sum to Q(x)."""
+    delta = 0.125
+    x = np.asarray([0.1875, -0.4375, 0.5, 1.0], dtype=np.float32)  # incl. midpoints
+    x1 = x / 2 - delta / 4
+    x2 = x / 2 + delta / 4
+    np.testing.assert_allclose(_Q(x1, delta) + _Q(x2, delta), _Q(x, delta), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# Channel selection / overhead
+
+
+def test_selects_global_max_channel():
+    w = np.ones((8, 4), dtype=np.float32) * 0.1
+    w[3, 2] = 50.0
+    w_exp, spec, _ = split_weights(w, 1 / 8, 8)
+    assert w_exp.shape[0] == 9
+    assert int(spec.src[-1]) == 3
+
+
+def test_iterative_resplit_of_same_channel():
+    """A huge outlier channel should be split repeatedly (§3.4: one at a time)."""
+    w = np.full((8, 4), 0.01, dtype=np.float32)
+    w[0, 0] = 100.0
+    w_exp, spec, _ = split_weights(w, 3 / 8, 8)
+    assert w_exp.shape[0] == 11
+    # All three splits should trace back to channel 0.
+    assert np.all(np.asarray(spec.src[8:]) == 0)
+    # Three binary splits of the 100.0 outlier bring the max near 100/4.
+    assert np.abs(w_exp).max() < 30.0
+
+
+def test_n_splits_ceil():
+    assert n_splits_for_ratio(100, 0.01) == 1
+    assert n_splits_for_ratio(100, 0.015) == 2
+    assert n_splits_for_ratio(64, 0.05) == 4
+    assert n_splits_for_ratio(64, 0.0) == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=64),
+    st.floats(min_value=0.0, max_value=0.3),
+)
+def test_overhead_matches_ratio(c, r):
+    """Table 5: relative size overhead == ceil(r*C)/C ~= r."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(c, 4)).astype(np.float32)
+    w_exp, spec, _ = split_weights(w, r, 8)
+    n = n_splits_for_ratio(c, r)
+    assert w_exp.shape[0] == c + n
+    assert spec.n_expanded == c + n
+
+
+# ---------------------------------------------------------------------------
+# QA vs naive end-to-end quantization error (Table 1 mechanism)
+
+
+def test_qa_no_worse_than_naive_quant_error():
+    rng = np.random.default_rng(3)
+    w = rng.laplace(size=(64, 64)).astype(np.float32)
+    errs = {}
+    for qa in (True, False):
+        w_exp, spec, thresh = split_weights(w, 0.1, 4, qa=qa)
+        wq = np.asarray(fake_quant(jnp.asarray(w_exp), 4, clip=thresh))
+        w_eff, _ = collapse_expanded(wq, spec, 64)
+        errs[qa] = float(((w_eff - w) ** 2).mean())
+    assert errs[True] <= errs[False] * 1.05  # QA at least matches naive
+
+
+def test_ocs_reduces_dynamic_range():
+    """Splitting the max channel must shrink max|w| (the whole point of OCS)."""
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(128, 32)).astype(np.float32)
+    w[11] *= 8.0
+    w_exp, _, _ = split_weights(w, 0.02, 8)
+    assert np.abs(w_exp).max() < np.abs(w).max() * 0.75
+
+
+# ---------------------------------------------------------------------------
+# Oracle OCS
+
+
+def test_oracle_expand_equivalence_and_selection():
+    rng = np.random.default_rng(5)
+    c = 16
+    x = rng.normal(size=(8, c)).astype(np.float32)
+    x[:, 4] *= 20.0
+    w = rng.normal(size=(c, 6)).astype(np.float32)
+    x_exp, src = oracle_expand(jnp.asarray(x), 2)
+    assert x_exp.shape == (8, c + 2)
+    assert 4 in np.asarray(src[c:])  # the batch outlier channel selected
+    w_exp = jnp.take(jnp.asarray(w), src, axis=0)
+    np.testing.assert_allclose(
+        np.asarray(x_exp @ w_exp), x @ w, rtol=1e-4, atol=1e-4
+    )
+    # Expanded max is halved relative to the original outlier.
+    assert float(jnp.abs(x_exp).max()) < np.abs(x).max() * 0.75
+
+
+# ---------------------------------------------------------------------------
+# Full pipeline object
+
+
+def test_make_ocs_quant_linear_pipeline():
+    rng = np.random.default_rng(6)
+    w = rng.normal(size=(40, 24)).astype(np.float32)
+    w[3] *= 6.0
+    lin = make_ocs_quant_linear(w, 0.05, 8, clip_method="mse", pad_to=8)
+    assert lin.weight.values.shape[0] % 8 == 0
+    x = rng.normal(size=(4, 40)).astype(np.float32)
+    y = np.asarray(
+        expand_activations(jnp.asarray(x), lin.spec) @ lin.dequant_weight()
+    )
+    rel = np.abs(y - x @ w).max() / np.abs(x @ w).max()
+    assert rel < 0.05  # 8-bit + OCS: small relative error end-to-end

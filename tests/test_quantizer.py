@@ -1,0 +1,105 @@
+"""Unit + property tests for the linear symmetric quantizer (paper Eq. 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quantizer as Q
+
+
+def test_qmax_values():
+    assert Q.qmax(8) == 127
+    assert Q.qmax(4) == 7
+    assert Q.qmax(2) == 1
+    with pytest.raises(ValueError):
+        Q.qmax(1)
+
+
+def test_storage_dtype():
+    assert Q.storage_dtype(8) == jnp.int8
+    assert Q.storage_dtype(4) == jnp.int8
+    assert Q.storage_dtype(16) == jnp.int16
+
+
+def test_eq1_matches_paper_formula():
+    """Bit-exact check of Eq. 1: round(x*(2^(k-1)-1)/max|x|) * max|x|/(2^(k-1)-1)."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 32)).astype(np.float32)
+    for k in (8, 6, 4):
+        got = np.asarray(Q.fake_quant(jnp.asarray(x), k))
+        m = np.abs(x).max()
+        want = np.floor(x * (2 ** (k - 1) - 1) / m + 0.5) * m / (2 ** (k - 1) - 1)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_int_and_fake_paths_agree():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(128,)).astype(np.float32))
+    qp = Q.quantize_tensor(x, 6)
+    np.testing.assert_allclose(
+        np.asarray(qp.dequant()), np.asarray(Q.fake_quant(x, 6)), atol=1e-7
+    )
+
+
+def test_per_channel_scales():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, 8)).astype(np.float32) * np.arange(1, 9))
+    qp = Q.quantize_tensor(x, 8, channel_axis=1)
+    assert qp.scale.shape == (8,)
+    # Per-channel must be at least as accurate as per-tensor on scaled channels.
+    err_pc = float(jnp.mean((qp.dequant() - x) ** 2))
+    err_pt = float(jnp.mean((Q.fake_quant(x, 8) - x) ** 2))
+    assert err_pc <= err_pt + 1e-12
+
+
+def test_clip_saturates():
+    x = jnp.asarray([0.1, 0.5, 2.0, -3.0], dtype=jnp.float32)
+    y = np.asarray(Q.fake_quant(x, 8, clip=1.0))
+    assert y.max() <= 1.0 + 1e-6 and y.min() >= -1.0 - 1e-6
+
+
+def test_zero_tensor_safe():
+    x = jnp.zeros((4, 4))
+    y = Q.fake_quant(x, 8)
+    assert np.all(np.asarray(y) == 0)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=-1e4, max_value=1e4, allow_nan=False),
+        min_size=1,
+        max_size=64,
+    ),
+    st.integers(min_value=2, max_value=8),
+)
+def test_quantization_error_bound(vals, bits):
+    """Property: per-element error <= step/2 for in-range values (paper §3.1)."""
+    x = jnp.asarray(np.array(vals, dtype=np.float32))
+    y = Q.fake_quant(x, bits)
+    m = float(jnp.max(jnp.abs(x)))
+    if m == 0:
+        return
+    step = m / Q.qmax(bits)
+    assert float(jnp.max(jnp.abs(y - x))) <= step / 2 + 1e-4 * step
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.floats(min_value=-100, max_value=100, allow_nan=False),
+        min_size=2,
+        max_size=32,
+    ),
+    st.integers(min_value=2, max_value=8),
+)
+def test_idempotence(vals, bits):
+    """Property: quantizing an already-quantized tensor is the identity."""
+    x = jnp.asarray(np.array(vals, dtype=np.float32))
+    y1 = Q.fake_quant(x, bits)
+    m = float(jnp.max(jnp.abs(x)))
+    if m == 0:
+        return
+    y2 = Q.fake_quant(y1, bits, clip=m)  # same grid
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), rtol=1e-5, atol=1e-6)
