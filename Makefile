@@ -1,0 +1,23 @@
+# Repro CI entry points. Everything runs from the repo root with src/ on
+# PYTHONPATH; no installation step.
+#
+#   make test         tier-1 gate (must stay green; the driver checks it)
+#   make test-fast    tier-1 minus the slow-marked cases
+#   make bench-smoke  serving throughput smoke -> results/BENCH_serving.json
+#   make bench        every paper table + serving (slow; trains subjects once)
+
+PY := PYTHONPATH=src python
+
+.PHONY: test test-fast bench-smoke bench
+
+test:
+	$(PY) -m pytest -x -q
+
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench-smoke:
+	$(PY) -m benchmarks.serving_throughput --quick
+
+bench:
+	$(PY) -m benchmarks.run --quick

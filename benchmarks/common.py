@@ -283,3 +283,30 @@ def save_json(name: str, obj) -> None:
     os.makedirs(d, exist_ok=True)
     with open(os.path.join(d, name + ".json"), "w") as f:
         json.dump(obj, f, indent=1, default=float)
+
+
+BENCH_SCHEMA_VERSION = 1
+
+
+def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:
+    """Write ``results/BENCH_<bench>.json`` in the stable cross-PR schema.
+
+    Schema (version 1, consumed by future PRs' trend tooling — append keys,
+    never rename):
+
+        {"schema": 1, "bench": str, "created_unix": float,
+         "metrics": {flat name -> number}, "meta": {free-form context}}
+    """
+    name = f"BENCH_{bench}"
+    save_json(
+        name,
+        {
+            "schema": BENCH_SCHEMA_VERSION,
+            "bench": bench,
+            "created_unix": time.time(),
+            "metrics": metrics,
+            "meta": meta or {},
+        },
+    )
+    d = os.path.join(os.path.dirname(os.path.abspath(__file__)), "results")
+    return os.path.join(d, name + ".json")

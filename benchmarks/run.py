@@ -17,6 +17,7 @@ import traceback
 
 from . import (
     roofline,
+    serving_throughput,
     table1_qa_split,
     table2_weight_quant,
     table3_act_quant,
@@ -25,6 +26,7 @@ from . import (
     table6_lstm,
     table7_knapsack,
 )
+from .common import save_bench_json
 
 TABLES = {
     "table1": table1_qa_split.run,
@@ -34,6 +36,7 @@ TABLES = {
     "table5": table5_overhead.run,
     "table6": table6_lstm.run,
     "table7": table7_knapsack.run,  # §3.4 knapsack variant (paper's negative result)
+    "serving": lambda quick: serving_throughput.main(["--quick"] if quick else []),
 }
 
 
@@ -45,14 +48,17 @@ def main(argv=None):
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(TABLES)
 
     failures = []
+    timings = {}
     for name in names:
         print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
         t0 = time.time()
         try:
             TABLES[name](quick=args.quick)
-            print(f"[{name}] done in {time.time() - t0:.0f}s")
+            timings[name] = time.time() - t0
+            print(f"[{name}] done in {timings[name]:.0f}s")
         except Exception:
             failures.append(name)
+            timings[name] = -1.0
             traceback.print_exc()
 
     print(f"\n{'=' * 72}\n== roofline (from dry-run artifacts)\n{'=' * 72}")
@@ -60,6 +66,16 @@ def main(argv=None):
         roofline.main([])
     except Exception:
         traceback.print_exc()
+
+    # Stable cross-PR artifact: which runners passed and how long they took
+    # (seconds; -1 = failed). Trend tooling in later PRs consumes this.
+    save_bench_json(
+        "tables",
+        metrics={f"{n}_seconds": t for n, t in timings.items()},
+        # "only" lets trend tooling distinguish "not run this time" (partial
+        # invocation overwrote the file) from a removed/failed table.
+        meta={"quick": bool(args.quick), "failed": failures, "only": names},
+    )
 
     if failures:
         raise SystemExit(f"failed tables: {failures}")

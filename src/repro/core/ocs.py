@@ -52,6 +52,7 @@ __all__ = [
     "split_weights",
     "split_activations_spec",
     "expand_activations",
+    "fold_expansion_mult",
     "collapse_expanded",
     "oracle_expand",
     "OCSQuantLinear",
@@ -258,6 +259,39 @@ def split_activations_spec(
 def duplicate_weight_rows(w: jnp.ndarray, spec: OCSSpec) -> jnp.ndarray:
     """Weight expansion for *activation* OCS: rows are copied unchanged."""
     return jnp.take(w, spec.src, axis=0)
+
+
+def fold_expansion_mult(
+    w_exp: np.ndarray, spec: OCSSpec
+) -> Tuple[np.ndarray, OCSSpec]:
+    """Fold activation-side multipliers into the expanded weight rows.
+
+    ``x_exp @ W == (x[:, src] * mult) @ W == x[:, src] @ (mult[:, None] * W)``
+    — so any expansion whose bias is zero can be *packed*: the returned
+    weights carry the multiplier per row (activation-OCS halving, Eq. 4, and
+    the zero padding-row masks) and the returned spec is pure duplication
+    (mult == 1 everywhere). Packed weights are the contract the integer
+    serving kernels rely on: the duplicated activation channel is then
+    bit-identical to its source, so already-quantized int8 values can be
+    copied instead of requantized (see ``repro.kernels.fused_qmatmul``).
+
+    Fold *before* quantization — the multiplier changes the rows' dynamic
+    range, so quantizing first and folding after would change the grid.
+    """
+    bias = np.asarray(spec.bias)
+    if bias.size and np.any(bias != 0.0):
+        raise ValueError(
+            "fold_expansion_mult requires bias == 0 (QA activation splits "
+            "carry a +-delta/4 bias that cannot move into the weights)"
+        )
+    mult = np.asarray(spec.mult, dtype=np.float32)
+    w_folded = np.asarray(w_exp, dtype=np.float32) * mult[:, None]
+    packed = OCSSpec(
+        src=spec.src,
+        mult=jnp.ones_like(spec.mult),
+        bias=spec.bias,
+    )
+    return w_folded, packed
 
 
 def oracle_expand(

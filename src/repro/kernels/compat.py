@@ -1,0 +1,17 @@
+"""Version shims for the Pallas TPU API.
+
+``TPUCompilerParams`` was renamed to ``CompilerParams`` in newer jax
+releases; the kernels target the new name and fall back here so they run on
+both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["compiler_params"]
+
+_CLS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def compiler_params(**kw):
+    return _CLS(**kw)

@@ -26,7 +26,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["dynamic_quant_kernel", "dynamic_quant"]
+__all__ = ["dynamic_quant_kernel", "dynamic_quant", "VMEM_BUDGET_BYTES"]
+
+# Per-program VMEM budget for the one-pass formulation: the [bm, K] f32 tile
+# plus the int8 output tile, double-buffered. ~16 MiB per core on v5e; keep
+# half for Mosaic scratch and the neighbouring kernels.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
 def _kernel(x_ref, q_ref, s_ref, *, qmax: float):
@@ -61,11 +66,32 @@ def dynamic_quant_kernel(
     )(x)
 
 
+def _dynamic_quant_xla(x: jnp.ndarray, bits: int):
+    """Two-pass XLA fallback (abs-max reduce, then quantize) for rows too
+    large to keep resident in VMEM. Delegates to the oracle so the rounding
+    stays in lockstep with the kernel by construction."""
+    from .ref import dynamic_quant_ref
+
+    return dynamic_quant_ref(x, bits)
+
+
 def dynamic_quant(
-    x: jnp.ndarray, *, bits: int = 8, bm: int = 128, interpret: bool = False
+    x: jnp.ndarray,
+    *,
+    bits: int = 8,
+    bm: int = 128,
+    interpret: bool = False,
+    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
 ):
-    """Shape-safe wrapper: pads M to the tile size, returns (q, scale [M])."""
+    """Shape-safe wrapper: pads M to the tile size, returns (q, scale [M]).
+
+    When the resident [bm, K] tile would blow the VMEM budget (K beyond
+    ~d_model scales), falls back to the two-pass XLA formulation — two HBM
+    reads of x instead of one, but correct at any K.
+    """
     m, k = x.shape
+    if 2 * bm * k * (x.dtype.itemsize + 1) > vmem_budget_bytes:
+        return _dynamic_quant_xla(x, bits)
     pad = (-m) % bm
     if pad:
         x = jnp.pad(x, ((0, pad), (0, 0)))

@@ -29,10 +29,14 @@ from __future__ import annotations
 import functools
 from typing import Optional
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .compat import compiler_params
 
 __all__ = ["ocs_matmul_kernel", "ocs_quant_matmul"]
 
@@ -116,7 +120,7 @@ def ocs_matmul_kernel(
         scratch_shapes=[
             pltpu.VMEM((bm, bn), jnp.int32 if int_path else jnp.float32)
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,
@@ -140,6 +144,7 @@ def ocs_quant_matmul(
     x_scale: Optional[jnp.ndarray] = None,
     *,
     tail_mult: Optional[jnp.ndarray] = None,
+    tail_is_mask: bool = False,
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
@@ -154,6 +159,12 @@ def ocs_quant_matmul(
     ``tail_mult``: optional per-duplicate multiplier (activation-OCS halves;
     weight-OCS leaves None = 1). Padding rows must carry mult 0 via
     ``tail_mult`` or map to a zero weight row.
+
+    On the int8 path ``tail_mult`` must be integer-safe: pass a *concrete*
+    0/1 array, or a traced one with the static flag ``tail_is_mask=True``
+    (the caller's declaration that every value is 0 or 1 — e.g. the
+    padding-row mask). Fractional multipliers need the offline weight
+    packing (:func:`repro.core.ocs.fold_expansion_mult`).
     """
     m, kdim = x.shape
     ke, n = w8.shape
@@ -168,11 +179,30 @@ def ocs_quant_matmul(
     x_tail = jnp.take(x, src_tail, axis=1)
     if tail_mult is not None:
         if int_path:
-            raise ValueError(
-                "tail_mult on the int8 path would need requantization; "
-                "fold activation-OCS halving into the weights instead"
-            )
-        x_tail = x_tail * tail_mult
+            # Integer-safe multipliers (0/1 masks — e.g. the padding-row
+            # mask) apply directly; fractional multipliers (activation-OCS
+            # halving) would need requantization, so they must be folded
+            # into the packed weight rows *offline* instead. Traced masks
+            # (the jitted ops dispatch) are accepted on the caller's static
+            # declaration ``tail_is_mask``.
+            if tail_is_mask:
+                x_tail = x_tail * tail_mult.astype(jnp.int8)
+            else:
+                try:
+                    tm = np.asarray(tail_mult)
+                except Exception:  # traced value: cannot prove integer-safety
+                    tm = None
+                if tm is not None and np.all((tm == 0.0) | (tm == 1.0)):
+                    x_tail = x_tail * jnp.asarray(tm, jnp.int8)
+                else:
+                    raise ValueError(
+                        "fractional (or traced) tail_mult on the int8 path "
+                        "would need requantization; pack the weights with "
+                        "repro.core.ocs.fold_expansion_mult (or declare a "
+                        "traced 0/1 mask with tail_is_mask=True)"
+                    )
+        else:
+            x_tail = x_tail * tail_mult
 
     xs = jnp.broadcast_to(jnp.asarray(x_scale, jnp.float32).reshape(-1, 1), (m, 1))
     ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, n))

@@ -16,10 +16,17 @@ import jax.numpy as jnp
 
 from . import ref
 from .dynamic_quant import dynamic_quant as _dynamic_quant_pallas
+from .fused_qmatmul import fused_quant_matmul as _fused_qmatmul_pallas
 from .ocs_matmul import ocs_quant_matmul as _ocs_matmul_pallas
 from .quant_matmul import quant_matmul as _quant_matmul_pallas
 
-__all__ = ["quant_matmul", "dynamic_quant", "ocs_quant_matmul", "backend_mode"]
+__all__ = [
+    "quant_matmul",
+    "dynamic_quant",
+    "ocs_quant_matmul",
+    "fused_quant_matmul",
+    "backend_mode",
+]
 
 
 def backend_mode(force: Optional[str] = None) -> str:
@@ -65,12 +72,39 @@ def dynamic_quant(x, *, bits: int = 8, force: Optional[str] = None):
     return _dynamic_quant_pallas(x, bits=bits, interpret=(mode == "interpret"))
 
 
-@functools.partial(jax.jit, static_argnames=("force", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("bits", "force", "out_dtype"))
+def fused_quant_matmul(
+    x, w8, w_scale, src_tail, *, bits: int = 8,
+    force: Optional[str] = None, out_dtype=None,
+):
+    """One-pass dynamic-quant + OCS-expanded W8A8 matmul (fused_qmatmul.py).
+
+    ``w8`` must be the *packed* expanded weights (see
+    ``repro.core.ocs.fold_expansion_mult``); the ref backend runs the same
+    numerics as three XLA passes.
+    """
+    mode = backend_mode(force)
+    if mode == "ref":
+        return ref.fused_quant_matmul_ref(x, w8, w_scale, src_tail, bits, out_dtype)
+    return _fused_qmatmul_pallas(
+        x, w8, w_scale, src_tail, bits=bits, out_dtype=out_dtype,
+        interpret=(mode == "interpret"),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tail_is_mask", "force", "out_dtype")
+)
 def ocs_quant_matmul(
     x, w8, w_scale, src_tail, x_scale=None, tail_mult=None,
-    *, force: Optional[str] = None, out_dtype=None,
+    *, tail_is_mask: bool = False, force: Optional[str] = None, out_dtype=None,
 ):
-    """Fused OCS-expansion matmul (see ocs_matmul.py)."""
+    """Fused OCS-expansion matmul (see ocs_matmul.py).
+
+    ``tail_is_mask`` (static) declares a traced ``tail_mult`` to be a 0/1
+    mask — required to use masks on the int8 path through this jitted
+    dispatch, where values cannot be inspected.
+    """
     mode = backend_mode(force)
     if mode == "ref":
         return ref.ocs_quant_matmul_ref(
@@ -78,5 +112,6 @@ def ocs_quant_matmul(
         )
     return _ocs_matmul_pallas(
         x, w8, w_scale, src_tail, x_scale, tail_mult=tail_mult,
-        out_dtype=out_dtype, interpret=(mode == "interpret"),
+        tail_is_mask=tail_is_mask, out_dtype=out_dtype,
+        interpret=(mode == "interpret"),
     )

@@ -4,7 +4,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["quant_matmul_ref", "dynamic_quant_ref", "ocs_gather_ref"]
+__all__ = [
+    "quant_matmul_ref",
+    "dynamic_quant_ref",
+    "ocs_gather_ref",
+    "fused_quant_matmul_ref",
+]
 
 
 def quant_matmul_ref(
@@ -49,6 +54,37 @@ def ocs_gather_ref(
 ) -> jnp.ndarray:
     """OCS channel-expansion oracle: y[m, c] = x[m, src[c]] * mult[c] + bias[c]."""
     return jnp.take(x, src, axis=-1) * mult + bias
+
+
+def fused_quant_matmul_ref(
+    x: jnp.ndarray,
+    w8: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    src_tail: jnp.ndarray,
+    bits: int = 8,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Oracle for the fused serving path: dynamic-quant -> expand -> int matmul.
+
+    x: [M, K] float; w8: [K+S, N] int8 *packed* expanded weights (activation
+    multipliers folded into the duplicate rows, padding rows zero — see
+    ``repro.core.ocs.fold_expansion_mult``); src_tail: [S] int32. The
+    activation scale is per-row over the K original channels; duplicates
+    reuse their source's quantized value (bit-exact with the kernel).
+    """
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    q, scale = dynamic_quant_ref(x, bits)
+    q_exp = jnp.concatenate([q, jnp.take(q, src_tail, axis=1)], axis=1) \
+        if src_tail.shape[0] else q
+    acc = jax.lax.dot_general(
+        q_exp, w8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    ws = jnp.asarray(w_scale, jnp.float32).reshape(1, -1)
+    # acc * (scale * ws): grouped like the kernel epilogue so the interpret-
+    # mode bit-equivalence test can assert exact equality (f32 product
+    # ordering matters at the ulp level).
+    return (acc.astype(jnp.float32) * (scale[:, None] * ws)).astype(out_dtype)
 
 
 def ocs_quant_matmul_ref(

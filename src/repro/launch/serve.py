@@ -42,6 +42,10 @@ def build_parser():
                     help="8 = int8 KV cache (see EXPERIMENTS.md §Perf C1)")
     ap.add_argument("--ocs-ratio", type=float, default=0.02)
     ap.add_argument("--clip", default="mse")
+    ap.add_argument("--matmul-mode", default="dequant",
+                    choices=["dequant", "w8a8"],
+                    help="w8a8 = dynamic per-row int8 activations "
+                         "(fused Pallas kernel under USE_PALLAS_SERVING)")
     ap.add_argument("--float-serve", action="store_true",
                     help="skip PTQ, serve float weights")
     ap.add_argument("--compare-float", action="store_true")
@@ -58,8 +62,11 @@ def _make_requests(n, vocab, rng, max_new):
     return reqs
 
 
-def serve_once(cfg, params, reqs, max_batch, max_len):
-    eng = ServingEngine(cfg, params, max_batch=max_batch, max_len=max_len)
+def serve_once(cfg, params, reqs, max_batch, max_len, matmul_mode="dequant"):
+    eng = ServingEngine(
+        cfg, params, max_batch=max_batch, max_len=max_len,
+        matmul_mode=matmul_mode,
+    )
     for r in reqs:
         eng.submit(r)
     t0 = time.time()
@@ -100,7 +107,10 @@ def main(argv=None):
         qparams = params
 
     reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new)
-    done, stats = serve_once(cfg, qparams, reqs, args.max_batch, args.max_len)
+    done, stats = serve_once(
+        cfg, qparams, reqs, args.max_batch, args.max_len,
+        matmul_mode=args.matmul_mode if not args.float_serve else "dequant",
+    )
     print(f"[serve] {stats}")
 
     if args.compare_float and not args.float_serve:

@@ -342,13 +342,17 @@ def attention_decode(
     window: int = 0,
     kv_prefix: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
 ):
-    """One-token decode. x: [B, 1, d]; pos: scalar current position.
+    """One-token decode. x: [B, 1, d]; pos: current position — a scalar
+    (all slots in lockstep) or a [B] vector (per-slot positions, the
+    continuous-batching engine's mixed-length admission).
 
     Returns (y [B,1,d], new_cache). Sliding-window layers use a ring buffer
     (cache length == window); new keys overwrite slot ``pos % window``.
     """
     b, _, _ = x.shape
     hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim > 0
     q = dense(params["wq"], x, name="attn_q").reshape(b, 1, h, hd)
     k = dense(params["wk"], x, name="attn_k").reshape(b, 1, kvh, hd)
     v = dense(params["wv"], x, name="attn_v").reshape(b, 1, kvh, hd)
@@ -356,9 +360,10 @@ def attention_decode(
         q = rms_norm(params["q_norm"], q, cfg.norm_eps)
         k = rms_norm(params["k_norm"], k, cfg.norm_eps)
     if cfg.mrope_sections is not None:
-        posq = jnp.broadcast_to(pos, (b, 1, 3))
+        src = pos[:, None, None] if per_slot else pos
+        posq = jnp.broadcast_to(src, (b, 1, 3))
     else:
-        posq = jnp.broadcast_to(pos, (b, 1))
+        posq = pos[:, None] if per_slot else jnp.broadcast_to(pos, (b, 1))
     q = apply_rope(q, posq, cfg.rope_theta, cfg.mrope_sections)
     k = apply_rope(k, posq, cfg.rope_theta, cfg.mrope_sections)
 
@@ -367,27 +372,44 @@ def attention_decode(
     int8_cache = cache["k"].dtype == jnp.int8
     k_t = jnp.swapaxes(k, 1, 2)  # [B, KV, 1, hd]
     v_t = jnp.swapaxes(v, 1, 2)
+
+    if per_slot:
+        # Per-slot write positions: one dynamic_update_slice per batch row
+        # (vmapped); XLA fuses these into a batched scatter, still in place.
+        upd4 = jax.vmap(
+            lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0))
+        )
+        upd3 = jax.vmap(
+            lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p))
+        )
+    else:
+        upd4 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p, 0))
+        upd3 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p))
     if int8_cache:
         k_q, k_s = _quant_rows(k_t)
         v_q, v_s = _quant_rows(v_t)
-        ck = jax.lax.dynamic_update_slice(cache["k"], k_q, (0, 0, slot, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v_q, (0, 0, slot, 0))
-        cks = jax.lax.dynamic_update_slice(cache["k_scale"], k_s, (0, 0, slot))
-        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], v_s, (0, 0, slot))
+        ck = upd4(cache["k"], k_q, slot)
+        cv = upd4(cache["v"], v_q, slot)
+        cks = upd3(cache["k_scale"], k_s, slot)
+        cvs = upd3(cache["v_scale"], v_s, slot)
     else:
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k_t.astype(cache["k"].dtype), (0, 0, slot, 0)
-        )
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v_t.astype(cache["v"].dtype), (0, 0, slot, 0)
-        )
+        ck = upd4(cache["k"], k_t.astype(cache["k"].dtype), slot)
+        cv = upd4(cache["v"], v_t.astype(cache["v"].dtype), slot)
     ck = logical(ck, "batch", "kv_heads", None, None)
     cv = logical(cv, "batch", "kv_heads", None, None)
 
     idx = jnp.arange(s_cache)
     # Ring buffer: every slot is valid once pos >= s_cache (wrapped); before
-    # that only slots [0, pos]. Dense cache: slots [0, pos].
-    valid = (idx <= pos) | jnp.full((s_cache,), bool(window), bool) & (pos >= s_cache)
+    # that only slots [0, pos]. Dense cache: slots [0, pos]. Per-slot pos
+    # broadcasts to a [B, S] mask.
+    if per_slot:
+        valid = (idx[None, :] <= pos[:, None]) | (
+            jnp.full((1, s_cache), bool(window), bool) & (pos[:, None] >= s_cache)
+        )
+    else:
+        valid = (idx <= pos) | jnp.full((s_cache,), bool(window), bool) & (
+            pos >= s_cache
+        )
     bias = jnp.where(valid, 0.0, NEG_INF)
 
     rep = h // kvh
@@ -407,7 +429,7 @@ def attention_decode(
         s = jnp.einsum(
             "bgrd,bgsd->bgrs", qf, ck, preferred_element_type=jnp.float32
         )
-    s = s + bias[None, None, None, :]
+    s = s + (bias[:, None, None, :] if per_slot else bias[None, None, None, :])
     if kv_prefix is not None:
         pk, pv = kv_prefix  # meta prefix: [B, M, KV, hd]
         sp = jnp.einsum(

@@ -15,6 +15,7 @@ the integer weights:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Union
 
 import jax
@@ -24,9 +25,37 @@ from repro.core.ocs import OCSQuantLinear, expand_activations
 from repro.core.quantizer import qmax
 from repro.core import actquant, tap
 
-__all__ = ["dense", "rms_norm", "layer_norm", "embed", "act_quant", "swiglu", "gelu"]
+__all__ = [
+    "dense",
+    "serving_mode",
+    "rms_norm",
+    "layer_norm",
+    "embed",
+    "act_quant",
+    "swiglu",
+    "gelu",
+]
 
 Weight = Union[jnp.ndarray, OCSQuantLinear]
+
+# Default matmul mode for OCSQuantLinear weights when the call site doesn't
+# pass ``mode`` explicitly (model code never does — attention/mlp/moe call
+# ``dense`` generically). The serving engine selects w8a8 for the whole
+# model via the ``serving_mode`` context manager around its traced steps.
+SERVING_MODE = "dequant"
+
+
+@contextlib.contextmanager
+def serving_mode(mode: str):
+    """Set the default quantized-matmul mode ('dequant' | 'w8a8') for every
+    ``dense`` call traced inside the context."""
+    global SERVING_MODE
+    prev = SERVING_MODE
+    SERVING_MODE = mode
+    try:
+        yield
+    finally:
+        SERVING_MODE = prev
 
 
 def _int8_matmul(x8, w8, out_scale, out_dtype):
@@ -46,6 +75,13 @@ def _int8_matmul(x8, w8, out_scale, out_dtype):
 USE_PALLAS_SERVING = False
 
 
+def _flat_w_scale(w: OCSQuantLinear) -> jnp.ndarray:
+    ws = w.weight.scale
+    if ws.ndim == 0:
+        return jnp.broadcast_to(ws, (w.weight.values.shape[-1],))
+    return ws.reshape(-1)
+
+
 def _pallas_ocs_matmul(w: OCSQuantLinear, x: jnp.ndarray) -> jnp.ndarray:
     from repro.kernels import ops as kops
 
@@ -53,37 +89,112 @@ def _pallas_ocs_matmul(w: OCSQuantLinear, x: jnp.ndarray) -> jnp.ndarray:
     x2 = x.reshape((-1, x.shape[-1]))
     src_tail = w.spec.src[w.n_orig:]
     mult_tail = w.spec.mult[w.n_orig:]
-    w_scale = w.weight.scale
-    if w_scale.ndim == 0:
-        w_scale = jnp.broadcast_to(w_scale, (w.weight.values.shape[-1],))
     y = kops.ocs_quant_matmul(
-        x2, w.weight.values, w_scale, src_tail, tail_mult=mult_tail,
+        x2, w.weight.values, _flat_w_scale(w), src_tail, tail_mult=mult_tail,
         out_dtype=x.dtype,
     )
     return y.reshape(lead + (y.shape[-1],))
 
 
-def dense(w: Weight, x: jnp.ndarray, *, name: str = "", mode: str = "dequant"):
-    """y = x @ w with quantization-aware dispatch. x: [..., Cin]."""
+def _pallas_fused_w8a8(w: OCSQuantLinear, x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """The fused serving fast path: one-pass dynamic-quant + OCS matmul."""
+    from repro.kernels import ops as kops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    src_tail = w.spec.src[w.n_orig:]
+    y = kops.fused_quant_matmul(
+        x2, w.weight.values, _flat_w_scale(w), src_tail, bits=bits,
+        out_dtype=x.dtype,
+    )
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def _check_packed(w: OCSQuantLinear) -> None:
+    """Best-effort guard for the dynamic-W8A8 contract: the expansion must be
+    pure duplication (mult folded into the weight rows, bias zero). Spec
+    arrays are concrete when ``dense`` runs eagerly or the weights are
+    closed over; traced specs (weights passed as jit arguments) cannot be
+    inspected and the packed contract is the caller's responsibility
+    (weight-OCS trees from ``quantize_params`` satisfy it by construction).
+    """
+    import numpy as np
+
+    try:
+        mult = np.asarray(w.spec.mult)
+        bias = np.asarray(w.spec.bias)
+    except Exception:  # tracer
+        return
+    # Pad rows carry mult 0 and map to zero weight rows — harmless either way.
+    if np.any((mult != 0.0) & (mult != 1.0)) or np.any(bias != 0.0):
+        raise ValueError(
+            "dynamic w8a8 needs packed expanded weights (pure duplication); "
+            "fold activation-OCS multipliers/biases into the rows with "
+            "repro.core.ocs.fold_expansion_mult before quantization"
+        )
+
+
+def _dynamic_w8a8_xla(w: OCSQuantLinear, x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pure-XLA dynamic W8A8: the sharded/dry-run fallback and the
+    interpret-mode oracle for the fused kernel (same numerics, three passes).
+
+    Quantize-then-duplicate: the per-row scale covers the K original
+    channels; ``spec.src`` copies already-quantized values (identity over
+    the originals, sources for the duplicates). Requires packed weights —
+    activation multipliers folded into the rows (weight-OCS specs are
+    packed by construction; see ``repro.core.ocs.fold_expansion_mult``).
+
+    The quantization itself is ``ref.dynamic_quant_ref`` — the single
+    source of the rounding numerics shared with the fused kernel.
+    """
+    from repro.kernels.ref import dynamic_quant_ref
+
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    q, a_s = dynamic_quant_ref(x2, bits)
+    q_exp = jnp.take(q, w.spec.src, axis=-1)
+    out_scale = w.weight.scale * a_s[:, None].reshape(lead + (1,))
+    return _int8_matmul(
+        q_exp.reshape(lead + (q_exp.shape[-1],)), w.weight.values,
+        out_scale, x.dtype,
+    )
+
+
+def dense(w: Weight, x: jnp.ndarray, *, name: str = "", mode: Optional[str] = None):
+    """y = x @ w with quantization-aware dispatch. x: [..., Cin].
+
+    ``mode`` (defaults to the ambient :data:`SERVING_MODE`):
+
+    * ``dequant`` — int weights dequantized into the compute dtype;
+    * ``w8a8``   — int8 x int8 -> int32. With a calibrated ``a_scale`` the
+      static grid is used (paper Tables 3/4); otherwise activations are
+      dynamically quantized per row — through the fused Pallas kernel under
+      :data:`USE_PALLAS_SERVING`, or the XLA chain elsewhere.
+    """
     if isinstance(w, OCSQuantLinear):
         tap.tag(name, x)
-        if (
-            USE_PALLAS_SERVING
-            and mode == "dequant"
-            and w.weight.values.ndim == 2
-            and jnp.asarray(w.spec.bias).ndim == 1
-        ):
+        if mode is None:
+            mode = SERVING_MODE
+        two_d = w.weight.values.ndim == 2 and jnp.asarray(w.spec.mult).ndim == 1
+        if mode == "w8a8":
+            if w.a_bits is not None and w.a_scale is not None:
+                # Static (calibrated) activation grid -> int8.
+                xe = expand_activations(x, w.spec)
+                a_s = w.a_scale
+                x8 = jnp.clip(
+                    jnp.floor(xe / a_s + 0.5), -qmax(w.a_bits), qmax(w.a_bits)
+                ).astype(jnp.int8)
+                # w scale is broadcast-ready ([,1,1] per-tensor or [,1,Cout]).
+                out_scale = w.weight.scale * a_s
+                return _int8_matmul(x8, w.weight.values, out_scale, x.dtype)
+            bits = w.a_bits if w.a_bits is not None else 8
+            _check_packed(w)
+            if USE_PALLAS_SERVING and two_d:
+                return _pallas_fused_w8a8(w, x, bits)
+            return _dynamic_w8a8_xla(w, x, bits)
+        if USE_PALLAS_SERVING and mode == "dequant" and two_d:
             return _pallas_ocs_matmul(w, x)
         xe = expand_activations(x, w.spec)
-        if mode == "w8a8" and w.a_bits is not None and w.a_scale is not None:
-            # Static (calibrated) activation grid -> int8; weights already int.
-            a_s = w.a_scale
-            x8 = jnp.clip(
-                jnp.floor(xe / a_s + 0.5), -qmax(w.a_bits), qmax(w.a_bits)
-            ).astype(jnp.int8)
-            # w scale is broadcast-ready ([,1,1] per-tensor or [,1,Cout]).
-            out_scale = w.weight.scale * a_s
-            return _int8_matmul(x8, w.weight.values, out_scale, x.dtype)
         wf = w.weight.dequant(x.dtype)
         return xe.astype(x.dtype) @ wf
     tap.tag(name, x)

@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.sharding.compat import shard_map
 from repro.sharding.specs import activation_rules, logical
 from .layers import dense
 
@@ -257,7 +258,7 @@ def _moe_sharded(params, xf, cfg: ModelConfig, mesh, batch_axes, model_ax,
     axis_names = set(batch_axes) | {model_ax} | (
         {fsdp_ax} if fsdp_ax else set()
     )
-    return jax.shard_map(
+    return shard_map(
         inner,
         mesh=mesh,
         in_specs=(P(batch_spec, None), P(batch_spec, None), P(batch_spec, None),

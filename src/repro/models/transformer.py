@@ -137,25 +137,34 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
 # Block forward (full sequence)
 
 
-def _block(cfg: ModelConfig, p, x, positions, layer_flag=None):
+def _block(cfg: ModelConfig, p, x, positions, layer_flag=None, *, return_kv=False):
     """One layer, full sequence.
 
     ``layer_flag``: hymba is-global switch — a static bool when layers run
     in homogeneous segments (enables the statically-skipped window path in
     attention), or a traced bool under a mixed scan (decode fallback).
+    ``return_kv`` (dense/moe only): also return this layer's post-RoPE K/V
+    — the chunked-prefill cache build reuses the exact forward body.
     """
     kind = "full" if not cfg.causal else "causal"
-    if cfg.block == "dense":
+    if cfg.block in ("dense", "moe"):
         h = _norm(cfg, p["norm1"], x)
-        x = x + attention(p["attn"], h, cfg, positions=positions, kind=kind)
+        a = attention(
+            p["attn"], h, cfg, positions=positions, kind=kind,
+            return_kv=return_kv,
+        )
+        kv = None
+        if return_kv:
+            a, kv = a
+        x = x + a
         h = _norm(cfg, p["norm2"], x)
-        x = x + mlp(p["mlp"], h, cfg)
-    elif cfg.block == "moe":
-        h = _norm(cfg, p["norm1"], x)
-        x = x + attention(p["attn"], h, cfg, positions=positions, kind=kind)
-        h = _norm(cfg, p["norm2"], x)
-        x = x + moe(p["moe"], h, cfg)
-    elif cfg.block == "mamba2":
+        x = x + (
+            moe(p["moe"], h, cfg) if cfg.block == "moe" else mlp(p["mlp"], h, cfg)
+        )
+        return (x, kv) if return_kv else x
+    if return_kv:
+        raise NotImplementedError(f"return_kv: attention blocks only, got {cfg.block}")
+    if cfg.block == "mamba2":
         h = _norm(cfg, p["norm1"], x)
         x = x + mamba2(p["ssm"], h, cfg)
     elif cfg.block == "hymba":
@@ -293,7 +302,7 @@ def loss_fn(
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    """Per-layer decode caches (+ scalar position).
+    """Per-layer decode caches (+ per-slot position vector [batch]).
 
     Caches are a *list of per-layer trees*, not stacked [L, ...] arrays:
     decode unrolls the layer loop so every cache tensor is updated by exactly
@@ -310,7 +319,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
                 {"attn": init_kv_cache(cfg, batch, max_len, dtype=dtype)}
                 for _ in range(cfg.n_layers)
             ],
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     if cfg.block == "mamba2":
         return {
@@ -318,7 +327,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
                 {"ssm": init_ssm_cache(cfg, batch, dtype=dtype)}
                 for _ in range(cfg.n_layers)
             ],
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
     if cfg.block == "hymba":
         flags = np.zeros(cfg.n_layers, bool)
@@ -339,7 +348,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
                     "ssm": init_ssm_cache(cfg, batch, dtype=dtype),
                 }
             )
-        return {"layers": caches, "pos": jnp.zeros((), jnp.int32)}
+        return {"layers": caches, "pos": jnp.zeros((batch,), jnp.int32)}
     raise ValueError(cfg.block)
 
 
@@ -421,14 +430,91 @@ def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
 
 
 def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, max_len: int):
-    """Run the full prompt, return (last logits, caches ready for decode).
+    """Run the full prompt, return last-token logits (no cache build).
 
-    Implemented as forward + cache construction for attention archs; for
-    SSM/hybrid archs the chunked scan returns the final state directly.
-    For the dry-run shapes only ``forward`` (prefill compute) matters.
+    For the dry-run shapes only ``forward`` (prefill compute) matters; the
+    serving engine uses :func:`prefill_with_cache`.
     """
     logits = forward(params, tokens, cfg)
     return logits[:, -1, :]
+
+
+def _write_kv(cache, k, v):
+    """Write full-sequence K/V [B, S, KV, hd] into the first S slots of a
+    decode cache layout [B, KV, S_cache, hd] (int8-quantizing per token when
+    the cache is int8). Positions beyond the real prompt length hold
+    pad-token K/V — invisible to decode, which masks on the per-slot
+    position."""
+    from .attention import _quant_rows
+
+    k_t = jnp.swapaxes(k, 1, 2)  # [B, KV, S, hd]
+    v_t = jnp.swapaxes(v, 1, 2)
+    s = k_t.shape[2]
+    if cache["k"].dtype == jnp.int8:
+        k_q, k_s = _quant_rows(k_t)
+        v_q, v_s = _quant_rows(v_t)
+        return {
+            "k": cache["k"].at[:, :, :s, :].set(k_q),
+            "v": cache["v"].at[:, :, :s, :].set(v_q),
+            "k_scale": cache["k_scale"].at[:, :, :s].set(k_s),
+            "v_scale": cache["v_scale"].at[:, :, :s].set(v_s),
+        }
+    return {
+        "k": cache["k"].at[:, :, :s, :].set(k_t.astype(cache["k"].dtype)),
+        "v": cache["v"].at[:, :, :s, :].set(v_t.astype(cache["v"].dtype)),
+    }
+
+
+def prefill_with_cache(
+    params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    max_len: int,
+    *,
+    length: Optional[jnp.ndarray] = None,
+    cache_dtype=jnp.float32,
+):
+    """True chunked prefill: one full-sequence forward that also materializes
+    decode-ready KV caches — O(1) jitted calls per prompt instead of the
+    O(prompt_len) decode-step replay.
+
+    tokens: [B, S_pad] int32, zero-padded to the jit bucket; ``length``
+    (scalar or [B]) is the real prompt length — logits are taken at
+    ``length - 1`` and the returned cache's per-slot ``pos`` starts there.
+    Attention blocks only (dense/moe): SSM and hybrid blocks carry conv/SSD
+    states that the full-sequence scan does not expose in cache layout; the
+    engine keeps the decode-replay fallback for those.
+    """
+    if cfg.block not in ("dense", "moe"):
+        raise NotImplementedError(f"chunked prefill: attention archs only, got {cfg.block}")
+    b, s = tokens.shape
+    if length is None:
+        length = jnp.full((b,), s, jnp.int32)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+
+    x = embed(params["embed"], tokens)
+    x = logical(x, "batch", "seq", "embed")
+    positions = _positions(cfg, b, s)
+    caches = init_cache(cfg, b, max_len, dtype=cache_dtype)
+
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["layers"])
+        # The exact forward body (_block) — chunked prefill cannot drift
+        # from forward/decode_step structure.
+        x, (k, v) = _block(cfg, p, x, positions, return_kv=True)
+        caches["layers"][i]["attn"] = _write_kv(caches["layers"][i]["attn"], k, v)
+
+    caches["pos"] = length
+    x = _norm(cfg, params["final_norm"], x)
+    # Project only the last real token through the lm_head: the vocab dim is
+    # the widest output in the model, so a full [B, S, V] projection would
+    # waste (S-1)/S of the prefill's largest matmul.
+    last_h = jnp.take_along_axis(
+        x, (length - 1)[:, None, None].astype(jnp.int32), axis=1
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = dense(head, last_h, name="lm_head")[:, 0, :]
+    return logical(last, "batch", "vocab"), caches
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.sharding.compat import shard_map
+
 __all__ = ["CompressionState", "init_compression", "compressed_psum", "pod_allreduce"]
 
 
@@ -68,7 +70,12 @@ def pod_allreduce(
     Returns (averaged grads, new CompressionState). Must be called in a
     context where ``axis`` is a manual (shard_map) mesh axis.
     """
-    n = jax.lax.axis_size(axis)
+    # lax.axis_size is a newer alias; psum(1) is the portable spelling.
+    n = (
+        jax.lax.axis_size(axis)
+        if hasattr(jax.lax, "axis_size")
+        else jax.lax.psum(1, axis)
+    )
 
     def one(g, e):
         v = g.astype(jnp.float32) + e
@@ -96,7 +103,7 @@ def compressed_psum(
     automatic so the leaves keep their FSDP/TP shardings.
     """
     fn = partial(pod_allreduce, axis=axis, bits=bits)
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(), P()),

@@ -10,28 +10,39 @@ float model in low precision. This engine is that provider's serving loop:
   jitted ``decode_step``; finished sequences free their slot immediately and
   the next queued request is *hot-swapped in* (continuous batching) by
   writing its prefilled KV into the slot;
-* **prefill** — runs as its own jitted call per admitted request (chunked
-  attention keeps memory linear in prompt length);
+* **prefill** — *chunked*: the whole prompt (zero-padded to a pow2 bucket)
+  runs through one jitted :func:`repro.models.transformer.prefill_with_cache`
+  call — O(1) jitted calls per request, one compile per bucket (the
+  ``_prefill_cache``). SSM/hybrid blocks fall back to decode-step replay
+  (their conv/SSD decode states are not exposed by the full-sequence scan);
+* **positions** — per-slot: ``caches["pos"]`` is a ``[max_batch]`` vector, so
+  mixed-length admission decodes with exact causal masks and RoPE phases
+  (no global-position approximation);
 * **caches** — per-slot KV/SSM caches allocated once at engine start; a
   request writes its prefill KV into its slot, decode appends in place
-  (donated buffers).
+  (donated buffers);
+* **matmul_mode** — ``dequant`` (weight-only int8) or ``w8a8`` (dynamic
+  per-row activation quant; routes through the fused Pallas kernel when
+  ``repro.models.layers.USE_PALLAS_SERVING`` is on).
 
 The engine is deliberately synchronous and deterministic (greedy argmax) —
-batching policy, not sampling, is what the systems layer exercises. On the
-CPU container it serves the smoke configs; the same engine drives the
-full configs on a pod (decode_32k / long_500k dry-run shapes).
+batching policy, not sampling, is what the systems layer exercises. Trace
+counters (``prefill_traces`` / ``decode_traces`` bump only while jit is
+tracing) let benchmarks assert the compile story: a request must cost O(1)
+jitted calls, not O(prompt_len).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import layers
 from repro.models import transformer as T
 
 __all__ = ["Request", "ServingEngine"]
@@ -64,13 +75,17 @@ class ServingEngine:
         *,
         max_batch: int = 8,
         max_len: int = 512,
+        matmul_mode: str = "dequant",
     ):
         if not cfg.causal:
             raise ValueError("encoder-only arch: no decode serving")
+        if matmul_mode not in ("dequant", "w8a8"):
+            raise ValueError(f"matmul_mode must be dequant|w8a8, got {matmul_mode}")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.matmul_mode = matmul_mode
         self.slots = [_Slot() for _ in range(max_batch)]
         self.queue: List[Request] = []
         self.done: List[Request] = []
@@ -78,15 +93,32 @@ class ServingEngine:
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.steps = 0
         self.decoded_tokens = 0
+        # Perf counters (the serving benchmark's raw data). Throughput is
+        # computed from *warm* time/tokens only: calls that triggered a jit
+        # trace are booked under *_compile_s so BENCH numbers track kernels,
+        # not XLA compile noise.
+        self.prefill_calls = 0  # jitted calls spent on prefill
+        self.prefill_requests = 0
+        self.prefill_tokens = 0
+        self.prefill_tokens_warm = 0
+        self.prefill_time_s = 0.0  # warm prefill wall time
+        self.prefill_compile_s = 0.0
+        self.decode_time_s = 0.0  # warm decode wall time
+        self.decode_compile_s = 0.0
+        self.decode_tokens_warm = 0
+        self.prefill_traces = 0  # distinct prefill compilations (buckets)
+        self.decode_traces = 0
 
         self._decode = jax.jit(lambda p, c, t: self._decode_impl(p, c, t))
         # Prefill jits per prompt-length bucket (pow2 padding bounds recompiles).
-        self._prefill_cache: Dict[int, object] = {}
+        self._prefill_cache: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------- internals
 
     def _decode_impl(self, params, caches, token):
-        logits, new_caches = T.decode_step(params, token, caches, self.cfg)
+        self.decode_traces += 1  # python side effect: runs only while tracing
+        with layers.serving_mode(self.matmul_mode):
+            logits, new_caches = T.decode_step(params, token, caches, self.cfg)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return nxt, new_caches
 
@@ -96,17 +128,60 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_len)
 
+    def _prefill_fn(self, bucket: int) -> Callable:
+        fn = self._prefill_cache.get(bucket)
+        if fn is None:
+
+            def impl(params, tokens, length):
+                self.prefill_traces += 1
+                with layers.serving_mode(self.matmul_mode):
+                    logits, scratch = T.prefill_with_cache(
+                        params, tokens, self.cfg, self.max_len,
+                        length=length, cache_dtype=jnp.float32,
+                    )
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), scratch
+
+            fn = jax.jit(impl)
+            self._prefill_cache[bucket] = fn
+        return fn
+
     def _run_prefill(self, prompt: np.ndarray):
-        """Returns per-token forward of the (padded) prompt -> (next_token,
-        K/V tensors per layer) by replaying the prompt through decode_step on
-        a scratch single-slot cache. Simple and exactly consistent with the
-        decode path (one code path for cache layout)."""
-        scratch = T.init_cache(self.cfg, 1, self.max_len, dtype=jnp.float32)
-        tok = jnp.asarray(prompt, jnp.int32)[None, :]
-        nxt = None
-        for i in range(tok.shape[1]):
-            nxt, scratch = self._decode(self.params, scratch, tok[:, i : i + 1])
-        return int(nxt[0, 0]), scratch
+        """Prompt -> (first generated token, single-slot scratch caches).
+
+        Attention archs: chunked prefill — the padded prompt runs in ONE
+        jitted call per request. SSM/hybrid archs: decode-step replay (one
+        jitted call per token; exactly consistent with the decode path).
+        """
+        n = len(prompt)
+        self._validate_prompt_len(n)  # backstop; submit() already rejected
+        traces0 = self.prefill_traces + self.decode_traces
+        t0 = time.perf_counter()
+        if self.cfg.block in ("dense", "moe"):
+            bucket = self._prefill_bucket(n)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :n] = prompt
+            nxt, scratch = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32)
+            )
+            self.prefill_calls += 1
+            first = int(nxt[0])
+        else:
+            scratch = T.init_cache(self.cfg, 1, self.max_len, dtype=jnp.float32)
+            tok = jnp.asarray(prompt, jnp.int32)[None, :]
+            nxt = None
+            for i in range(tok.shape[1]):
+                nxt, scratch = self._decode(self.params, scratch, tok[:, i : i + 1])
+                self.prefill_calls += 1
+            first = int(nxt[0, 0])
+        elapsed = time.perf_counter() - t0
+        self.prefill_requests += 1
+        self.prefill_tokens += n
+        if self.prefill_traces + self.decode_traces > traces0:
+            self.prefill_compile_s += elapsed  # first hit of a bucket/shape
+        else:
+            self.prefill_time_s += elapsed
+            self.prefill_tokens_warm += n
+        return first, scratch
 
     def _install(self, slot_idx: int, req: Request):
         first, scratch = self._run_prefill(np.asarray(req.prompt, np.int64))
@@ -125,21 +200,27 @@ class ServingEngine:
         scr_layers = scratch["layers"]
         for li in range(len(eng_layers)):
             eng_layers[li] = jax.tree.map(put, eng_layers[li], scr_layers[li])
-        # Position: engine decodes all slots at a common pos; a fresh slot
-        # starts at the prompt length. For simplicity the engine requires
-        # equal-length admission *or* tolerates pos skew via causal masking
-        # against per-slot lengths baked into the cache contents (unwritten
-        # cache rows are zero K/V => near-zero attention weight). Production
-        # engines keep per-slot positions; we keep the max.
-        self.caches["pos"] = jnp.maximum(
-            self.caches["pos"], jnp.asarray(len(req.prompt), jnp.int32)
-        )
+        # Per-slot position: this slot resumes exactly at its prompt length;
+        # other slots are untouched (mixed-length admission is exact).
+        self.caches["pos"] = self.caches["pos"].at[slot_idx].set(scratch["pos"][0])
         self.tokens = self.tokens.at[slot_idx, 0].set(first)
         self.slots[slot_idx] = _Slot(req=req, remaining=req.max_new_tokens - 1)
 
     # ------------------------------------------------------------------ API
 
+    def _validate_prompt_len(self, n: int) -> None:
+        if n == 0:
+            raise ValueError("empty prompt: nothing to prefill")
+        if n + 1 > self.max_len:
+            raise ValueError(
+                f"prompt length {n} needs at least one decode slot beyond it; "
+                f"engine max_len is {self.max_len}"
+            )
+
     def submit(self, req: Request):
+        # Reject here, not at admission: a bad request raised mid-run would
+        # abort the engine loop and strand every in-flight sequence.
+        self._validate_prompt_len(len(req.prompt))
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
@@ -154,9 +235,18 @@ class ServingEngine:
         self._admit()
         if not any(s.req for s in self.slots):
             return False
+        n_active = sum(1 for s in self.slots if s.req)
+        traces0 = self.decode_traces
+        t0 = time.perf_counter()
         nxt, self.caches = self._decode(self.params, self.caches, self.tokens)
         self.steps += 1
-        nxt_np = np.asarray(nxt)
+        nxt_np = np.asarray(nxt)  # sync point: decode step fully retired
+        elapsed = time.perf_counter() - t0
+        if self.decode_traces > traces0:
+            self.decode_compile_s += elapsed
+        else:
+            self.decode_time_s += elapsed
+            self.decode_tokens_warm += n_active
         for i, slot in enumerate(self.slots):
             if slot.req is None:
                 continue
@@ -184,9 +274,42 @@ class ServingEngine:
         lat = [
             r.t_done - r.t_submit for r in self.done if r.t_done and r.t_submit
         ]
+        ttft = [
+            r.t_first_token - r.t_submit
+            for r in self.done
+            if r.t_first_token and r.t_submit
+        ]
         return {
             "completed": len(self.done),
             "decode_steps": self.steps,
             "decoded_tokens": self.decoded_tokens,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "prefill_tokens": self.prefill_tokens,
+            "prefill_time_s": self.prefill_time_s,
+            "prefill_compile_s": self.prefill_compile_s,
+            # Warm-only throughput: compile calls are excluded so the number
+            # tracks kernels across PRs, not jit noise. 0.0 when every call
+            # hit a fresh bucket (e.g. a single-request run).
+            "prefill_tok_per_s": (
+                self.prefill_tokens_warm / self.prefill_time_s
+                if self.prefill_time_s > 0
+                else 0.0
+            ),
+            "decode_time_s": self.decode_time_s,
+            "decode_compile_s": self.decode_compile_s,
+            "decode_tok_per_s": (
+                self.decode_tokens_warm / self.decode_time_s
+                if self.decode_time_s > 0
+                else 0.0
+            ),
+            "prefill_calls": self.prefill_calls,
+            "prefill_requests": self.prefill_requests,
+            "prefill_calls_per_request": (
+                self.prefill_calls / self.prefill_requests
+                if self.prefill_requests
+                else 0.0
+            ),
+            "prefill_traces": self.prefill_traces,
+            "decode_traces": self.decode_traces,
         }

@@ -1,0 +1,42 @@
+"""Version shim for shard_map.
+
+The code targets the stable ``jax.shard_map`` API (``axis_names`` names the
+manually-mapped axes, ``check_vma`` the varying-mesh-axes check). Older jax
+releases only have ``jax.experimental.shard_map.shard_map`` whose knobs are
+inverted: ``auto`` names the axes that STAY automatic and ``check_rep`` is
+the (stricter) replication check. This wrapper translates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Set
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(
+    f,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[Set[str]] = None,
+    check_vma: bool = True,
+):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=axis_names, check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    auto = (
+        frozenset(mesh.axis_names) - frozenset(axis_names)
+        if axis_names is not None
+        else frozenset()
+    )
+    return _legacy(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=bool(check_vma), auto=auto,
+    )

@@ -1,0 +1,267 @@
+"""Fused dynamic-quant + OCS matmul kernel vs the reference composition.
+
+The acceptance bar (ISSUE 1): interpret-mode *bit-equivalence* against the
+explicit ``dynamic_quant_ref -> expand -> int8 matmul`` chain across OCS
+ratios {0, 0.01, 0.05}, K in {128, 384, 1000 (unaligned)}, and both
+per-tensor / per-channel weight scales. Integer paths must match exactly;
+the only float ops (scale derivation, epilogue) are grouped identically on
+both sides, so equality is bitwise, not allclose.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ocs import fold_expansion_mult, make_ocs_quant_linear
+from repro.kernels import ref
+from repro.kernels.fused_qmatmul import fused_quant_matmul
+from repro.kernels.ocs_matmul import ocs_quant_matmul
+
+RNG = np.random.RandomState(1234)
+
+
+@jax.jit
+def _oracle(x, w8, ws, src_tail):
+    """The reference composition, spelled out: dynamic-quant -> expand ->
+    int8 matmul -> f32 epilogue (scale grouping matches the kernel)."""
+    q, scale = ref.dynamic_quant_ref(x, 8)
+    q_exp = jnp.concatenate([q, jnp.take(q, src_tail, axis=1)], axis=1)
+    acc = jax.lax.dot_general(
+        q_exp, w8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return acc.astype(jnp.float32) * (scale[:, None] * ws.reshape(1, -1))
+
+
+def _case(k: int, ratio: float, per_channel: bool, m: int = 48):
+    """A real OCS split (layout invariant from repro.core.ocs) + activations."""
+    rng = np.random.RandomState(k * 7 + int(ratio * 1000) + per_channel)
+    n = 72 if k == 1000 else 64
+    w = rng.randn(k, n).astype(np.float32)
+    w[rng.randint(0, k, 4), rng.randint(0, n, 4)] *= 9.0  # outliers to split
+    lin = make_ocs_quant_linear(w, ratio, 8, per_channel=per_channel, pad_to=32)
+    x = jnp.asarray(rng.randn(m, k) * 2.5, jnp.float32)
+    src_tail = lin.spec.src[k:]
+    ws = lin.weight.scale
+    if ws.ndim == 0:
+        ws = jnp.broadcast_to(ws, (lin.weight.values.shape[-1],))
+    return x, lin.weight.values, ws, src_tail
+
+
+@pytest.mark.parametrize("ratio", [0.0, 0.01, 0.05])
+@pytest.mark.parametrize("k", [128, 384, 1000])
+@pytest.mark.parametrize("per_channel", [False, True])
+def test_fused_bit_equivalence(ratio, k, per_channel):
+    x, w8, ws, src_tail = _case(k, ratio, per_channel)
+    got = fused_quant_matmul(x, w8, ws, src_tail, interpret=True)
+    want = _oracle(x, w8, ws, src_tail)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_bf16_input():
+    x, w8, ws, src_tail = _case(384, 0.05, False)
+    xb = x.astype(jnp.bfloat16)
+    got = fused_quant_matmul(xb, w8, ws, src_tail, interpret=True)
+    want = _oracle(xb, w8, ws, src_tail)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fused_vmem_fallback_matches_kernel():
+    """Tiny budget -> XLA composition; must equal the kernel bitwise."""
+    x, w8, ws, src_tail = _case(384, 0.05, True)
+    kern = fused_quant_matmul(x, w8, ws, src_tail, interpret=True)
+    # Jit the fallback too: eager-vs-compiled XLA flips scale ulps (the
+    # divide -> reciprocal rewrite); production always runs it jitted.
+    xla = jax.jit(
+        lambda *a: fused_quant_matmul(*a, vmem_budget_bytes=1)
+    )(x, w8, ws, src_tail)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(xla))
+
+
+def test_fused_scale_over_original_channels_only():
+    """Duplicates must not vote in the row abs-max: put the global max in a
+    split channel and check the scale is max|x|/127 over K, not K+S."""
+    x, w8, ws, src_tail = _case(128, 0.05, False)
+    got = fused_quant_matmul(x, w8, ws, src_tail, interpret=True)
+    want = _oracle(x, w8, ws, src_tail)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(src_tail.shape[0]) > 0  # the case really exercises the tail
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch + dense wiring
+
+
+def test_ops_fused_dispatch_cpu_ref():
+    from repro.kernels import ops
+
+    x, w8, ws, src_tail = _case(128, 0.05, False)
+    y = ops.fused_quant_matmul(x, w8, ws, src_tail)
+    want = _oracle(x, w8, ws, src_tail)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=1e-6)
+
+
+def test_dense_w8a8_fused_wiring():
+    """dense(mode='w8a8') under USE_PALLAS_SERVING == the XLA dynamic chain."""
+    from repro.models import layers
+
+    rng = np.random.RandomState(5)
+    w = rng.randn(96, 64).astype(np.float32)
+    w[3, 5] = 9.0
+    lin = make_ocs_quant_linear(w, 0.03, 8, per_channel=True, pad_to=32)
+    x = jnp.asarray(rng.randn(4, 96), jnp.float32)
+    y_xla = layers.dense(lin, x, mode="w8a8")
+    layers.USE_PALLAS_SERVING = True
+    try:
+        y_fused = layers.dense(lin, x, mode="w8a8")
+    finally:
+        layers.USE_PALLAS_SERVING = False
+    np.testing.assert_allclose(
+        np.asarray(y_xla), np.asarray(y_fused), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_dense_w8a8_rejects_unpacked_spec():
+    """Dynamic w8a8 on an unpacked activation-OCS layer (mult=0.5 rows not
+    folded) must refuse loudly, not silently double the split channels."""
+    from repro.core.histogram import ChannelStats
+    from repro.core.ocs import (
+        OCSQuantLinear,
+        duplicate_weight_rows,
+        split_activations_spec,
+    )
+    from repro.core.quantizer import quantize_tensor
+    from repro.models import layers
+
+    rng = np.random.RandomState(13)
+    c = 32
+    stats = ChannelStats(c)
+    stats.update(np.abs(rng.randn(128, c)) * (1 + np.arange(c)))
+    spec = split_activations_spec(stats, 0.1)
+    w_exp = duplicate_weight_rows(jnp.asarray(rng.randn(c, 16), jnp.float32), spec)
+    lin = OCSQuantLinear(
+        weight=quantize_tensor(w_exp, 8), spec=spec, n_orig=c
+    )
+    x = jnp.asarray(rng.randn(4, c), jnp.float32)
+    with pytest.raises(ValueError, match="fold_expansion_mult"):
+        layers.dense(lin, x, mode="w8a8")
+
+
+def test_dense_serving_mode_context():
+    from repro.models import layers
+
+    rng = np.random.RandomState(6)
+    w = rng.randn(64, 32).astype(np.float32)
+    lin = make_ocs_quant_linear(w, 0.02, 8, pad_to=32)
+    x = jnp.asarray(rng.randn(4, 64), jnp.float32)
+    y_deq = layers.dense(lin, x)
+    with layers.serving_mode("w8a8"):
+        y_int = layers.dense(lin, x)
+    assert layers.SERVING_MODE == "dequant"  # restored
+    # Both are ~the float product; w8a8 differs by activation-quant noise.
+    assert not np.array_equal(np.asarray(y_deq), np.asarray(y_int))
+    np.testing.assert_allclose(
+        np.asarray(y_deq), np.asarray(y_int), rtol=0.2, atol=0.2
+    )
+
+
+# ---------------------------------------------------------------------------
+# tail_mult lift + fold_expansion_mult
+
+
+def test_int_path_mask_tail_mult_accepted():
+    """0/1 masks (padding rows) now work on the int8 path."""
+    rng = np.random.RandomState(9)
+    m, k, n, s = 16, 64, 32, 8
+    x8 = jnp.asarray(rng.randint(-127, 128, (m, k)), jnp.int8)
+    w8 = jnp.asarray(rng.randint(-127, 128, (k + s, n)), jnp.int8)
+    src = jnp.asarray(rng.randint(0, k, (s,)), jnp.int32)
+    ws = jnp.asarray(rng.rand(n) + 0.05, jnp.float32)
+    mask = jnp.asarray(rng.choice([0.0, 1.0], s), jnp.float32)
+    got = ocs_quant_matmul(x8, w8, ws, src, tail_mult=mask, interpret=True)
+    want = ref.ocs_quant_matmul_ref(x8, w8, ws, src, None, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_int_path_mask_through_jitted_ops_dispatch():
+    """The mask lift must be reachable where product code calls it: through
+    the jitted ops wrapper, where tail_mult is a tracer (tail_is_mask)."""
+    from repro.kernels import ops
+
+    rng = np.random.RandomState(12)
+    m, k, n, s = 8, 64, 32, 8
+    x8 = jnp.asarray(rng.randint(-127, 128, (m, k)), jnp.int8)
+    w8 = jnp.asarray(rng.randint(-127, 128, (k + s, n)), jnp.int8)
+    src = jnp.asarray(rng.randint(0, k, (s,)), jnp.int32)
+    ws = jnp.asarray(rng.rand(n) + 0.05, jnp.float32)
+    mask = jnp.asarray(rng.choice([0.0, 1.0], s), jnp.float32)
+    got = ops.ocs_quant_matmul(
+        x8, w8, ws, src, tail_mult=mask, tail_is_mask=True, force="interpret"
+    )
+    want = ref.ocs_quant_matmul_ref(x8, w8, ws, src, None, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_int_path_fractional_tail_mult_raises():
+    rng = np.random.RandomState(10)
+    x8 = jnp.asarray(rng.randint(-127, 128, (8, 64)), jnp.int8)
+    w8 = jnp.asarray(rng.randint(-127, 128, (68, 32)), jnp.int8)
+    src = jnp.asarray(rng.randint(0, 64, (4,)), jnp.int32)
+    ws = jnp.asarray(0.5, jnp.float32)
+    with pytest.raises(ValueError, match="fold_expansion_mult"):
+        ocs_quant_matmul(
+            x8, w8, ws, src,
+            tail_mult=jnp.full((4,), 0.5, jnp.float32), interpret=True,
+        )
+
+
+def test_fold_expansion_mult_equivalence():
+    """Folding activation-OCS halving into the rows preserves the product."""
+    from repro.core.histogram import ChannelStats
+    from repro.core.ocs import (
+        duplicate_weight_rows,
+        expand_activations,
+        split_activations_spec,
+    )
+
+    rng = np.random.RandomState(11)
+    c, n, m = 32, 16, 8
+    x = jnp.asarray(rng.randn(m, c), jnp.float32)
+    w = jnp.asarray(rng.randn(c, n), jnp.float32)
+    stats = ChannelStats(c)
+    stats.update(np.abs(rng.randn(256, c)) * (1 + np.arange(c)))
+    spec = split_activations_spec(stats, 0.1)
+    assert float(jnp.min(spec.mult)) == 0.5  # real halving happened
+    w_exp = duplicate_weight_rows(w, spec)
+    y_ref = expand_activations(x, spec) @ w_exp
+
+    w_packed, packed = fold_expansion_mult(np.asarray(w_exp), spec)
+    y_packed = expand_activations(x, packed) @ jnp.asarray(w_packed)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_packed), rtol=1e-5)
+    assert np.all(np.asarray(packed.mult) == 1.0)
+
+
+def test_fold_expansion_mult_rejects_bias():
+    from repro.core.ocs import OCSSpec
+
+    spec = OCSSpec(
+        src=jnp.arange(4, dtype=jnp.int32),
+        mult=jnp.ones(4, jnp.float32),
+        bias=jnp.asarray([0.0, 0.1, 0.0, 0.0], jnp.float32),
+    )
+    with pytest.raises(ValueError, match="bias"):
+        fold_expansion_mult(np.zeros((4, 2), np.float32), spec)
+
+
+# ---------------------------------------------------------------------------
+# dynamic_quant VMEM fallback (satellite)
+
+
+def test_dynamic_quant_fallback_branches():
+    from repro.kernels.dynamic_quant import dynamic_quant
+
+    x = jnp.asarray(RNG.randn(32, 256) * 4.0, jnp.float32)
+    q_k, s_k = dynamic_quant(x, interpret=True)  # kernel branch
+    q_x, s_x = dynamic_quant(x, vmem_budget_bytes=1)  # forced XLA branch
+    np.testing.assert_array_equal(np.asarray(q_k), np.asarray(q_x))
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_x), rtol=1e-7)

@@ -96,7 +96,8 @@ def test_smoke_decode_step(arch):
     logits, caches = T.decode_step(params, jnp.zeros((2, 1), jnp.int32), caches, cfg)
     assert logits.shape == (2, cfg.vocab)
     assert not bool(jnp.any(jnp.isnan(logits.astype(jnp.float32))))
-    assert int(caches["pos"]) == 1
+    assert caches["pos"].shape == (2,)  # per-slot positions
+    assert np.all(np.asarray(caches["pos"]) == 1)
 
 
 @pytest.mark.parametrize("arch", ["glm4-9b", "mamba2-1.3b", "qwen3-14b"])
