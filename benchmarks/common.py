@@ -285,16 +285,18 @@ def save_json(name: str, obj) -> None:
         json.dump(obj, f, indent=1, default=float)
 
 
-BENCH_SCHEMA_VERSION = 1
+# v2: serving bench gained the paged-KV metrics (kv_pool_peak_occupancy,
+# prefix_hit_rate, kv_pages_*) and the page-exhaustion backpressure check.
+BENCH_SCHEMA_VERSION = 2
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:
     """Write ``results/BENCH_<bench>.json`` in the stable cross-PR schema.
 
-    Schema (version 1, consumed by future PRs' trend tooling — append keys,
+    Schema (version 2, consumed by future PRs' trend tooling — append keys,
     never rename):
 
-        {"schema": 1, "bench": str, "created_unix": float,
+        {"schema": 2, "bench": str, "created_unix": float,
          "metrics": {flat name -> number}, "meta": {free-form context}}
     """
     name = f"BENCH_{bench}"

@@ -9,11 +9,16 @@ trajectory tracks:
 
 * **prefill tok/s** — prompt tokens through the chunked prefill path;
 * **decode tok/s** — generated tokens through the batched decode step;
-* **TTFT** — submit-to-first-token latency (queue wait + prefill).
+* **TTFT** — submit-to-first-token latency (queue wait + prefill);
+* **KV pool accounting** — peak page occupancy and prefix-cache hit rate of
+  the paged KV cache (``serving/kv_cache.py``).
 
 It also *asserts* the chunked-prefill compile story via the engine's trace
 counters: O(1) jitted calls per request (the dead-``_prefill_cache`` era
-cost O(prompt_len)), and at most one compile per pow2 prompt bucket.
+cost O(prompt_len)), at most one compile per pow2 prompt bucket — and that
+page exhaustion *queues* (backpressure) rather than crashes: a second pass
+reruns the workload against a pool several times smaller than the fixed-slot
+footprint and must still complete every request via page recycling.
 
 CPU smoke numbers are not TPU numbers — the value is the trend across PRs
 (the stable BENCH schema) and the O(1)-calls invariant, which is
@@ -32,14 +37,18 @@ from repro.configs import smoke_config
 from repro.core.apply import quantize_params
 from repro.core.recipe import QuantRecipe
 from repro.models import transformer as T
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, ServingEngine, pages_needed
 
 from .common import save_bench_json
 
 
-def run_engine(cfg, params, *, lengths, max_new, max_batch, max_len, matmul_mode):
+def run_engine(
+    cfg, params, *, lengths, max_new, max_batch, max_len, matmul_mode,
+    n_pages=None, page_size=16,
+):
     eng = ServingEngine(
-        cfg, params, max_batch=max_batch, max_len=max_len, matmul_mode=matmul_mode
+        cfg, params, max_batch=max_batch, max_len=max_len,
+        matmul_mode=matmul_mode, n_pages=n_pages, page_size=page_size,
     )
     rng = np.random.default_rng(0)
     for i, n in enumerate(lengths):
@@ -57,6 +66,48 @@ def run_engine(cfg, params, *, lengths, max_new, max_batch, max_len, matmul_mode
     s = eng.stats()
     s["wall_s"] = wall
     return eng, s
+
+
+def check_backpressure(cfg, params, *, lengths, max_new, max_batch, max_len,
+                       matmul_mode):
+    """Page exhaustion must queue, never crash: rerun the workload against a
+    pool sized for only ~2 concurrent requests (far below the fixed-slot
+    footprint) and require every request to complete via page recycling."""
+    zeros = {
+        "backpressure_pool_tokens": 0.0,
+        "backpressure_total_tokens": 0.0,
+        "backpressure_peak_occupancy": 0.0,
+    }
+    if cfg.block not in ("dense", "moe"):
+        print(f"[check] backpressure: skipped (unpaged {cfg.block} engine)")
+        return zeros  # schema v2: unpaged engines report zeros, not gaps
+    page_size = 16
+    need = [
+        min(pages_needed(n + max_new, page_size), max_len // page_size)
+        for n in lengths
+    ]
+    n_pages = 2 * max(need) + 1  # ~2 requests resident; the rest queue
+    eng, s = run_engine(
+        cfg, params, lengths=lengths, max_new=max_new, max_batch=max_batch,
+        max_len=max_len, matmul_mode=matmul_mode, n_pages=n_pages,
+        page_size=page_size,
+    )
+    assert s["completed"] == len(lengths), s["completed"]
+    assert s["kv_pages_peak"] <= s["kv_pages_capacity"], s
+    total_tokens = sum(lengths) + max_new * len(lengths)
+    pool_tokens = int(s["kv_pages_capacity"] * s["kv_page_size"])
+    assert total_tokens > pool_tokens, "workload must oversubscribe the pool"
+    print(
+        f"[check] backpressure: {s['completed']} requests "
+        f"({total_tokens} prompt+decode tokens) through a "
+        f"{pool_tokens}-token pool; peak {s['kv_pages_peak']:.0f}/"
+        f"{s['kv_pages_capacity']:.0f} pages"
+    )
+    return {
+        "backpressure_pool_tokens": pool_tokens,
+        "backpressure_total_tokens": total_tokens,
+        "backpressure_peak_occupancy": s["kv_pool_peak_occupancy"],
+    }
 
 
 def check_o1_prefill(eng, stats, lengths) -> None:
@@ -120,12 +171,24 @@ def main(argv=None):
         matmul_mode=args.matmul_mode,
     )
     check_o1_prefill(eng, stats, lengths)
+    bp_metrics = check_backpressure(
+        cfg, params, lengths=lengths, max_new=max_new,
+        max_batch=args.max_batch, max_len=args.max_len,
+        matmul_mode=args.matmul_mode,
+    )
 
     print(
         f"[bench] prefill {stats['prefill_tok_per_s']:.1f} tok/s | "
         f"decode {stats['decode_tok_per_s']:.1f} tok/s | "
         f"ttft {stats['mean_ttft_s'] * 1e3:.0f} ms | wall {stats['wall_s']:.1f} s"
     )
+    if stats["kv_page_size"]:
+        print(
+            f"[bench] kv pool: peak {stats['kv_pages_peak']:.0f}/"
+            f"{stats['kv_pages_capacity']:.0f} pages "
+            f"({stats['kv_pool_peak_occupancy']:.0%}) | "
+            f"prefix hit rate {stats['prefix_hit_rate']:.0%}"
+        )
     path = save_bench_json(
         "serving",
         metrics={
@@ -141,6 +204,14 @@ def main(argv=None):
             "decoded_tokens": stats["decoded_tokens"],
             "prefill_tokens": stats["prefill_tokens"],
             "wall_s": stats["wall_s"],
+            # paged KV-pool accounting (schema v2; zeros on unpaged engines)
+            "kv_page_size": stats["kv_page_size"],
+            "kv_pages_capacity": stats["kv_pages_capacity"],
+            "kv_pages_peak": stats["kv_pages_peak"],
+            "kv_pool_peak_occupancy": stats["kv_pool_peak_occupancy"],
+            "prefix_hit_rate": stats["prefix_hit_rate"],
+            "prefix_hit_pages": stats["prefix_hit_pages"],
+            **bp_metrics,
         },
         meta={
             "arch": cfg.name,

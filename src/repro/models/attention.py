@@ -341,6 +341,7 @@ def attention_decode(
     *,
     window: int = 0,
     kv_prefix: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    table: Optional[jnp.ndarray] = None,
 ):
     """One-token decode. x: [B, 1, d]; pos: current position — a scalar
     (all slots in lockstep) or a [B] vector (per-slot positions, the
@@ -348,10 +349,27 @@ def attention_decode(
 
     Returns (y [B,1,d], new_cache). Sliding-window layers use a ring buffer
     (cache length == window); new keys overwrite slot ``pos % window``.
+
+    ``table`` switches to the *paged* cache: ``cache`` is then a page pool
+    ``[n_pages, KV, page_size, hd]`` (``serving.kv_cache``) and reads/writes
+    go through the ``[B, T]`` block table — the new token is scattered into
+    page ``table[b, pos // page_size]``, and attention runs over the
+    table-gathered ``[B, KV, T*page_size, hd]`` view, which reconstructs the
+    contiguous cache positions exactly (bit-exact with the dense float cache).
     """
     b, _, _ = x.shape
     hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     pos = jnp.asarray(pos)
+    paged = table is not None
+    if paged:
+        if window:
+            raise NotImplementedError(
+                "paged KV cache: sliding-window layers keep the contiguous "
+                "ring buffer (hymba is served unpaged)"
+            )
+        if kv_prefix is not None:
+            raise NotImplementedError("paged KV cache: no learnable kv_prefix")
+        pos = jnp.broadcast_to(pos, (b,))  # block tables are per-lane
     per_slot = pos.ndim > 0
     q = dense(params["wq"], x, name="attn_q").reshape(b, 1, h, hd)
     k = dense(params["wk"], x, name="attn_k").reshape(b, 1, kvh, hd)
@@ -367,34 +385,43 @@ def attention_decode(
     q = apply_rope(q, posq, cfg.rope_theta, cfg.mrope_sections)
     k = apply_rope(k, posq, cfg.rope_theta, cfg.mrope_sections)
 
-    s_cache = cache["k"].shape[2]
-    slot = (pos % s_cache) if window else jnp.minimum(pos, s_cache - 1)
     int8_cache = cache["k"].dtype == jnp.int8
     k_t = jnp.swapaxes(k, 1, 2)  # [B, KV, 1, hd]
     v_t = jnp.swapaxes(v, 1, 2)
 
-    if per_slot:
-        # Per-slot write positions: one dynamic_update_slice per batch row
-        # (vmapped); XLA fuses these into a batched scatter, still in place.
-        upd4 = jax.vmap(
-            lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0))
-        )
-        upd3 = jax.vmap(
-            lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p))
-        )
+    if paged:
+        # Runtime import: serving builds on models, not the reverse; the
+        # paged branch is only traced by the serving engine / paged tests.
+        from repro.serving import kv_cache as _kvc
+
+        new_cache = _kvc.append_token(cache, k_t[:, :, 0], v_t[:, :, 0], table, pos)
+        ck, cv, cks, cvs = _kvc.gather_pages(new_cache, table)
+        s_cache = ck.shape[2]
     else:
-        upd4 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p, 0))
-        upd3 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p))
-    if int8_cache:
-        k_q, k_s = _quant_rows(k_t)
-        v_q, v_s = _quant_rows(v_t)
-        ck = upd4(cache["k"], k_q, slot)
-        cv = upd4(cache["v"], v_q, slot)
-        cks = upd3(cache["k_scale"], k_s, slot)
-        cvs = upd3(cache["v_scale"], v_s, slot)
-    else:
-        ck = upd4(cache["k"], k_t.astype(cache["k"].dtype), slot)
-        cv = upd4(cache["v"], v_t.astype(cache["v"].dtype), slot)
+        s_cache = cache["k"].shape[2]
+        slot = (pos % s_cache) if window else jnp.minimum(pos, s_cache - 1)
+        if per_slot:
+            # Per-slot write positions: one dynamic_update_slice per batch row
+            # (vmapped); XLA fuses these into a batched scatter, still in place.
+            upd4 = jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0))
+            )
+            upd3 = jax.vmap(
+                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p))
+            )
+        else:
+            upd4 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p, 0))
+            upd3 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p))
+        if int8_cache:
+            k_q, k_s = _quant_rows(k_t)
+            v_q, v_s = _quant_rows(v_t)
+            ck = upd4(cache["k"], k_q, slot)
+            cv = upd4(cache["v"], v_q, slot)
+            cks = upd3(cache["k_scale"], k_s, slot)
+            cvs = upd3(cache["v_scale"], v_s, slot)
+        else:
+            ck = upd4(cache["k"], k_t.astype(cache["k"].dtype), slot)
+            cv = upd4(cache["v"], v_t.astype(cache["v"].dtype), slot)
     ck = logical(ck, "batch", "kv_heads", None, None)
     cv = logical(cv, "batch", "kv_heads", None, None)
 
@@ -467,8 +494,9 @@ def attention_decode(
         out = pv(p, cv)
     out = out.astype(x.dtype).reshape(b, 1, h * hd)
     y = dense(params["wo"], out, name="attn_o")
-    new_cache = {"k": ck, "v": cv}
-    if int8_cache:
-        new_cache["k_scale"] = cks
-        new_cache["v_scale"] = cvs
+    if not paged:  # paged: new_cache is the updated page pool, built above
+        new_cache = {"k": ck, "v": cv}
+        if int8_cache:
+            new_cache["k_scale"] = cks
+            new_cache["v_scale"] = cvs
     return y, new_cache

@@ -137,7 +137,8 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
 # Block forward (full sequence)
 
 
-def _block(cfg: ModelConfig, p, x, positions, layer_flag=None, *, return_kv=False):
+def _block(cfg: ModelConfig, p, x, positions, layer_flag=None, *, return_kv=False,
+           kv_prefix=None):
     """One layer, full sequence.
 
     ``layer_flag``: hymba is-global switch — a static bool when layers run
@@ -145,13 +146,16 @@ def _block(cfg: ModelConfig, p, x, positions, layer_flag=None, *, return_kv=Fals
     attention), or a traced bool under a mixed scan (decode fallback).
     ``return_kv`` (dense/moe only): also return this layer's post-RoPE K/V
     — the chunked-prefill cache build reuses the exact forward body.
+    ``kv_prefix`` (dense/moe only): cached K/V of an already-prefilled
+    prompt prefix, concatenated on the key side — suffix-only prefill for
+    the paged prefix cache (callers offset ``positions`` by the prefix len).
     """
     kind = "full" if not cfg.causal else "causal"
     if cfg.block in ("dense", "moe"):
         h = _norm(cfg, p["norm1"], x)
         a = attention(
             p["attn"], h, cfg, positions=positions, kind=kind,
-            return_kv=return_kv,
+            return_kv=return_kv, kv_prefix=kv_prefix,
         )
         kv = None
         if return_kv:
@@ -162,8 +166,10 @@ def _block(cfg: ModelConfig, p, x, positions, layer_flag=None, *, return_kv=Fals
             moe(p["moe"], h, cfg) if cfg.block == "moe" else mlp(p["mlp"], h, cfg)
         )
         return (x, kv) if return_kv else x
-    if return_kv:
-        raise NotImplementedError(f"return_kv: attention blocks only, got {cfg.block}")
+    if return_kv or kv_prefix is not None:
+        raise NotImplementedError(
+            f"return_kv/kv_prefix: attention blocks only, got {cfg.block}"
+        )
     if cfg.block == "mamba2":
         h = _norm(cfg, p["norm1"], x)
         x = x + mamba2(p["ssm"], h, cfg)
@@ -352,11 +358,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
     raise ValueError(cfg.block)
 
 
-def _decode_block(cfg: ModelConfig, p, x, cache, pos, window: int = 0):
-    """One layer, one token. Returns (x, new_cache)."""
+def _decode_block(cfg: ModelConfig, p, x, cache, pos, window: int = 0, table=None):
+    """One layer, one token. Returns (x, new_cache). ``table`` (dense/moe):
+    the paged cache's block table — ``cache`` is then a page pool."""
     if cfg.block in ("dense", "moe"):
         h = _norm(cfg, p["norm1"], x)
-        a, new_attn = attention_decode(p["attn"], h, cache, pos, cfg)
+        a, new_attn = attention_decode(p["attn"], h, cache, pos, cfg, table=table)
         x = x + a
         h = _norm(cfg, p["norm2"], x)
         x = x + (moe(p["moe"], h, cfg) if cfg.block == "moe" else mlp(p["mlp"], h, cfg))
@@ -400,8 +407,12 @@ def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
     The layer loop is unrolled (see ``init_cache``): per-layer cache tensors
     are donated and updated in place; stacked params are sliced per layer
     (cheap relative to the cache traffic that dominates decode).
+
+    Paged caches (``"table"`` present, see ``serving.kv_cache``): per-layer
+    leaves are page pools and reads/writes go through the shared block table.
     """
     pos = caches["pos"]
+    table = caches.get("table")  # paged KV cache (dense/moe serving)
     x = embed(params["embed"], token)
     x = logical(x, "batch", "seq", "embed")
 
@@ -413,7 +424,9 @@ def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
             window = 0 if bool(flags[i]) else cfg.hymba.swa_window
             x, nc = _decode_block(cfg, p_i, x, caches["layers"][i], pos, window)
         elif cfg.block in ("dense", "moe"):
-            x, nc_attn = _decode_block(cfg, p_i, x, caches["layers"][i]["attn"], pos)
+            x, nc_attn = _decode_block(
+                cfg, p_i, x, caches["layers"][i]["attn"], pos, table=table
+            )
             nc = {"attn": nc_attn}
         elif cfg.block == "mamba2":
             x, nc_ssm = _decode_block(cfg, p_i, x, caches["layers"][i]["ssm"], pos)
@@ -422,6 +435,8 @@ def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
             raise ValueError(cfg.block)
         new_layers.append(nc)
     new_caches = {"layers": new_layers, "pos": pos + 1}
+    if table is not None:
+        new_caches["table"] = table
 
     x = _norm(cfg, params["final_norm"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -515,6 +530,67 @@ def prefill_with_cache(
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     last = dense(head, last_h, name="lm_head")[:, 0, :]
     return logical(last, "batch", "vocab"), caches
+
+
+def prefill_into_pages(
+    params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    pools,
+    page_ids: jnp.ndarray,
+    *,
+    length: jnp.ndarray,
+    prefix_ids: jnp.ndarray,
+):
+    """Chunked prefill straight into the paged KV cache (one request).
+
+    tokens: ``[1, S_bucket]`` — the prompt *suffix* (tokens past the shared
+    prefix), zero-padded to the jit bucket (``S_bucket % page_size == 0``);
+    ``length``: ``[1]`` real suffix length; ``page_ids``: ``[S_bucket //
+    page_size]`` pool pages receiving the suffix K/V (trash-padded past the
+    allocation); ``prefix_ids``: ``[n_hit_pages]`` pages of the shared,
+    already-prefilled prefix — gathered read-only and attended via the
+    ``kv_prefix`` key-side concat (every suffix query is causally after the
+    whole prefix, so "always visible" is exact). ``pools``: list of per-layer
+    page pools. Returns (last-token logits ``[1, V]``, updated pools).
+
+    Prefix reuse is what makes a repeated system prompt prefill once: the
+    suffix forward is the only model compute this function runs.
+    """
+    from repro.serving import kv_cache as _kvc  # serving builds on models
+
+    if cfg.block not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"paged prefill: attention archs only, got {cfg.block}"
+        )
+    b, s = tokens.shape
+    if b != 1:
+        raise ValueError("paged prefill is per-request (page_ids are per-seq)")
+    n_hit = prefix_ids.shape[0] * pools[0]["k"].shape[2]
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+
+    x = embed(params["embed"], tokens)
+    x = logical(x, "batch", "seq", "embed")
+    positions = _positions(cfg, b, s, offset=n_hit)
+
+    new_pools = []
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["layers"])
+        kv_prefix = _kvc.gather_prefix(pools[i], prefix_ids) if n_hit else None
+        # The exact forward body (_block) — paged prefill cannot drift from
+        # forward/decode_step structure.
+        x, (k, v) = _block(cfg, p, x, positions, return_kv=True, kv_prefix=kv_prefix)
+        new_pools.append(_kvc.write_prompt_pages(pools[i], k, v, page_ids))
+
+    x = _norm(cfg, params["final_norm"], x)
+    # Project only the last real suffix token through the lm_head (the vocab
+    # dim is the widest output in the model — see prefill_with_cache).
+    last_h = jnp.take_along_axis(
+        x, (length - 1)[:, None, None].astype(jnp.int32), axis=1
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = dense(head, last_h, name="lm_head")[:, 0, :]
+    return logical(last, "batch", "vocab"), new_pools
 
 
 @dataclasses.dataclass(frozen=True)

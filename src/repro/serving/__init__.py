@@ -1,1 +1,3 @@
 from .engine import Request, ServingEngine  # noqa: F401
+from .kv_cache import PageAllocator, pages_needed  # noqa: F401
+from . import kv_cache  # noqa: F401

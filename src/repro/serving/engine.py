@@ -6,21 +6,26 @@ float model in low precision. This engine is that provider's serving loop:
 * **weights** — the OCS+clip+int8 parameter tree from
   :func:`repro.core.apply.quantize_params` (float trees also accepted: the
   model layer dispatches on leaf type);
-* **slots** — a fixed decode batch of ``max_batch`` sequences sharing one
-  jitted ``decode_step``; finished sequences free their slot immediately and
-  the next queued request is *hot-swapped in* (continuous batching) by
-  writing its prefilled KV into the slot;
-* **prefill** — *chunked*: the whole prompt (zero-padded to a pow2 bucket)
-  runs through one jitted :func:`repro.models.transformer.prefill_with_cache`
-  call — O(1) jitted calls per request, one compile per bucket (the
-  ``_prefill_cache``). SSM/hybrid blocks fall back to decode-step replay
-  (their conv/SSD decode states are not exposed by the full-sequence scan);
-* **positions** — per-slot: ``caches["pos"]`` is a ``[max_batch]`` vector, so
-  mixed-length admission decodes with exact causal masks and RoPE phases
-  (no global-position approximation);
-* **caches** — per-slot KV/SSM caches allocated once at engine start; a
-  request writes its prefill KV into its slot, decode appends in place
-  (donated buffers);
+* **decode lanes** — a fixed decode batch of ``max_batch`` sequences sharing
+  one jitted ``decode_step``; finished sequences free their lane immediately
+  and the next queued request is *hot-swapped in* (continuous batching);
+* **paged KV cache** (attention archs, the default) — KV lives in a global
+  page pool (``serving.kv_cache``): ``[n_pages, KV, page_size, hd]`` per
+  layer (int8 pages + f32 scales when ``cfg.kv_bits == 8``), addressed per
+  lane through a block table. **Admission is page-based**: a request is
+  admitted when a free lane exists *and*
+  ``pages_needed(prompt_len + max_new_tokens)`` fits the free pool — engine
+  capacity is a function of actual traffic, not worst-case ``max_len``.
+  Pages are reclaimed at retirement; full prompt pages are content-hashed
+  into a prefix cache, so a repeated system prompt's pages are refcount-
+  shared and only the unseen suffix is prefilled. SSM/hybrid blocks keep the
+  dense per-lane caches (their decode state is O(1) per sequence);
+* **prefill** — *chunked*: the prompt suffix (zero-padded to a pow2 bucket)
+  runs through one jitted call — O(1) jitted calls per request, one compile
+  per (bucket, prefix-pages) shape (the ``_prefill_cache``). SSM/hybrid
+  blocks fall back to decode-step replay;
+* **positions** — per-lane: ``caches["pos"]`` is a ``[max_batch]`` vector, so
+  mixed-length admission decodes with exact causal masks and RoPE phases;
 * **matmul_mode** — ``dequant`` (weight-only int8) or ``w8a8`` (dynamic
   per-row activation quant; routes through the fused Pallas kernel when
   ``repro.models.layers.USE_PALLAS_SERVING`` is on).
@@ -35,7 +40,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +50,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import layers
 from repro.models import transformer as T
+from . import kv_cache as kvc
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -65,6 +72,7 @@ class Request:
 class _Slot:
     req: Optional[Request] = None
     remaining: int = 0
+    pages: List[int] = dataclasses.field(default_factory=list)
 
 
 class ServingEngine:
@@ -76,6 +84,9 @@ class ServingEngine:
         max_batch: int = 8,
         max_len: int = 512,
         matmul_mode: str = "dequant",
+        paged: Optional[bool] = None,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
     ):
         if not cfg.causal:
             raise ValueError("encoder-only arch: no decode serving")
@@ -87,9 +98,37 @@ class ServingEngine:
         self.max_len = max_len
         self.matmul_mode = matmul_mode
         self.slots = [_Slot() for _ in range(max_batch)]
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()  # FIFO; popleft is O(1) on the
+        # admission hot loop (a plain list.pop(0) is O(n) for deep queues)
         self.done: List[Request] = []
-        self.caches = T.init_cache(cfg, max_batch, max_len, dtype=jnp.float32)
+        # Paged KV cache: attention archs only (SSM/hybrid decode states are
+        # O(1) per lane — nothing to page).
+        self.paged = cfg.block in ("dense", "moe") if paged is None else paged
+        if self.paged:
+            if cfg.block not in ("dense", "moe"):
+                raise ValueError(f"paged KV cache: dense/moe only, got {cfg.block}")
+            # Power-of-two only: prefill buckets are pow2 (>= page_size), and
+            # write_prompt_pages needs bucket % page_size == 0.
+            if page_size < 1 or page_size & (page_size - 1):
+                raise ValueError(f"page_size must be a power of two, got {page_size}")
+            if max_len % page_size:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of page_size {page_size}"
+                )
+            self.page_size = page_size
+            self.max_pages_per_seq = max_len // page_size
+            if n_pages is None:
+                # Default pool = the old fixed-slot memory footprint
+                # (+ the reserved trash page); shrink it to oversubscribe.
+                n_pages = max_batch * self.max_pages_per_seq + 1
+            self.allocator = kvc.PageAllocator(n_pages, page_size)
+            self.caches = kvc.init_paged_cache(
+                cfg, max_batch, n_pages, page_size, self.max_pages_per_seq,
+                dtype=jnp.float32,
+            )
+        else:
+            self.allocator = None
+            self.caches = T.init_cache(cfg, max_batch, max_len, dtype=jnp.float32)
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.steps = 0
         self.decoded_tokens = 0
@@ -99,7 +138,7 @@ class ServingEngine:
         # not XLA compile noise.
         self.prefill_calls = 0  # jitted calls spent on prefill
         self.prefill_requests = 0
-        self.prefill_tokens = 0
+        self.prefill_tokens = 0  # tokens actually run through prefill compute
         self.prefill_tokens_warm = 0
         self.prefill_time_s = 0.0  # warm prefill wall time
         self.prefill_compile_s = 0.0
@@ -110,8 +149,9 @@ class ServingEngine:
         self.decode_traces = 0
 
         self._decode = jax.jit(lambda p, c, t: self._decode_impl(p, c, t))
-        # Prefill jits per prompt-length bucket (pow2 padding bounds recompiles).
-        self._prefill_cache: Dict[int, Callable] = {}
+        # Prefill jits per shape key: prompt-length bucket (pow2 padding
+        # bounds recompiles), plus the prefix-hit page count when paged.
+        self._prefill_cache: Dict[Tuple, Callable] = {}
 
     # ------------------------------------------------------------- internals
 
@@ -126,11 +166,26 @@ class ServingEngine:
         b = 8
         while b < n:
             b *= 2
+        if self.paged:
+            b = max(b, self.page_size)  # page-granular writes
         return min(b, self.max_len)
 
-    def _prefill_fn(self, bucket: int) -> Callable:
-        fn = self._prefill_cache.get(bucket)
-        if fn is None:
+    def _prefill_fn(self, key) -> Callable:
+        fn = self._prefill_cache.get(key)
+        if fn is not None:
+            return fn
+        if self.paged:
+
+            def impl(params, tokens, length, page_ids, prefix_ids, pools):
+                self.prefill_traces += 1
+                with layers.serving_mode(self.matmul_mode):
+                    logits, new_pools = T.prefill_into_pages(
+                        params, tokens, self.cfg, pools, page_ids,
+                        length=length, prefix_ids=prefix_ids,
+                    )
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_pools
+
+        else:
 
             def impl(params, tokens, length):
                 self.prefill_traces += 1
@@ -141,16 +196,26 @@ class ServingEngine:
                     )
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32), scratch
 
-            fn = jax.jit(impl)
-            self._prefill_cache[bucket] = fn
+        fn = jax.jit(impl)
+        self._prefill_cache[key] = fn
         return fn
+
+    def _book_prefill(self, n_tokens: int, elapsed: float, traced: bool):
+        self.prefill_requests += 1
+        self.prefill_tokens += n_tokens
+        if traced:
+            self.prefill_compile_s += elapsed  # first hit of a bucket/shape
+        else:
+            self.prefill_time_s += elapsed
+            self.prefill_tokens_warm += n_tokens
 
     def _run_prefill(self, prompt: np.ndarray):
         """Prompt -> (first generated token, single-slot scratch caches).
 
-        Attention archs: chunked prefill — the padded prompt runs in ONE
-        jitted call per request. SSM/hybrid archs: decode-step replay (one
-        jitted call per token; exactly consistent with the decode path).
+        Attention archs (unpaged engines): chunked prefill — the padded
+        prompt runs in ONE jitted call per request. SSM/hybrid archs:
+        decode-step replay (one jitted call per token; exactly consistent
+        with the decode path).
         """
         n = len(prompt)
         self._validate_prompt_len(n)  # backstop; submit() already rejected
@@ -174,19 +239,69 @@ class ServingEngine:
                 self.prefill_calls += 1
             first = int(nxt[0, 0])
         elapsed = time.perf_counter() - t0
-        self.prefill_requests += 1
-        self.prefill_tokens += n
-        if self.prefill_traces + self.decode_traces > traces0:
-            self.prefill_compile_s += elapsed  # first hit of a bucket/shape
-        else:
-            self.prefill_time_s += elapsed
-            self.prefill_tokens_warm += n
+        traced = self.prefill_traces + self.decode_traces > traces0
+        self._book_prefill(n, elapsed, traced)
         return first, scratch
 
-    def _install(self, slot_idx: int, req: Request):
-        first, scratch = self._run_prefill(np.asarray(req.prompt, np.int64))
+    def _run_prefill_paged(
+        self, suffix: np.ndarray, hit_ids: List[int], new_ids: List[int]
+    ) -> int:
+        """Suffix-only prefill, writing K/V straight into the page pool.
+
+        ONE jitted call per request; prefix pages (``hit_ids``) are gathered
+        read-only inside the call, so a full-prefix hit prefills only the
+        suffix. Returns the first generated token.
+        """
+        m = len(suffix)  # >= 1: admission caps prefix hits at (n-1)//page_size
+        bucket = self._prefill_bucket(m)
+        nb = bucket // self.page_size
+        ids = np.full((nb,), kvc.TRASH_PAGE, np.int32)
+        k = min(nb, len(new_ids))
+        ids[:k] = new_ids[:k]
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :m] = suffix
+        pools = [layer["attn"] for layer in self.caches["layers"]]
+        traces0 = self.prefill_traces
+        t0 = time.perf_counter()
+        nxt, new_pools = self._prefill_fn((bucket, len(hit_ids)))(
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray([m], jnp.int32),
+            jnp.asarray(ids),
+            jnp.asarray(hit_ids, jnp.int32),
+            pools,
+        )
+        self.prefill_calls += 1
+        first = int(nxt[0])
+        self.caches["layers"] = [{"attn": p} for p in new_pools]
+        elapsed = time.perf_counter() - t0
+        self._book_prefill(m, elapsed, self.prefill_traces > traces0)
+        return first
+
+    def _finish_first_token(self, req: Request, first: int) -> bool:
+        """Book the prefill-produced token; True if the request is already
+        done (immediate eos, or a 1-token budget) and must not take a lane —
+        the old engine appended it unchecked, so an immediate-eos request
+        still burned ``max_new_tokens - 1`` decode steps (and its pages)."""
         req.t_first_token = time.perf_counter()
         req.output.append(first)
+        if req.max_new_tokens <= 1 or (
+            req.eos_id is not None and first == req.eos_id
+        ):
+            req.t_done = time.perf_counter()
+            self.done.append(req)
+            return True
+        return False
+
+    def _install(self, slot_idx: int, req: Request) -> bool:
+        """Admit ``req`` into lane ``slot_idx``. Returns False — leaving the
+        request queued — only when the page pool can't hold it (backpressure);
+        the lane stays free if the request finishes at its first token."""
+        if self.paged:
+            return self._install_paged(slot_idx, req)
+        first, scratch = self._run_prefill(np.asarray(req.prompt, np.int64))
+        if self._finish_first_token(req, first):
+            return True
 
         # Copy the scratch single-slot cache into row ``slot_idx`` of the
         # engine caches (KV layouts differ per block type; tree_map handles
@@ -205,6 +320,66 @@ class ServingEngine:
         self.caches["pos"] = self.caches["pos"].at[slot_idx].set(scratch["pos"][0])
         self.tokens = self.tokens.at[slot_idx, 0].set(first)
         self.slots[slot_idx] = _Slot(req=req, remaining=req.max_new_tokens - 1)
+        return True
+
+    def _install_paged(self, slot_idx: int, req: Request) -> bool:
+        prompt = np.asarray(req.prompt, np.int64)
+        n = len(prompt)
+        self._validate_prompt_len(n)
+        ps = self.page_size
+        need_total = min(
+            kvc.pages_needed(n + req.max_new_tokens, ps), self.max_pages_per_seq
+        )
+        # Cap prefix hits so the suffix keeps >= 1 token (the prefill must
+        # still produce the first-token logits).
+        max_hit = (n - 1) // ps
+        if self.allocator.available() < need_total - max_hit:
+            return False  # can't fit even with a full prefix hit: fail fast
+            # before the O(prompt) hash work (a queued request retries every
+            # engine step while the pool drains)
+        hit_ids, keys = self.allocator.match_prefix(prompt, max_hit)
+        need_new = need_total - len(hit_ids)
+        if self.allocator.available() < need_new:
+            self.allocator.release(hit_ids)  # un-retain; stay queued
+            return False
+        self.allocator.note_prefix_stats(len(hit_ids), n // ps)
+        new_ids = self.allocator.alloc(need_new)
+        row_ids = hit_ids + new_ids
+        n_hit = len(hit_ids) * ps
+
+        first = self._run_prefill_paged(prompt[n_hit:], hit_ids, new_ids)
+        # Publish the freshly written *full* prompt pages (decode never
+        # touches them — it appends past the prompt — so sharing is safe).
+        for j in range(len(hit_ids), n // ps):
+            self.allocator.register(keys[j], row_ids[j])
+
+        if self._finish_first_token(req, first):
+            self.allocator.release(row_ids)  # registered pages stay hit-able
+            return True
+
+        row = np.full((self.max_pages_per_seq,), kvc.TRASH_PAGE, np.int32)
+        row[: len(row_ids)] = row_ids
+        self.caches["table"] = self.caches["table"].at[slot_idx].set(jnp.asarray(row))
+        self.caches["pos"] = self.caches["pos"].at[slot_idx].set(n)
+        self.tokens = self.tokens.at[slot_idx, 0].set(first)
+        self.slots[slot_idx] = _Slot(
+            req=req, remaining=req.max_new_tokens - 1, pages=row_ids
+        )
+        return True
+
+    def _retire(self, slot_idx: int) -> None:
+        slot = self.slots[slot_idx]
+        slot.req.t_done = time.perf_counter()
+        self.done.append(slot.req)
+        if self.paged:
+            # Reclaim pages and point the lane at the trash page so its dead
+            # writes can never land in a page the allocator hands out again.
+            self.allocator.release(slot.pages)
+            self.caches["table"] = (
+                self.caches["table"].at[slot_idx].set(kvc.TRASH_PAGE)
+            )
+            self.caches["pos"] = self.caches["pos"].at[slot_idx].set(0)
+        self.slots[slot_idx] = _Slot()
 
     # ------------------------------------------------------------------ API
 
@@ -219,15 +394,34 @@ class ServingEngine:
 
     def submit(self, req: Request):
         # Reject here, not at admission: a bad request raised mid-run would
-        # abort the engine loop and strand every in-flight sequence.
+        # abort the engine loop and strand every in-flight sequence — and a
+        # request larger than the whole pool would deadlock the queue.
         self._validate_prompt_len(len(req.prompt))
+        if self.paged:
+            need = min(
+                kvc.pages_needed(
+                    len(req.prompt) + req.max_new_tokens, self.page_size
+                ),
+                self.max_pages_per_seq,
+            )
+            if need > self.allocator.capacity:
+                raise ValueError(
+                    f"request needs {need} pages; pool capacity is "
+                    f"{self.allocator.capacity} (raise n_pages)"
+                )
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self):
-        for i, slot in enumerate(self.slots):
-            if slot.req is None and self.queue:
-                self._install(i, self.queue.pop(0))
+        """FIFO admission: stop at the first request that doesn't fit (no
+        head-of-line bypass — page exhaustion queues, it never crashes)."""
+        while self.queue:
+            free = next((i for i, s in enumerate(self.slots) if s.req is None), None)
+            if free is None:
+                break
+            if not self._install(free, self.queue[0]):
+                break  # pool full: wait for pages to be reclaimed
+            self.queue.popleft()
 
     def step(self):
         """One engine iteration: admit from queue, decode one token for all
@@ -257,9 +451,7 @@ class ServingEngine:
             if slot.remaining <= 0 or (
                 slot.req.eos_id is not None and tok == slot.req.eos_id
             ):
-                slot.req.t_done = time.perf_counter()
-                self.done.append(slot.req)
-                self.slots[i] = _Slot()
+                self._retire(i)
         self.tokens = nxt
         return True
 
@@ -279,7 +471,7 @@ class ServingEngine:
             for r in self.done
             if r.t_first_token and r.t_submit
         ]
-        return {
+        out = {
             "completed": len(self.done),
             "decode_steps": self.steps,
             "decoded_tokens": self.decoded_tokens,
@@ -313,3 +505,23 @@ class ServingEngine:
             "prefill_traces": self.prefill_traces,
             "decode_traces": self.decode_traces,
         }
+        # Page-pool accounting (zeros when unpaged, keeping the schema flat).
+        alloc = self.allocator
+        out.update(
+            {
+                "kv_page_size": float(self.page_size) if self.paged else 0.0,
+                "kv_pages_capacity": float(alloc.capacity) if alloc else 0.0,
+                "kv_pages_in_use": float(alloc.in_use()) if alloc else 0.0,
+                "kv_pages_cached": float(alloc.cached_pages()) if alloc else 0.0,
+                "kv_pages_peak": float(alloc.peak_in_use) if alloc else 0.0,
+                "kv_pool_occupancy": (
+                    alloc.in_use() / alloc.capacity if alloc else 0.0
+                ),
+                "kv_pool_peak_occupancy": (
+                    alloc.peak_in_use / alloc.capacity if alloc else 0.0
+                ),
+                "prefix_hit_rate": alloc.hit_rate() if alloc else 0.0,
+                "prefix_hit_pages": float(alloc.prefix_hit_pages) if alloc else 0.0,
+            }
+        )
+        return out

@@ -74,6 +74,11 @@ SINGLE_POD_RULES = LogicalRules(
         "embed": None,
         "heads": "model",
         "kv_heads": "model",
+        # Paged KV cache (serving/kv_cache.py): pools are [n_pages, KV,
+        # page_size, hd] — the KV-head dim rides the 'model' axis exactly
+        # like the dense decode cache; the page dim stays replicated so any
+        # lane's block table can address any page without resharding.
+        "kv_pages": None,
         "ff": "model",
         "vocab": "model",
         "expert": "model",

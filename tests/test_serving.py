@@ -184,6 +184,10 @@ def test_stats_schema(dense_setup):
         "prefill_compile_s", "decode_time_s", "decode_compile_s",
         "decode_tok_per_s", "prefill_calls", "prefill_requests",
         "prefill_calls_per_request", "prefill_traces", "decode_traces",
+        # paged KV-pool accounting (zeros on unpaged SSM/hybrid engines)
+        "kv_page_size", "kv_pages_capacity", "kv_pages_in_use",
+        "kv_pages_cached", "kv_pages_peak", "kv_pool_occupancy",
+        "kv_pool_peak_occupancy", "prefix_hit_rate", "prefix_hit_pages",
     ):
         assert key in s, key
     assert s["prefill_tok_per_s"] > 0 and s["decode_tok_per_s"] > 0
