@@ -3,7 +3,8 @@
 #
 #   make test         tier-1 gate (must stay green; the driver checks it)
 #   make test-fast    tier-1 minus the slow-marked cases
-#   make bench-smoke  serving throughput smoke -> results/BENCH_serving.json
+#   make bench-smoke  serving throughput smoke (baseline + spec-decode arm)
+#                     -> results/BENCH_serving.json + BENCH_serving_spec.json
 #   make bench        every paper table + serving (slow; trains subjects once)
 
 PY := PYTHONPATH=src python

@@ -287,16 +287,19 @@ def save_json(name: str, obj) -> None:
 
 # v2: serving bench gained the paged-KV metrics (kv_pool_peak_occupancy,
 # prefix_hit_rate, kv_pages_*) and the page-exhaustion backpressure check.
-BENCH_SCHEMA_VERSION = 2
+# v3: the speculative-decoding arm (BENCH_serving_spec.json: acceptance rate,
+# tokens/target-step, spec-vs-baseline decode throughput) and the spec_*
+# zeros in the baseline serving metrics.
+BENCH_SCHEMA_VERSION = 3
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:
     """Write ``results/BENCH_<bench>.json`` in the stable cross-PR schema.
 
-    Schema (version 2, consumed by future PRs' trend tooling — append keys,
+    Schema (version 3, consumed by future PRs' trend tooling — append keys,
     never rename):
 
-        {"schema": 2, "bench": str, "created_unix": float,
+        {"schema": 3, "bench": str, "created_unix": float,
          "metrics": {flat name -> number}, "meta": {free-form context}}
     """
     name = f"BENCH_{bench}"

@@ -11,7 +11,13 @@ trajectory tracks:
 * **decode tok/s** — generated tokens through the batched decode step;
 * **TTFT** — submit-to-first-token latency (queue wait + prefill);
 * **KV pool accounting** — peak page occupancy and prefix-cache hit rate of
-  the paged KV cache (``serving/kv_cache.py``).
+  the paged KV cache (``serving/kv_cache.py``);
+* **speculative decoding** (schema v3, ``BENCH_serving_spec.json``) — the
+  self-speculation arm (``serving/spec_decode.py``: quantized w8a8 draft,
+  serving-precision multi-token verify) reruns the same workload and reports
+  acceptance rate, tokens/target-step, and decode tok/s vs the baseline —
+  after asserting the committed streams are token-identical and rollback
+  left the page pool exactly as the baseline did.
 
 It also *asserts* the chunked-prefill compile story via the engine's trace
 counters: O(1) jitted calls per request (the dead-``_prefill_cache`` era
@@ -44,11 +50,12 @@ from .common import save_bench_json
 
 def run_engine(
     cfg, params, *, lengths, max_new, max_batch, max_len, matmul_mode,
-    n_pages=None, page_size=16,
+    n_pages=None, page_size=16, spec=None,
 ):
     eng = ServingEngine(
         cfg, params, max_batch=max_batch, max_len=max_len,
         matmul_mode=matmul_mode, n_pages=n_pages, page_size=page_size,
+        spec=spec,
     )
     rng = np.random.default_rng(0)
     for i, n in enumerate(lengths):
@@ -110,6 +117,61 @@ def check_backpressure(cfg, params, *, lengths, max_new, max_batch, max_len,
     }
 
 
+def run_spec_arm(cfg, params, base_eng, base_stats, *, lengths, max_new,
+                 max_batch, max_len, matmul_mode, spec_k, draft_layers):
+    """Speculative-decoding arm (schema v3): rerun the workload with the
+    self-speculative engine (quantized draft, serving-precision verify) and
+    report acceptance rate, tokens/target-step, and end-to-end decode
+    throughput vs the non-speculative baseline.
+
+    Asserts the subsystem's two contracts on the way: the committed token
+    streams are identical to the baseline's, and rollback leaves the page
+    pool exactly as the baseline left it (zero referenced pages).
+    """
+    if cfg.block not in ("dense", "moe") or spec_k <= 0:
+        print(f"[check] spec-decode: skipped ({cfg.block} engine / spec_k=0)")
+        return None
+    from repro.serving import SpecConfig
+
+    spec = SpecConfig(k=spec_k, draft_layers=draft_layers or None)
+    eng, s = run_engine(
+        cfg, params, lengths=lengths, max_new=max_new, max_batch=max_batch,
+        max_len=max_len, matmul_mode=matmul_mode, spec=spec,
+    )
+    base_out = {r.uid: r.output for r in base_eng.done}
+    spec_out = {r.uid: r.output for r in eng.done}
+    assert spec_out == base_out, "spec-decode broke greedy output identity"
+    assert s["spec_acceptance_rate"] > 0, s
+    # An accepted draft means some verify event committed >1 token, so the
+    # per-target-step yield must be strictly above the plain-decode 1.0.
+    assert s["spec_tokens_per_target_step"] > 1.0, s
+    assert s["kv_pages_in_use"] == base_stats["kv_pages_in_use"] == 0.0, (
+        "rollback must leave pool occupancy identical to the baseline"
+    )
+    print(
+        f"[check] spec-decode: outputs identical; acceptance "
+        f"{s['spec_acceptance_rate']:.0%}, "
+        f"{s['spec_tokens_per_target_step']:.2f} tokens/target-step "
+        f"({s['decode_steps']:.0f} target steps vs "
+        f"{base_stats['decode_steps']:.0f} baseline)"
+    )
+    return {
+        "spec_k": float(spec_k),
+        "spec_rounds": s["spec_rounds"],
+        "spec_acceptance_rate": s["spec_acceptance_rate"],
+        "spec_tokens_per_target_step": s["spec_tokens_per_target_step"],
+        "spec_decode_tok_per_s": s["decode_tok_per_s"],
+        "baseline_decode_tok_per_s": base_stats["decode_tok_per_s"],
+        "spec_decode_steps": float(s["decode_steps"]),
+        "baseline_decode_steps": float(base_stats["decode_steps"]),
+        "spec_draft_time_s": s["spec_draft_time_s"],
+        "spec_verify_time_s": s["spec_verify_time_s"],
+        "spec_compile_s": s["spec_compile_s"],
+        "wall_s": s["wall_s"],
+        "baseline_wall_s": base_stats["wall_s"],
+    }
+
+
 def check_o1_prefill(eng, stats, lengths) -> None:
     """The acceptance invariant: chunked prefill is O(1) jitted calls per
     request for attention archs (SSM/hybrid archs replay by design)."""
@@ -143,6 +205,10 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--float-weights", action="store_true",
                     help="skip PTQ, serve the float tree")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="speculative-decoding arm draft window (0 = off)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="truncate the drafter to the first L layers (0 = all)")
     ap.add_argument("--ocs-ratio", type=float, default=0.02)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -171,6 +237,12 @@ def main(argv=None):
         matmul_mode=args.matmul_mode,
     )
     check_o1_prefill(eng, stats, lengths)
+    spec_metrics = run_spec_arm(
+        cfg, params, eng, stats, lengths=lengths, max_new=max_new,
+        max_batch=args.max_batch, max_len=args.max_len,
+        matmul_mode=args.matmul_mode, spec_k=args.spec_k,
+        draft_layers=args.draft_layers,
+    )
     bp_metrics = check_backpressure(
         cfg, params, lengths=lengths, max_new=max_new,
         max_batch=args.max_batch, max_len=args.max_len,
@@ -226,6 +298,30 @@ def main(argv=None):
         },
     )
     print(f"[bench] wrote {path}")
+    if spec_metrics is not None:
+        print(
+            f"[bench] spec-decode: acceptance "
+            f"{spec_metrics['spec_acceptance_rate']:.0%} | "
+            f"{spec_metrics['spec_tokens_per_target_step']:.2f} tok/target-step | "
+            f"decode {spec_metrics['spec_decode_tok_per_s']:.1f} tok/s "
+            f"(baseline {spec_metrics['baseline_decode_tok_per_s']:.1f})"
+        )
+        spath = save_bench_json(
+            "serving_spec",
+            metrics=spec_metrics,
+            meta={
+                "arch": cfg.name,
+                "matmul_mode": args.matmul_mode,
+                "draft_mode": "w8a8",
+                "draft_layers": args.draft_layers,
+                "backend": jax.default_backend(),
+                "quantized": not args.float_weights,
+                "n_requests": n_req,
+                "max_new": max_new,
+                "quick": bool(args.quick),
+            },
+        )
+        print(f"[bench] wrote {spath}")
     return stats
 
 

@@ -6,7 +6,13 @@ sliding window), quantizes the weights with OCS+MSE to int8, and drives the
 batched serving engine with a queue of requests, comparing against float
 serving.
 
+``--spec`` additionally demos the self-speculative engine on a dense arch:
+the same quantized tree drafts its own tokens through the w8a8 fast path
+while the dequant-mode target verifies them in one multi-token step —
+acceptance-rate stats print alongside the ordinary serving output.
+
 Run:  PYTHONPATH=src python examples/serve_quantized.py [--arch hymba-1.5b]
+      PYTHONPATH=src python examples/serve_quantized.py --spec
 """
 import argparse
 
@@ -17,6 +23,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="hymba-1.5b")
     ap.add_argument("--bits", type=int, default=8)
+    ap.add_argument("--spec", action="store_true",
+                    help="also demo self-speculative decoding (dense arch)")
+    ap.add_argument("--spec-arch", default="glm4-9b",
+                    help="arch for the speculative demo (dense/moe only)")
+    ap.add_argument("--spec-k", type=int, default=3)
     args = ap.parse_args()
 
     stats = serve_launcher.main([
@@ -28,6 +39,26 @@ def main():
     ])
     assert stats["completed"] == 6
     print("\nserved 6/6 requests through the int8 OCS engine")
+
+    if args.spec:
+        print("\n--- self-speculative decoding (the quantized model drafts "
+              "for itself) ---")
+        sstats = serve_launcher.main([
+            "--arch", args.spec_arch, "--smoke",
+            "--n-requests", "6", "--max-batch", "3",
+            "--max-new", "8", "--max-len", "96",
+            "--bits", str(args.bits), "--ocs-ratio", "0.02",
+            "--spec-k", str(args.spec_k),
+        ])
+        assert sstats["completed"] == 6
+        assert sstats["spec_rounds"] > 0
+        print(
+            f"\nspeculative serving: {sstats['spec_acceptance_rate']:.0%} of "
+            f"drafts accepted, {sstats['spec_tokens_per_target_step']:.2f} "
+            f"tokens committed per target step "
+            f"({sstats['decode_steps']:.0f} target steps for "
+            f"{sstats['decoded_tokens']:.0f} decode tokens)"
+        )
 
 
 if __name__ == "__main__":

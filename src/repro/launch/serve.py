@@ -49,6 +49,12 @@ def build_parser():
     ap.add_argument("--float-serve", action="store_true",
                     help="skip PTQ, serve float weights")
     ap.add_argument("--compare-float", action="store_true")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="self-speculative decoding draft window (0 = off; "
+                         "dense/moe archs: the quantized w8a8 path drafts, "
+                         "the serving-precision target verifies)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="truncate the drafter to the first L layers (0 = all)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -62,10 +68,11 @@ def _make_requests(n, vocab, rng, max_new):
     return reqs
 
 
-def serve_once(cfg, params, reqs, max_batch, max_len, matmul_mode="dequant"):
+def serve_once(cfg, params, reqs, max_batch, max_len, matmul_mode="dequant",
+               spec=None):
     eng = ServingEngine(
         cfg, params, max_batch=max_batch, max_len=max_len,
-        matmul_mode=matmul_mode,
+        matmul_mode=matmul_mode, spec=spec,
     )
     for r in reqs:
         eng.submit(r)
@@ -106,12 +113,26 @@ def main(argv=None):
     else:
         qparams = params
 
+    spec = None
+    if args.spec_k:
+        from repro.serving import SpecConfig
+
+        spec = SpecConfig(k=args.spec_k, draft_layers=args.draft_layers or None)
     reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new)
     done, stats = serve_once(
         cfg, qparams, reqs, args.max_batch, args.max_len,
         matmul_mode=args.matmul_mode if not args.float_serve else "dequant",
+        spec=spec,
     )
     print(f"[serve] {stats}")
+    if spec is not None:
+        print(
+            f"[serve] spec-decode: acceptance "
+            f"{stats['spec_acceptance_rate']:.1%}, "
+            f"{stats['spec_tokens_per_target_step']:.2f} tokens/target-step "
+            f"over {stats['spec_rounds']:.0f} rounds (adaptive k -> "
+            f"{stats['spec_k']:.0f})"
+        )
 
     if args.compare_float and not args.float_serve:
         freqs = _make_requests(args.n_requests, cfg.vocab,

@@ -343,24 +343,35 @@ def attention_decode(
     kv_prefix: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     table: Optional[jnp.ndarray] = None,
 ):
-    """One-token decode. x: [B, 1, d]; pos: current position — a scalar
-    (all slots in lockstep) or a [B] vector (per-slot positions, the
-    continuous-batching engine's mixed-length admission).
+    """Decode attention against the KV cache. x: [B, Q, d]; pos: position of
+    the *first* query token — a scalar (all slots in lockstep) or a [B]
+    vector (per-slot positions, the continuous-batching engine's mixed-length
+    admission). Q == 1 is the classic one-token decode step; Q > 1 is the
+    speculative *verify* path: the Q tokens occupy positions ``pos ..
+    pos + Q - 1``, their K/V rows are written into the cache, and query ``j``
+    attends causally over cache slots ``<= pos + j`` — so the Q logits equal
+    Q sequential one-token decode steps, in one batched call.
 
-    Returns (y [B,1,d], new_cache). Sliding-window layers use a ring buffer
-    (cache length == window); new keys overwrite slot ``pos % window``.
+    Returns (y [B,Q,d], new_cache). Sliding-window layers use a ring buffer
+    (cache length == window); new keys overwrite slot ``pos % window``
+    (Q == 1 only — hymba is never speculated).
 
     ``table`` switches to the *paged* cache: ``cache`` is then a page pool
     ``[n_pages, KV, page_size, hd]`` (``serving.kv_cache``) and reads/writes
-    go through the ``[B, T]`` block table — the new token is scattered into
-    page ``table[b, pos // page_size]``, and attention runs over the
+    go through the ``[B, T]`` block table — new tokens are scattered into
+    page ``table[b, p // page_size]``, and attention runs over the
     table-gathered ``[B, KV, T*page_size, hd]`` view, which reconstructs the
     contiguous cache positions exactly (bit-exact with the dense float cache).
     """
-    b, _, _ = x.shape
+    b, qn, _ = x.shape
     hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     pos = jnp.asarray(pos)
     paged = table is not None
+    if qn > 1 and (window or kv_prefix is not None):
+        raise NotImplementedError(
+            "multi-token decode: full-causal dense/moe layers only (no ring "
+            "buffer, no learnable kv_prefix) — SSM/hybrid archs can't verify"
+        )
     if paged:
         if window:
             raise NotImplementedError(
@@ -371,22 +382,24 @@ def attention_decode(
             raise NotImplementedError("paged KV cache: no learnable kv_prefix")
         pos = jnp.broadcast_to(pos, (b,))  # block tables are per-lane
     per_slot = pos.ndim > 0
-    q = dense(params["wq"], x, name="attn_q").reshape(b, 1, h, hd)
-    k = dense(params["wk"], x, name="attn_k").reshape(b, 1, kvh, hd)
-    v = dense(params["wv"], x, name="attn_v").reshape(b, 1, kvh, hd)
+    q = dense(params["wq"], x, name="attn_q").reshape(b, qn, h, hd)
+    k = dense(params["wk"], x, name="attn_k").reshape(b, qn, kvh, hd)
+    v = dense(params["wv"], x, name="attn_v").reshape(b, qn, kvh, hd)
     if cfg.qk_norm:
         q = rms_norm(params["q_norm"], q, cfg.norm_eps)
         k = rms_norm(params["k_norm"], k, cfg.norm_eps)
+    # Query positions [B, Q]: pos + 0..Q-1 per lane (Q == 1 reduces to the
+    # classic single-position decode).
+    qpos = (pos if per_slot else jnp.broadcast_to(pos, (b,)))[:, None] + jnp.arange(qn)
     if cfg.mrope_sections is not None:
-        src = pos[:, None, None] if per_slot else pos
-        posq = jnp.broadcast_to(src, (b, 1, 3))
+        posq = jnp.broadcast_to(qpos[:, :, None], (b, qn, 3))
     else:
-        posq = pos[:, None] if per_slot else jnp.broadcast_to(pos, (b, 1))
+        posq = qpos
     q = apply_rope(q, posq, cfg.rope_theta, cfg.mrope_sections)
     k = apply_rope(k, posq, cfg.rope_theta, cfg.mrope_sections)
 
     int8_cache = cache["k"].dtype == jnp.int8
-    k_t = jnp.swapaxes(k, 1, 2)  # [B, KV, 1, hd]
+    k_t = jnp.swapaxes(k, 1, 2)  # [B, KV, Q, hd]
     v_t = jnp.swapaxes(v, 1, 2)
 
     if paged:
@@ -394,49 +407,68 @@ def attention_decode(
         # paged branch is only traced by the serving engine / paged tests.
         from repro.serving import kv_cache as _kvc
 
-        new_cache = _kvc.append_token(cache, k_t[:, :, 0], v_t[:, :, 0], table, pos)
+        if qn == 1:
+            new_cache = _kvc.append_token(
+                cache, k_t[:, :, 0], v_t[:, :, 0], table, pos
+            )
+        else:
+            new_cache = _kvc.append_tokens(cache, k, v, table, pos)
         ck, cv, cks, cvs = _kvc.gather_pages(new_cache, table)
         s_cache = ck.shape[2]
     else:
         s_cache = cache["k"].shape[2]
-        slot = (pos % s_cache) if window else jnp.minimum(pos, s_cache - 1)
-        if per_slot:
-            # Per-slot write positions: one dynamic_update_slice per batch row
-            # (vmapped); XLA fuses these into a batched scatter, still in place.
-            upd4 = jax.vmap(
-                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0))
-            )
-            upd3 = jax.vmap(
-                lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p))
-            )
+        if qn > 1:
+            # Multi-token scatter through per-token positions (clipped to the
+            # cache extent — the same overwrite-last semantics as Q == 1;
+            # clipped writes are only reachable by queries past a request's
+            # token budget, whose logits the engine never commits).
+            lin = jnp.clip(qpos, 0, s_cache - 1)  # [B, Q]
+            bidx = jnp.arange(b)[:, None]
+            if int8_cache:
+                k_q, k_s = _quant_rows(k)  # [B, Q, KV, hd], [B, Q, KV]
+                v_q, v_s = _quant_rows(v)
+                ck = cache["k"].at[bidx, :, lin, :].set(k_q)
+                cv = cache["v"].at[bidx, :, lin, :].set(v_q)
+                cks = cache["k_scale"].at[bidx, :, lin].set(k_s)
+                cvs = cache["v_scale"].at[bidx, :, lin].set(v_s)
+            else:
+                ck = cache["k"].at[bidx, :, lin, :].set(k.astype(cache["k"].dtype))
+                cv = cache["v"].at[bidx, :, lin, :].set(v.astype(cache["v"].dtype))
         else:
-            upd4 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p, 0))
-            upd3 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p))
-        if int8_cache:
-            k_q, k_s = _quant_rows(k_t)
-            v_q, v_s = _quant_rows(v_t)
-            ck = upd4(cache["k"], k_q, slot)
-            cv = upd4(cache["v"], v_q, slot)
-            cks = upd3(cache["k_scale"], k_s, slot)
-            cvs = upd3(cache["v_scale"], v_s, slot)
-        else:
-            ck = upd4(cache["k"], k_t.astype(cache["k"].dtype), slot)
-            cv = upd4(cache["v"], v_t.astype(cache["v"].dtype), slot)
+            slot = (pos % s_cache) if window else jnp.minimum(pos, s_cache - 1)
+            if per_slot:
+                # Per-slot write positions: one dynamic_update_slice per batch
+                # row (vmapped); XLA fuses these into a batched scatter.
+                upd4 = jax.vmap(
+                    lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p, 0))
+                )
+                upd3 = jax.vmap(
+                    lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, p))
+                )
+            else:
+                upd4 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p, 0))
+                upd3 = lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (0, 0, p))
+            if int8_cache:
+                k_q, k_s = _quant_rows(k_t)
+                v_q, v_s = _quant_rows(v_t)
+                ck = upd4(cache["k"], k_q, slot)
+                cv = upd4(cache["v"], v_q, slot)
+                cks = upd3(cache["k_scale"], k_s, slot)
+                cvs = upd3(cache["v_scale"], v_s, slot)
+            else:
+                ck = upd4(cache["k"], k_t.astype(cache["k"].dtype), slot)
+                cv = upd4(cache["v"], v_t.astype(cache["v"].dtype), slot)
     ck = logical(ck, "batch", "kv_heads", None, None)
     cv = logical(cv, "batch", "kv_heads", None, None)
 
     idx = jnp.arange(s_cache)
-    # Ring buffer: every slot is valid once pos >= s_cache (wrapped); before
-    # that only slots [0, pos]. Dense cache: slots [0, pos]. Per-slot pos
-    # broadcasts to a [B, S] mask.
-    if per_slot:
-        valid = (idx[None, :] <= pos[:, None]) | (
-            jnp.full((1, s_cache), bool(window), bool) & (pos[:, None] >= s_cache)
-        )
-    else:
-        valid = (idx <= pos) | jnp.full((s_cache,), bool(window), bool) & (
-            pos >= s_cache
-        )
+    # Causal visibility per query: slot i is visible to query j iff
+    # i <= pos + j. Ring buffer (window, Q == 1): every slot is valid once
+    # pos >= s_cache (wrapped). [B, Q, S] mask.
+    valid = (idx[None, None, :] <= qpos[:, :, None]) | (
+        jnp.full((1, 1, s_cache), bool(window), bool)
+        & (qpos[:, :, None] >= s_cache)
+    )
     bias = jnp.where(valid, 0.0, NEG_INF)
 
     rep = h // kvh
@@ -444,23 +476,23 @@ def attention_decode(
     # accumulate in f32/s32 (preferred_element_type). An .astype(f32) here
     # would materialize a full-cache temp copy.
     if int8_cache:
-        # Fully-int8 QK^T: quantize q per (b, kv, rep) row, s8 x s8 -> s32,
+        # Fully-int8 QK^T: quantize q per (b, q, kv, rep) row, s8 x s8 -> s32,
         # epilogue scale = q_scale * k_scale (the quant_matmul pattern).
-        qf = (q.astype(jnp.float32) * (hd ** -0.5)).reshape(b, kvh, rep, hd)
+        qf = (q.astype(jnp.float32) * (hd ** -0.5)).reshape(b, qn, kvh, rep, hd)
         q8, q_s = _quant_rows(qf)
-        s32 = jnp.einsum("bgrd,bgsd->bgrs", q8, ck, preferred_element_type=jnp.int32)
-        s = s32.astype(jnp.float32) * q_s[..., None] * cks[:, :, None, :]
+        s32 = jnp.einsum("bqgrd,bgsd->bqgrs", q8, ck, preferred_element_type=jnp.int32)
+        s = s32.astype(jnp.float32) * q_s[..., None] * cks[:, None, :, None, :]
     else:
         qf = (q.astype(jnp.float32) * (hd ** -0.5)).astype(ck.dtype)
-        qf = qf.reshape(b, kvh, rep, hd)
+        qf = qf.reshape(b, qn, kvh, rep, hd)
         s = jnp.einsum(
-            "bgrd,bgsd->bgrs", qf, ck, preferred_element_type=jnp.float32
+            "bqgrd,bgsd->bqgrs", qf, ck, preferred_element_type=jnp.float32
         )
-    s = s + (bias[:, None, None, :] if per_slot else bias[None, None, None, :])
+    s = s + bias[:, :, None, None, :]
     if kv_prefix is not None:
-        pk, pv = kv_prefix  # meta prefix: [B, M, KV, hd]
+        pk = kv_prefix[0]  # meta prefix keys: [B, M, KV, hd]
         sp = jnp.einsum(
-            "bgrd,bmgd->bgrm", qf, pk.astype(ck.dtype), preferred_element_type=jnp.float32
+            "bqgrd,bmgd->bqgrm", qf, pk.astype(ck.dtype), preferred_element_type=jnp.float32
         )
         s = jnp.concatenate([sp, s], axis=-1)
     p = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
@@ -471,12 +503,12 @@ def attention_decode(
         Exact: out = sum_s p[s] v8[s] vs[s] = (p*vs) @ v8."""
         if not int8_cache:
             return jnp.einsum(
-                "bgrs,bgsd->bgrd", p_seq.astype(v_cache.dtype), v_cache,
+                "bqgrs,bgsd->bqgrd", p_seq.astype(v_cache.dtype), v_cache,
                 preferred_element_type=jnp.float32,
             )
-        p_fold = p_seq * cvs[:, :, None, :]
+        p_fold = p_seq * cvs[:, None, :, None, :]
         p8, p_s = _quant_rows(p_fold)
-        o32 = jnp.einsum("bgrs,bgsd->bgrd", p8, v_cache,
+        o32 = jnp.einsum("bqgrs,bgsd->bqgrd", p8, v_cache,
                          preferred_element_type=jnp.int32)
         return o32.astype(jnp.float32) * p_s[..., None]
 
@@ -484,7 +516,7 @@ def attention_decode(
         m = kv_prefix[0].shape[1]
         pfx_dtype = kv_prefix[1].dtype
         out = jnp.einsum(
-            "bgrm,bmgd->bgrd",
+            "bqgrm,bmgd->bqgrd",
             p[..., :m].astype(pfx_dtype),
             kv_prefix[1],
             preferred_element_type=jnp.float32,
@@ -492,7 +524,7 @@ def attention_decode(
         out = out + pv(p[..., m:], cv)
     else:
         out = pv(p, cv)
-    out = out.astype(x.dtype).reshape(b, 1, h * hd)
+    out = out.astype(x.dtype).reshape(b, qn, h * hd)
     y = dense(params["wo"], out, name="attn_o")
     if not paged:  # paged: new_cache is the updated page pool, built above
         new_cache = {"k": ck, "v": cv}

@@ -401,8 +401,21 @@ def _decode_block(cfg: ModelConfig, p, x, cache, pos, window: int = 0, table=Non
     raise ValueError(cfg.block)
 
 
-def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
-    """serve_step: one new token [B, 1] -> (logits [B, V], new caches).
+def decode_tokens(
+    params,
+    tokens: jnp.ndarray,
+    caches,
+    cfg: ModelConfig,
+    *,
+    layers_limit: Optional[int] = None,
+):
+    """Shared decode body: Q tokens [B, Q] -> (logits [B, Q, V], new caches).
+
+    ``Q == 1`` is the classic serve step; ``Q > 1`` is the speculative
+    *verify* path (dense/moe only): the Q tokens occupy positions ``pos ..
+    pos + Q - 1``, K/V rows for all of them are written through the cache
+    (paged or dense), and logit ``j`` attends causally over positions
+    ``<= pos + j`` — equal to Q sequential one-token steps, in ONE call.
 
     The layer loop is unrolled (see ``init_cache``): per-layer cache tensors
     are donated and updated in place; stacked params are sliced per layer
@@ -410,15 +423,34 @@ def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
 
     Paged caches (``"table"`` present, see ``serving.kv_cache``): per-layer
     leaves are page pools and reads/writes go through the shared block table.
+
+    ``layers_limit`` (dense/moe): run only the first L layers and project
+    their output through final_norm + lm_head — the early-exit *drafter* of
+    the self-speculation subsystem. Caches of skipped layers pass through
+    untouched.
     """
     pos = caches["pos"]
     table = caches.get("table")  # paged KV cache (dense/moe serving)
-    x = embed(params["embed"], token)
+    qn = tokens.shape[1]
+    if qn > 1 and cfg.block not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"multi-token decode: attention archs only, got {cfg.block} "
+            "(SSM/hybrid decode states cannot roll back a rejected tail)"
+        )
+    n_run = cfg.n_layers
+    if layers_limit is not None:
+        if cfg.block not in ("dense", "moe"):
+            raise NotImplementedError("layers_limit: dense/moe drafters only")
+        n_run = max(1, min(layers_limit, cfg.n_layers))
+    x = embed(params["embed"], tokens)
     x = logical(x, "batch", "seq", "embed")
 
     flags = _hymba_flags(cfg) if cfg.block == "hymba" else None
     new_layers = []
     for i in range(cfg.n_layers):
+        if i >= n_run:
+            new_layers.append(caches["layers"][i])  # drafter skips the tail
+            continue
         p_i = jax.tree.map(lambda a: a[i], params["layers"])
         if cfg.block == "hymba":
             window = 0 if bool(flags[i]) else cfg.hymba.swa_window
@@ -434,14 +466,49 @@ def decode_step(params, token: jnp.ndarray, caches, cfg: ModelConfig):
         else:
             raise ValueError(cfg.block)
         new_layers.append(nc)
-    new_caches = {"layers": new_layers, "pos": pos + 1}
+    new_caches = {"layers": new_layers, "pos": pos + qn}
     if table is not None:
         new_caches["table"] = table
 
     x = _norm(cfg, params["final_norm"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = dense(head, x, name="lm_head")[:, 0, :]
-    return logical(logits, "batch", "vocab"), new_caches
+    logits = dense(head, x, name="lm_head")
+    return logical(logits, "batch", "seq", "vocab"), new_caches
+
+
+def decode_step(
+    params,
+    token: jnp.ndarray,
+    caches,
+    cfg: ModelConfig,
+    *,
+    layers_limit: Optional[int] = None,
+):
+    """serve_step: one new token [B, 1] -> (logits [B, V], new caches).
+
+    ``layers_limit`` truncates to the first L layers (the speculative
+    drafter); see :func:`decode_tokens`.
+    """
+    logits, new_caches = decode_tokens(
+        params, token, caches, cfg, layers_limit=layers_limit
+    )
+    return logical(logits[:, 0, :], "batch", "vocab"), new_caches
+
+
+def verify_step(params, tokens: jnp.ndarray, caches, cfg: ModelConfig):
+    """Speculative verify: score Q proposed tokens in ONE batched step.
+
+    tokens: ``[B, Q]`` — each lane's current token followed by its Q-1 draft
+    proposals. Returns (logits ``[B, Q, V]``, new caches with ``pos``
+    advanced by Q): ``logits[:, j]`` is exactly the distribution a plain
+    decode loop would produce after consuming ``tokens[:, :j+1]``, so greedy
+    acceptance (`argmax(logits[:, j]) == tokens[:, j+1]`) commits precisely
+    the tokens plain greedy decode would emit. The caller rolls back the
+    rejected tail by rewinding ``pos`` (``serving.kv_cache.rewind_positions``)
+    — K/V written past the committed position is invisible to the causal
+    mask and overwritten in place later. Dense/moe archs only.
+    """
+    return decode_tokens(params, tokens, caches, cfg)
 
 
 def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, max_len: int):
@@ -613,6 +680,9 @@ class TransformerLM:
 
     def decode_step(self, params, token, caches):
         return decode_step(params, token, caches, self.cfg)
+
+    def verify_step(self, params, tokens, caches):
+        return verify_step(params, tokens, caches, self.cfg)
 
     def prefill(self, params, tokens, max_len: int):
         return prefill(params, tokens, self.cfg, max_len)

@@ -1,3 +1,5 @@
 from .engine import Request, ServingEngine  # noqa: F401
 from .kv_cache import PageAllocator, pages_needed  # noqa: F401
+from .spec_decode import AdaptiveK, SpecConfig, SpecDecoder  # noqa: F401
 from . import kv_cache  # noqa: F401
+from . import spec_decode  # noqa: F401

@@ -28,7 +28,14 @@ float model in low precision. This engine is that provider's serving loop:
   mixed-length admission decodes with exact causal masks and RoPE phases;
 * **matmul_mode** — ``dequant`` (weight-only int8) or ``w8a8`` (dynamic
   per-row activation quant; routes through the fused Pallas kernel when
-  ``repro.models.layers.USE_PALLAS_SERVING`` is on).
+  ``repro.models.layers.USE_PALLAS_SERVING`` is on);
+* **self-speculative decoding** (``spec=``/``spec_k=``, dense/moe) — the
+  quantized model drafts ``k`` greedy tokens per lane (``serving.
+  spec_decode``), the serving-precision target verifies all ``k+1``
+  positions in one batched multi-token step, the accepted prefix commits
+  and the rejected tail rolls back by rewinding the per-lane positions.
+  Greedy spec-decode is *output-identical* to plain greedy decode — the
+  subsystem's correctness contract.
 
 The engine is deliberately synchronous and deterministic (greedy argmax) —
 batching policy, not sampling, is what the systems layer exercises. Trace
@@ -51,6 +58,7 @@ from repro.configs.base import ModelConfig
 from repro.models import layers
 from repro.models import transformer as T
 from . import kv_cache as kvc
+from . import spec_decode as spec_mod
 
 __all__ = ["Request", "ServingEngine"]
 
@@ -87,11 +95,21 @@ class ServingEngine:
         paged: Optional[bool] = None,
         page_size: int = 16,
         n_pages: Optional[int] = None,
+        spec: Optional[spec_mod.SpecConfig] = None,
+        spec_k: int = 0,
     ):
         if not cfg.causal:
             raise ValueError("encoder-only arch: no decode serving")
         if matmul_mode not in ("dequant", "w8a8"):
             raise ValueError(f"matmul_mode must be dequant|w8a8, got {matmul_mode}")
+        # Self-speculative decoding: the quantized model drafts k tokens per
+        # lane, the serving-precision target verifies them in one multi-token
+        # step (`spec_k=` is shorthand for `spec=SpecConfig(k=spec_k)`).
+        if spec is None and spec_k:
+            spec = spec_mod.SpecConfig(k=spec_k)
+        self._spec = (
+            spec_mod.SpecDecoder(cfg, spec, matmul_mode) if spec is not None else None
+        )
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -374,7 +392,9 @@ class ServingEngine:
         if self.paged:
             # Reclaim pages and point the lane at the trash page so its dead
             # writes can never land in a page the allocator hands out again.
-            self.allocator.release(slot.pages)
+            # Retirement is the keep_tokens=0 case of the page-aware truncate
+            # (the speculative rollback path — one release policy for both).
+            self.allocator.truncate(slot.pages, 0)
             self.caches["table"] = (
                 self.caches["table"].at[slot_idx].set(kvc.TRASH_PAGE)
             )
@@ -397,6 +417,16 @@ class ServingEngine:
         # abort the engine loop and strand every in-flight sequence — and a
         # request larger than the whole pool would deadlock the queue.
         self._validate_prompt_len(len(req.prompt))
+        if self._spec is not None and len(req.prompt) + req.max_new_tokens > self.max_len:
+            # Speculative windows write up to k positions past the committed
+            # point; exactness needs every *committed* position to live in a
+            # real cache slot, so the full budget must fit (plain decode
+            # merely degrades to overwrite-last beyond max_len).
+            raise ValueError(
+                f"speculative engine: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) must fit max_len "
+                f"({self.max_len})"
+            )
         if self.paged:
             need = min(
                 kvc.pages_needed(
@@ -423,12 +453,89 @@ class ServingEngine:
                 break  # pool full: wait for pages to be reclaimed
             self.queue.popleft()
 
+    def _spec_step(self):
+        """One speculative engine iteration: draft k tokens per lane, verify
+        all k+1 positions in ONE target step, commit each lane's accepted
+        prefix (+ the target's correction/bonus token), roll back the rest.
+
+        Every committed token is the *target's* greedy argmax — the committed
+        stream is token-identical to plain greedy decode by construction; the
+        draft only decides how many of those tokens one target step yields.
+        """
+        dec = self._spec
+        pos0 = np.asarray(self.caches["pos"])
+        tok0 = np.asarray(self.tokens)[:, 0]
+        warm0 = dec.draft_time_s + dec.verify_time_s
+        compile0 = dec.compile_s
+        # Clamp the window to the largest remaining lane budget: drafts past
+        # every budget can never commit (k == 0 degenerates to a plain decode
+        # step through the verify jit when every lane needs exactly 1 token).
+        k_want = min(
+            dec.controller.k,
+            max(0, max(s.remaining for s in self.slots if s.req) - 1),
+        )
+        greedy, drafts, self.caches, k = dec.propose_and_verify(
+            self.params, self.caches, self.tokens, k_want
+        )
+        self.steps += 1
+        new_pos = pos0.copy()
+        next_tok = tok0.copy()
+        round_committed = round_acc = round_prop = 0
+        to_retire = []
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue  # idle lanes drafted/verified into their trash rows
+            usable = min(k, slot.remaining - 1)  # drafts that could commit
+            commit, n_acc = spec_mod.committed_tokens(drafts[i], greedy[i], k)
+            used = 0
+            done = False
+            for t in commit:
+                slot.req.output.append(int(t))
+                self.decoded_tokens += 1
+                slot.remaining -= 1
+                used += 1
+                if slot.remaining <= 0 or (
+                    slot.req.eos_id is not None and int(t) == slot.req.eos_id
+                ):
+                    done = True  # eos/budget mid-window: drop the tail
+                    break
+            # Acceptance is booked over the drafts that could possibly commit
+            # — window tails past a lane's budget measure nothing.
+            dec.book_lane(min(n_acc, usable), used, usable)
+            round_committed += used
+            round_acc += min(n_acc, usable)
+            round_prop += usable
+            # Page-aware rollback: rewind this lane to its committed position
+            # (stale K/V past it is invisible and overwritten in place; the
+            # lane's pages all stay owned — only retirement releases them).
+            new_pos[i] = pos0[i] + used
+            next_tok[i] = commit[used - 1]
+            if done:
+                to_retire.append(i)
+        dec.end_round(round_acc, round_prop)
+        self.caches["pos"] = kvc.rewind_positions(self.caches["pos"], new_pos)
+        self.tokens = jnp.asarray(next_tok, jnp.int32)[:, None]
+        for i in to_retire:
+            self._retire(i)
+        # Mirror into the engine's warm decode counters so decode_tok_per_s
+        # stays the end-to-end generation throughput under speculation.
+        warm_delta = (dec.draft_time_s + dec.verify_time_s) - warm0
+        if warm_delta > 0:
+            self.decode_time_s += warm_delta
+            self.decode_tokens_warm += round_committed
+        else:
+            self.decode_compile_s += dec.compile_s - compile0
+        return True
+
     def step(self):
         """One engine iteration: admit from queue, decode one token for all
-        active slots, retire finished requests."""
+        active slots (or run one speculation round), retire finished
+        requests."""
         self._admit()
         if not any(s.req for s in self.slots):
             return False
+        if self._spec is not None:
+            return self._spec_step()
         n_active = sum(1 for s in self.slots if s.req)
         traces0 = self.decode_traces
         t0 = time.perf_counter()
@@ -524,4 +631,19 @@ class ServingEngine:
                 "prefix_hit_pages": float(alloc.prefix_hit_pages) if alloc else 0.0,
             }
         )
+        # Speculative-decoding accounting (zeros when speculation is off,
+        # keeping the schema flat).
+        spec_zero = {
+            "spec_rounds": 0.0,
+            "spec_k": 0.0,
+            "spec_proposed": 0.0,
+            "spec_accepted": 0.0,
+            "spec_acceptance_rate": 0.0,
+            "spec_tokens_per_target_step": 0.0,
+            "spec_draft_time_s": 0.0,
+            "spec_verify_time_s": 0.0,
+            "spec_compile_s": 0.0,
+        }
+        out["spec_enabled"] = 1.0 if self._spec is not None else 0.0
+        out.update(self._spec.stats() if self._spec is not None else spec_zero)
         return out

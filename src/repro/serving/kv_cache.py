@@ -55,9 +55,11 @@ __all__ = [
     "init_page_pool",
     "init_paged_cache",
     "append_token",
+    "append_tokens",
     "gather_pages",
     "write_prompt_pages",
     "gather_prefix",
+    "rewind_positions",
     "PageAllocator",
 ]
 
@@ -155,6 +157,52 @@ def append_token(pool: Dict, k_new, v_new, table, pos) -> Dict:
         out["k"] = pool["k"].at[pidx, :, slot, :].set(k_new.astype(pool["k"].dtype))
         out["v"] = pool["v"].at[pidx, :, slot, :].set(v_new.astype(pool["v"].dtype))
     return _shard_pool(out)
+
+
+def append_tokens(pool: Dict, k_new, v_new, table, pos) -> Dict:
+    """Write Q consecutive tokens' K/V rows through the block table — the
+    speculative verify path's batched generalization of :func:`append_token`.
+
+    k_new/v_new: ``[B, Q, KV, hd]`` (post-RoPE); table: ``[B, T]``; pos:
+    ``[B]`` — the position of each lane's *first* token (token ``j`` lands at
+    ``pos + j``). Per-token positions are clipped to the table extent (the
+    single-token overwrite-last semantics); clipped and trash-page targets
+    are only ever read by queries past a request's budget, whose logits the
+    engine never commits.
+    """
+    ps = pool["k"].shape[2]
+    t = table.shape[1]
+    b, qn = k_new.shape[:2]
+    lin = jnp.clip(pos[:, None] + jnp.arange(qn)[None, :], 0, t * ps - 1)  # [B,Q]
+    pidx = jnp.take_along_axis(table, lin // ps, axis=1)  # [B, Q]
+    slot = lin % ps
+    out = dict(pool)
+    if pool["k"].dtype == jnp.int8:
+        k_q, k_s = _quant_rows(k_new)
+        v_q, v_s = _quant_rows(v_new)
+        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_q)
+        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_q)
+        out["k_scale"] = pool["k_scale"].at[pidx, :, slot].set(k_s)
+        out["v_scale"] = pool["v_scale"].at[pidx, :, slot].set(v_s)
+    else:
+        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_new.astype(pool["k"].dtype))
+        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_new.astype(pool["v"].dtype))
+    return _shard_pool(out)
+
+
+def rewind_positions(pos_vec, new_pos) -> jnp.ndarray:
+    """Roll the per-lane position vector back to the committed positions.
+
+    The paged-KV rollback invariant (docs/serving.md): a speculative verify
+    writes K/V for every proposed position, but only positions ``< pos`` are
+    visible to the causal mask — so rolling back a rejected tail is *just*
+    this rewind. The stale rows past the committed position are invisible to
+    every subsequent read and are overwritten in place when decode reaches
+    those positions again; no page content needs touching, and prompt pages
+    (always at positions below the committed prefix) are never affected, so
+    the prefix cache stays consistent.
+    """
+    return jnp.asarray(new_pos, jnp.int32).reshape(jnp.asarray(pos_vec).shape)
 
 
 def gather_pages(pool: Dict, table) -> Tuple:
@@ -327,6 +375,24 @@ class PageAllocator:
                 self._lru[pid] = None  # keep hit-able until evicted
             else:
                 self._free.append(pid)
+
+    def truncate(self, pages: List[int], keep_tokens: int) -> List[int]:
+        """Page-aware rollback: release the tail of a lane's ``pages`` not
+        needed to hold ``keep_tokens`` committed cache rows, returning the
+        kept prefix. ``keep_tokens=0`` is retirement (release everything).
+
+        Prefix-cache consistency: a released page that holds a registered
+        prompt prefix drops to the LRU (still hit-able, evicted only under
+        pool pressure) exactly like any other release — truncation can never
+        orphan or double-free a shared prefix page, because shared prompt
+        pages sit at the *front* of a lane's page list (positions below the
+        committed prefix) and a commit point can only move past them.
+        """
+        keep = pages_needed(keep_tokens, self.page_size)
+        if keep >= len(pages):
+            return list(pages)
+        self.release(pages[keep:])
+        return list(pages[:keep])
 
     # -- prefix cache ------------------------------------------------------
 

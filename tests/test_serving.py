@@ -188,8 +188,13 @@ def test_stats_schema(dense_setup):
         "kv_page_size", "kv_pages_capacity", "kv_pages_in_use",
         "kv_pages_cached", "kv_pages_peak", "kv_pool_occupancy",
         "kv_pool_peak_occupancy", "prefix_hit_rate", "prefix_hit_pages",
+        # speculative decoding (zeros when speculation is off)
+        "spec_enabled", "spec_rounds", "spec_k", "spec_acceptance_rate",
+        "spec_tokens_per_target_step", "spec_draft_time_s",
+        "spec_verify_time_s", "spec_compile_s",
     ):
         assert key in s, key
+    assert s["spec_enabled"] == 0.0
     assert s["prefill_tok_per_s"] > 0 and s["decode_tok_per_s"] > 0
     # Compile time was actually carved out of the warm buckets.
     assert s["prefill_compile_s"] > 0 and s["decode_compile_s"] > 0
