@@ -4,12 +4,16 @@
 #   make test         tier-1 gate (must stay green; the driver checks it)
 #   make test-fast    tier-1 minus the slow-marked cases
 #   make bench-smoke  serving throughput smoke (baseline + spec-decode arm)
+#                     + paged-attention microbench
 #                     -> results/BENCH_serving.json + BENCH_serving_spec.json
+#                        + BENCH_paged_attention.json
+#   make bench-attn   paged-attention decode microbench (kernel vs gather
+#                     oracle) -> results/BENCH_paged_attention.json
 #   make bench        every paper table + serving (slow; trains subjects once)
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench-smoke bench
+.PHONY: test test-fast bench-smoke bench-attn bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -19,6 +23,10 @@ test-fast:
 
 bench-smoke:
 	$(PY) -m benchmarks.serving_throughput --quick
+	$(PY) -m benchmarks.paged_attention_bench --quick
+
+bench-attn:
+	$(PY) -m benchmarks.paged_attention_bench
 
 bench:
 	$(PY) -m benchmarks.run --quick

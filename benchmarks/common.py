@@ -290,16 +290,19 @@ def save_json(name: str, obj) -> None:
 # v3: the speculative-decoding arm (BENCH_serving_spec.json: acceptance rate,
 # tokens/target-step, spec-vs-baseline decode throughput) and the spec_*
 # zeros in the baseline serving metrics.
-BENCH_SCHEMA_VERSION = 3
+# v4: the paged-attention microbench (BENCH_paged_attention.json: kernel vs
+# gather-oracle decode latency/throughput over context x Q x page dtype) and
+# the attn_step_ms / attn_kernel decode-path accounting in BENCH_serving.
+BENCH_SCHEMA_VERSION = 4
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:
     """Write ``results/BENCH_<bench>.json`` in the stable cross-PR schema.
 
-    Schema (version 3, consumed by future PRs' trend tooling — append keys,
+    Schema (version 4, consumed by future PRs' trend tooling — append keys,
     never rename):
 
-        {"schema": 3, "bench": str, "created_unix": float,
+        {"schema": 4, "bench": str, "created_unix": float,
          "metrics": {flat name -> number}, "meta": {free-form context}}
     """
     name = f"BENCH_{bench}"

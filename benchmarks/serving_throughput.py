@@ -50,12 +50,12 @@ from .common import save_bench_json
 
 def run_engine(
     cfg, params, *, lengths, max_new, max_batch, max_len, matmul_mode,
-    n_pages=None, page_size=16, spec=None,
+    n_pages=None, page_size=16, spec=None, paged_attn=None, attn_probe=False,
 ):
     eng = ServingEngine(
         cfg, params, max_batch=max_batch, max_len=max_len,
         matmul_mode=matmul_mode, n_pages=n_pages, page_size=page_size,
-        spec=spec,
+        spec=spec, use_pallas_paged_attn=paged_attn, attn_probe=attn_probe,
     )
     rng = np.random.default_rng(0)
     for i, n in enumerate(lengths):
@@ -118,7 +118,8 @@ def check_backpressure(cfg, params, *, lengths, max_new, max_batch, max_len,
 
 
 def run_spec_arm(cfg, params, base_eng, base_stats, *, lengths, max_new,
-                 max_batch, max_len, matmul_mode, spec_k, draft_layers):
+                 max_batch, max_len, matmul_mode, spec_k, draft_layers,
+                 paged_attn=None):
     """Speculative-decoding arm (schema v3): rerun the workload with the
     self-speculative engine (quantized draft, serving-precision verify) and
     report acceptance rate, tokens/target-step, and end-to-end decode
@@ -134,9 +135,12 @@ def run_spec_arm(cfg, params, base_eng, base_stats, *, lengths, max_new,
     from repro.serving import SpecConfig
 
     spec = SpecConfig(k=spec_k, draft_layers=draft_layers or None)
+    # Same attention path as the baseline arm: the output-identity assertion
+    # below compares the two engines token for token.
     eng, s = run_engine(
         cfg, params, lengths=lengths, max_new=max_new, max_batch=max_batch,
         max_len=max_len, matmul_mode=matmul_mode, spec=spec,
+        paged_attn=paged_attn,
     )
     base_out = {r.uid: r.output for r in base_eng.done}
     spec_out = {r.uid: r.output for r in eng.done}
@@ -205,6 +209,11 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--float-weights", action="store_true",
                     help="skip PTQ, serve the float tree")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused paged-attention decode kernel for the "
+                         "baseline arm (auto = models.attention."
+                         "USE_PALLAS_PAGED_ATTN default)")
     ap.add_argument("--spec-k", type=int, default=3,
                     help="speculative-decoding arm draft window (0 = off)")
     ap.add_argument("--draft-layers", type=int, default=0,
@@ -231,17 +240,19 @@ def main(argv=None):
         f"[bench] arch={cfg.name} mode={args.matmul_mode} "
         f"requests={n_req} lengths={lengths}"
     )
+    paged_attn = {"auto": None, "on": True, "off": False}[args.paged_attn]
     eng, stats = run_engine(
         cfg, params, lengths=lengths, max_new=max_new,
         max_batch=args.max_batch, max_len=args.max_len,
-        matmul_mode=args.matmul_mode,
+        matmul_mode=args.matmul_mode, paged_attn=paged_attn,
+        attn_probe=cfg.block in ("dense", "moe"),
     )
     check_o1_prefill(eng, stats, lengths)
     spec_metrics = run_spec_arm(
         cfg, params, eng, stats, lengths=lengths, max_new=max_new,
         max_batch=args.max_batch, max_len=args.max_len,
         matmul_mode=args.matmul_mode, spec_k=args.spec_k,
-        draft_layers=args.draft_layers,
+        draft_layers=args.draft_layers, paged_attn=paged_attn,
     )
     bp_metrics = check_backpressure(
         cfg, params, lengths=lengths, max_new=max_new,
@@ -260,6 +271,10 @@ def main(argv=None):
             f"{stats['kv_pages_capacity']:.0f} pages "
             f"({stats['kv_pool_peak_occupancy']:.0%}) | "
             f"prefix hit rate {stats['prefix_hit_rate']:.0%}"
+        )
+        print(
+            f"[bench] decode attention: kernel={stats['attn_kernel']} | "
+            f"probed step {stats['attn_step_ms']:.2f} ms/layer"
         )
     path = save_bench_json(
         "serving",
@@ -283,11 +298,15 @@ def main(argv=None):
             "kv_pool_peak_occupancy": stats["kv_pool_peak_occupancy"],
             "prefix_hit_rate": stats["prefix_hit_rate"],
             "prefix_hit_pages": stats["prefix_hit_pages"],
+            # decode-attention path accounting (schema v4)
+            "attn_step_ms": stats["attn_step_ms"],
             **bp_metrics,
         },
         meta={
             "arch": cfg.name,
             "matmul_mode": args.matmul_mode,
+            "attn_kernel": stats["attn_kernel"],
+            "paged_attn": args.paged_attn,
             "backend": jax.default_backend(),
             "quantized": not args.float_weights,
             "n_requests": n_req,

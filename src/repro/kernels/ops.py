@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from . import paged_attention as _pa
 from .dynamic_quant import dynamic_quant as _dynamic_quant_pallas
 from .fused_qmatmul import fused_quant_matmul as _fused_qmatmul_pallas
 from .ocs_matmul import ocs_quant_matmul as _ocs_matmul_pallas
@@ -25,6 +26,7 @@ __all__ = [
     "dynamic_quant",
     "ocs_quant_matmul",
     "fused_quant_matmul",
+    "paged_attention",
     "backend_mode",
 ]
 
@@ -89,6 +91,30 @@ def fused_quant_matmul(
     return _fused_qmatmul_pallas(
         x, w8, w_scale, src_tail, bits=bits, out_dtype=out_dtype,
         interpret=(mode == "interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def paged_attention(pool, table, pos, q, k_new, v_new, *, force: Optional[str] = None):
+    """Fused append + paged flash-decode attention over the KV page pool.
+
+    pool: page-pool dict (``serving.kv_cache`` layout); table: ``[B, T]``
+    int32; pos: ``[B]`` int32; q: ``[B, Q, H, hd]`` post-RoPE (unscaled);
+    k_new/v_new: ``[B, Q, KV, hd]`` post-RoPE. Returns
+    ``(out [B, Q, H, hd] f32, appended pool)``.
+
+    Dispatch: the Pallas kernel on TPU (page tiles within the VMEM budget),
+    the gather-free XLA online-softmax loop elsewhere — neither materializes
+    the per-lane gathered cache. ``force="gather"`` runs the demoted
+    gather-everything oracle; ``force="interpret"`` the kernel interpreted.
+    """
+    if force == "gather":
+        return _pa.paged_attention_gather_ref(pool, table, pos, q, k_new, v_new)
+    mode = backend_mode(force)
+    if mode == "ref":
+        return _pa.paged_attention_xla(pool, table, pos, q, k_new, v_new)
+    return _pa.paged_attention(
+        pool, table, pos, q, k_new, v_new, interpret=(mode == "interpret")
     )
 
 

@@ -1,0 +1,538 @@
+"""Pallas TPU kernel: paged-attention decode over the KV page pool.
+
+The paged decode path previously re-materialized the whole gathered cache
+every step and every layer: ``gather_pages(pool, table)`` wrote a dense
+``[B, KV, T*page_size, hd]`` HBM tensor (plus its scale gathers), attention
+read it back, and the current token's K/V needed a *separate* scatter into
+the pool first — three HBM round trips whose cost scales with the table
+extent (max context), not with the tokens actually attended. This module
+replaces that with one flash-decode-style dispatch that consumes the pool
+*in place*:
+
+* **fused append** — the current Q tokens' K/V rows are quantized (int8
+  pools) and DMA'd into their pages inside the kernel, so decode is one
+  dispatch instead of scatter + gather + attention;
+* **block-table page loads** — each grid program ``(lane b, kv head g)``
+  walks its lane's block-table row and DMAs one ``[page_size, hd]`` page
+  tile at a time into VMEM; nothing per-lane is ever materialized in HBM;
+* **in-VMEM dequant** — int8 page rows are dequantized with their per-token
+  scales right after the load (``x * scale``, the paper's linear grid);
+* **online softmax** — the flash recurrence accumulates across pages, so
+  the loop stops after ``(pos + Q - 1) // page_size + 1`` pages: work scales
+  with the tokens attended, not the table extent;
+* **position masking** — per-lane causal masks (query ``j`` sees positions
+  ``<= pos + j``) *and* an explicit trash-page mask: page-0 loads are
+  select-zeroed before the dots, so a poisoned (even NaN) trash page can
+  never reach an output (see ``tests/test_paged_attention.py``).
+
+``Q > 1`` queries run the speculative ``verify_step`` through the same
+kernel: rows are laid out ``(query j, rep r)`` row-major, so row ``qr``
+masks against ``pos + qr // rep``.
+
+Numerics: the kernel computes attention in f32 after dequant. Float pages
+match the gather oracle to float tolerance (online vs one-shot softmax);
+int8 pages additionally differ from the *legacy* gather path, which
+re-quantizes q and the softmax weights for s8 x s8 dots. The legacy path
+stays the production fallback wherever the kernel doesn't run, so the
+engine-level bit-exactness contracts (float-page parity vs the dense cache;
+spec-decode greedy output identity) are preserved there unchanged.
+
+Fallbacks (see ``ops.paged_attention``): non-TPU backends and page tiles
+past the VMEM budget run :func:`paged_attention_xla` — the same fused
+append + online-softmax loop expressed as a ``fori_loop`` over page *blocks*
+with a dynamic trip count. It never materializes the full gather either,
+which is what the ``benchmarks/paged_attention_bench.py`` kernel arm
+measures on CPU. :func:`paged_attention_gather_ref` keeps the old
+gather-everything formulation as the reference oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .dynamic_quant import VMEM_BUDGET_BYTES
+
+__all__ = [
+    "TRASH_PAGE",
+    "quant_rows",
+    "append_rows",
+    "paged_attention_gather_ref",
+    "paged_attention_xla",
+    "paged_attention_kernel",
+    "paged_attention",
+    "VMEM_BUDGET_BYTES",
+]
+
+NEG_INF = -1e30  # finite: exp(NEG_INF - NEG_INF) == 1, never NaN
+TRASH_PAGE = 0  # reserved pool page (serving.kv_cache.TRASH_PAGE): never read
+
+
+def quant_rows(x: jnp.ndarray, qmax: float = 127.0):
+    """Symmetric absmax quantization over the last axis -> (int8, f32 scale).
+
+    The single source of truth for KV-cache-row quantization: the dense int8
+    cache, the int8 page pool, and this kernel's fused append all call (or
+    mirror bit-for-bit) this function, so pools written by any path agree
+    bitwise. ``models.attention._quant_rows`` is an alias of this.
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-30) / qmax
+    q = jnp.clip(jnp.floor(x.astype(jnp.float32) / scale + 0.5), -qmax, qmax)
+    return q.astype(jnp.int8), scale[..., 0]
+
+
+def append_rows(pool: Dict, k_new, v_new, table, pos) -> Dict:
+    """XLA scatter of Q tokens' K/V rows through the block table.
+
+    k_new/v_new: ``[B, Q, KV, hd]`` (post-RoPE); table: ``[B, T]``; pos:
+    ``[B]`` first-token position per lane. Bitwise identical to
+    ``serving.kv_cache.append_tokens`` (same clamp, same quant grid) minus
+    the sharding constraint, which the model layer re-applies.
+    """
+    ps = pool["k"].shape[2]
+    t = table.shape[1]
+    qn = k_new.shape[1]
+    lin = jnp.clip(pos[:, None] + jnp.arange(qn)[None, :], 0, t * ps - 1)
+    pidx = jnp.take_along_axis(table, lin // ps, axis=1)  # [B, Q]
+    slot = lin % ps
+    out = dict(pool)
+    if pool["k"].dtype == jnp.int8:
+        k_q, k_s = quant_rows(k_new)
+        v_q, v_s = quant_rows(v_new)
+        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_q)
+        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_q)
+        out["k_scale"] = pool["k_scale"].at[pidx, :, slot].set(k_s)
+        out["v_scale"] = pool["v_scale"].at[pidx, :, slot].set(v_s)
+    else:
+        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_new.astype(pool["k"].dtype))
+        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_new.astype(pool["v"].dtype))
+    return out
+
+
+def _q_rows(q: jnp.ndarray, kvh: int) -> jnp.ndarray:
+    """[B, Q, H, hd] -> [B, KV, Q*rep, hd] f32, scaled by hd^-1/2.
+
+    Row ``qr`` is (query ``qr // rep``, rep ``qr % rep``) — the layout every
+    path's causal mask assumes.
+    """
+    b, qn, h, hd = q.shape
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    qf = qf.reshape(b, qn, kvh, h // kvh, hd)
+    return jnp.moveaxis(qf, 1, 2).reshape(b, kvh, qn * (h // kvh), hd)
+
+
+def _rows_out(out: jnp.ndarray, qn: int) -> jnp.ndarray:
+    """[B, KV, Q*rep, hd] -> [B, Q, H, hd] (inverse of :func:`_q_rows`)."""
+    b, kvh, qr, hd = out.shape
+    out = out.reshape(b, kvh, qn, qr // qn, hd)
+    return jnp.moveaxis(out, 2, 1).reshape(b, qn, kvh * (qr // qn), hd)
+
+
+def _dequant_zero_trash(vals, scale, readable):
+    """Page values -> f32, per-row scales applied, non-readable pages
+    select-zeroed (a *select*, not a multiply: NaN poison must not survive)."""
+    x = vals.astype(jnp.float32)
+    if scale is not None:
+        x = x * scale[..., None]
+    return jnp.where(readable, x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Reference oracle: gather everything, one-shot softmax
+
+
+def paged_attention_gather_ref(pool, table, pos, q, k_new, v_new) -> Tuple:
+    """The demoted formulation: append, gather ``pool[table]`` dense,
+    dequantize in full, one-shot softmax. Same f32-after-dequant math as the
+    kernel (the legacy ``attention_decode`` int8 path additionally quantizes
+    q and the softmax weights — that path lives on in the model layer)."""
+    b, qn, h, hd = q.shape
+    kvh, ps = pool["k"].shape[1:3]
+    t = table.shape[1]
+    new_pool = append_rows(pool, k_new, v_new, table, pos)
+    int8 = pool["k"].dtype == jnp.int8
+
+    def flat(x):  # [B, T, KV, ps, ...] -> [B, KV, T*ps, ...]
+        return jnp.moveaxis(x, 2, 1).reshape((b, kvh, t * ps) + x.shape[4:])
+
+    readable = jnp.repeat(table != TRASH_PAGE, ps, axis=1)[:, None, :, None]
+    kf = _dequant_zero_trash(
+        flat(new_pool["k"][table]),
+        flat(new_pool["k_scale"][table]) if int8 else None,
+        readable,
+    )
+    vf = _dequant_zero_trash(
+        flat(new_pool["v"][table]),
+        flat(new_pool["v_scale"][table]) if int8 else None,
+        readable,
+    )
+    q2 = _q_rows(q, kvh)  # [B, KV, QR, hd]
+    jrow = jnp.arange(q2.shape[2]) // (h // kvh)
+    vis = (jnp.arange(t * ps)[None, None, :] <= (pos[:, None] + jrow[None, :])[:, :, None])
+    vis = vis & readable[:, 0, :, 0][:, None, :]
+    s = jnp.einsum("bgrd,bgsd->bgrs", q2, kf, preferred_element_type=jnp.float32)
+    s = s + jnp.where(vis[:, None], 0.0, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrs,bgsd->bgrd", p, vf, preferred_element_type=jnp.float32)
+    return _rows_out(out, qn), new_pool
+
+
+# ---------------------------------------------------------------------------
+# XLA fallback: fused append + online softmax over page blocks
+
+
+def paged_attention_xla(
+    pool, table, pos, q, k_new, v_new, *, block_tokens: int = 2048
+) -> Tuple:
+    """Gather-free paged attention in pure XLA.
+
+    A ``fori_loop`` over blocks of ``block_tokens // page_size`` table
+    columns with a *dynamic* trip count — blocks wholly past
+    ``max(pos) + Q`` are never executed, so (unlike the gather path) work
+    scales with the tokens attended. Per block only a
+    ``[B, nb, KV, ps, hd]`` tile is gathered; the einsums contract it in
+    page-major flatten and the block temps are reused buffers, so the full
+    per-lane cache never exists in memory. Trash-page poison never enters:
+    trash table entries are remapped to a real page before the load and
+    masked out of every softmax (see the body comment).
+    """
+    b, qn, h, hd = q.shape
+    kvh, ps = pool["k"].shape[1:3]
+    t = table.shape[1]
+    rep = h // kvh
+    qr = qn * rep
+    int8 = pool["k"].dtype == jnp.int8
+    new_pool = append_rows(pool, k_new, v_new, table, pos)
+
+    nb = max(1, min(t, block_tokens // ps))
+    n_blocks = -(-t // nb)
+    tpad = table
+    if n_blocks * nb != t:  # trash-pad the ragged last block (masked anyway)
+        tpad = jnp.pad(table, ((0, 0), (0, n_blocks * nb - t)),
+                       constant_values=TRASH_PAGE)
+    q2 = _q_rows(q, kvh)  # [B, KV, QR, hd]
+    bound = pos[:, None] + (jnp.arange(qr) // rep)[None, :]  # [B, QR]
+    n_active = jnp.minimum(
+        n_blocks, (jnp.max(pos) + qn - 1) // (nb * ps) + 1
+    ).astype(jnp.int32)
+    if int8:
+        # Integer path, like the legacy gather attention: quantize q once,
+        # s8 x s8 -> s32 dots against the raw int8 page tiles, scales in the
+        # f32 epilogue — the cache is only ever moved at int8 width. (The
+        # Pallas kernel instead dequantizes in VMEM, where the f32 tile
+        # never touches HBM; re-widening every block to f32 here would
+        # triple the fallback's traffic.)
+        q8, q_s = quant_rows(q2)  # [B, KV, QR, hd] int8, [B, KV, QR]
+
+    def body(i, carry):
+        m, l, acc = carry
+        cols = jax.lax.dynamic_slice(tpad, (0, i * nb), (b, nb))  # [B, nb]
+        readable = cols != TRASH_PAGE
+        # Trash-page exclusion by *remap*, not by zeroing the loaded tiles:
+        # page 0 is the only page allowed to hold junk (NaN included — it is
+        # never read), so pointing its table entries at page 1 (always a
+        # real, finite page: pools have >= 2 pages by construction) makes
+        # every load finite, and the tiny [B, nb] visibility mask below
+        # keeps the remapped slots out of every softmax — two full-block
+        # selects cheaper than scrubbing k and v.
+        cols = jnp.where(readable, cols, 1)
+        # [B, nb, KV, ps, hd] -> [B, KV, nb*ps, hd] (page-major flatten)
+        kf = jnp.moveaxis(new_pool["k"][cols], 2, 1).reshape(b, kvh, nb * ps, hd)
+        vf = jnp.moveaxis(new_pool["v"][cols], 2, 1).reshape(b, kvh, nb * ps, hd)
+        gpos = ((i * nb + jnp.arange(nb))[:, None] * ps
+                + jnp.arange(ps)[None, :]).reshape(nb * ps)
+        vis = (gpos[None, None, :] <= bound[:, :, None]) & jnp.repeat(
+            readable, ps, axis=1
+        )[:, None, :]
+        if int8:
+            ks = jnp.moveaxis(new_pool["k_scale"][cols], 2, 1)
+            ks = ks.reshape(b, kvh, nb * ps)
+            s32 = jnp.einsum("bgrd,bgsd->bgrs", q8, kf,
+                             preferred_element_type=jnp.int32)
+            s = s32.astype(jnp.float32) * q_s[..., None] * ks[:, :, None, :]
+        else:
+            s = jnp.einsum("bgrd,bgsd->bgrs", q2, kf,
+                           preferred_element_type=jnp.float32)
+        s = s + jnp.where(vis[:, None], 0.0, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        if int8:
+            # p.V like the legacy path: fold the v scales into p, quantize
+            # the folded p per row (over this block — a finer grid than the
+            # legacy full-row quant, same tolerance class), one s8 x s8 dot.
+            vs = jnp.moveaxis(new_pool["v_scale"][cols], 2, 1)
+            p8, p_s = quant_rows(p * vs.reshape(b, kvh, 1, nb * ps))
+            o32 = jnp.einsum("bgrs,bgsd->bgrd", p8, vf,
+                             preferred_element_type=jnp.int32)
+            pv = o32.astype(jnp.float32) * p_s[..., None]
+        else:
+            pv = jnp.einsum("bgrs,bgsd->bgrd", p, vf,
+                            preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return m_new, l, acc
+
+    m0 = jnp.full((b, kvh, qr), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, qr), jnp.float32)
+    acc0 = jnp.zeros((b, kvh, qr, hd), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_active, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    # Fully-masked rows (an inactive lane's all-trash table): every score
+    # stayed NEG_INF, so the remapped page-1 rows would average into the
+    # output. The gather oracle, the Pallas kernel, and the legacy path all
+    # return exact zeros there — match them (m moved iff any slot was
+    # visible: real scores are nowhere near NEG_INF).
+    out = jnp.where(m[..., None] > 0.5 * NEG_INF, out, 0.0)
+    return _rows_out(out, qn), new_pool
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU kernel
+
+
+def _paged_attn_kernel(
+    # scalar prefetch
+    table_ref,  # [B, T] int32
+    pos_ref,  # [B] int32
+    # inputs
+    q_ref,  # [1, 1, QR, hd] f32 block for (b, g)
+    kn_ref,  # [1, 1, Q, hd] f32 block
+    vn_ref,
+    k_in,  # [P, KV, ps, hd] ANY (aliased; unused — reads go through k_out)
+    v_in,
+    *rest,  # (ks_in, vs_in,) out refs, (scale out refs,) scratch, sems
+    ps: int,
+    qn: int,
+    rep: int,
+    t: int,
+    int8: bool,
+):
+    if int8:
+        (ks_in, vs_in, out_ref, k_out, v_out, ks_out, vs_out,
+         k_scr, v_scr, ks_scr, vs_scr, kw_scr, vw_scr, ksw_scr, vsw_scr,
+         sems) = rest
+    else:
+        (out_ref, k_out, v_out, k_scr, v_scr, kw_scr, vw_scr, sems) = rest
+    b = pl.program_id(0)
+    g = pl.program_id(1)
+    pos_b = pos_ref[b]
+    qr = qn * rep
+
+    # ---- fused append: this program owns (lane b, head g)'s Q rows. Pages
+    # past the prompt are never shared across lanes, so the only rows this
+    # program ever reads back below are its own writes (waited on here).
+    for j in range(qn):
+        lin = jnp.minimum(jnp.maximum(pos_b + j, 0), t * ps - 1)
+        pid = table_ref[b, lin // ps]
+        slot = lin % ps
+        kr = kn_ref[0, 0, j : j + 1, :].astype(jnp.float32)  # [1, hd]
+        vr = vn_ref[0, 0, j : j + 1, :].astype(jnp.float32)
+        if int8:
+            # quant_rows, inlined: same grid as every other pool writer.
+            for row, w_scr, s_scr in ((kr, kw_scr, ksw_scr),
+                                      (vr, vw_scr, vsw_scr)):
+                amax = jnp.max(jnp.abs(row), axis=-1, keepdims=True)
+                sc = jnp.maximum(amax, 1e-30) / 127.0
+                w_scr[...] = jnp.clip(
+                    jnp.floor(row / sc + 0.5), -127.0, 127.0
+                ).astype(jnp.int8)
+                s_scr[...] = sc
+            copies = (
+                (kw_scr, k_out.at[pid, g, pl.ds(slot, 1), :], 0),
+                (vw_scr, v_out.at[pid, g, pl.ds(slot, 1), :], 1),
+                (ksw_scr, ks_out.at[pid, g, pl.ds(slot, 1), :], 2),
+                (vsw_scr, vs_out.at[pid, g, pl.ds(slot, 1), :], 3),
+            )
+        else:
+            kw_scr[...] = kr.astype(kw_scr.dtype)
+            vw_scr[...] = vr.astype(vw_scr.dtype)
+            copies = (
+                (kw_scr, k_out.at[pid, g, pl.ds(slot, 1), :], 0),
+                (vw_scr, v_out.at[pid, g, pl.ds(slot, 1), :], 1),
+            )
+        dmas = [pltpu.make_async_copy(src, dst, sems.at[i])
+                for src, dst, i in copies]
+        for d in dmas:
+            d.start()
+        for d in dmas:
+            d.wait()
+
+    # ---- flash loop over this lane's active pages only.
+    qv = q_ref[0, 0]  # [QR, hd] f32, pre-scaled
+    bound = pos_b + jax.lax.broadcasted_iota(jnp.int32, (qr, 1), 0) // rep
+    n_active = jnp.minimum(t, (pos_b + qn - 1) // ps + 1)
+
+    def body(ti, carry):
+        m, l, acc = carry
+        pid = table_ref[b, ti]
+        # Page tile loads: reads go through the *output* refs (the aliased
+        # buffer) so the fused append above is visible.
+        loads = [
+            pltpu.make_async_copy(k_out.at[pid, g], k_scr, sems.at[0]),
+            pltpu.make_async_copy(v_out.at[pid, g], v_scr, sems.at[1]),
+        ]
+        if int8:
+            loads += [
+                pltpu.make_async_copy(ks_out.at[pid, g], ks_scr, sems.at[2]),
+                pltpu.make_async_copy(vs_out.at[pid, g], vs_scr, sems.at[3]),
+            ]
+        for d in loads:
+            d.start()
+        for d in loads:
+            d.wait()
+        readable = pid != TRASH_PAGE
+        kf = k_scr[...].astype(jnp.float32)
+        vf = v_scr[...].astype(jnp.float32)
+        if int8:  # in-VMEM dequant with the per-token scales ([ps, 1])
+            kf = kf * ks_scr[...]
+            vf = vf * vs_scr[...]
+        kf = jnp.where(readable, kf, 0.0)  # select: NaN poison dies here
+        vf = jnp.where(readable, vf, 0.0)
+        s = jax.lax.dot_general(  # [QR, ps]
+            qv, kf, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        gpos = ti * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        vis = (gpos <= bound) & readable
+        s = s + jnp.where(vis, 0.0, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, vf, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((qr, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((qr, 1), jnp.float32)
+    acc0 = jnp.zeros((qr, q_ref.shape[-1]), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_active, body, (m0, l0, acc0))
+    out_ref[0, 0] = acc / jnp.maximum(l, 1e-30)
+
+
+def paged_attention_kernel(
+    pool, table, pos, q, k_new, v_new, *, interpret: bool = False
+) -> Tuple:
+    """Raw pallas_call. q: [B, Q, H, hd] float (post-RoPE, unscaled);
+    k_new/v_new: [B, Q, KV, hd]; table: [B, T] int32; pos: [B] int32.
+    Returns (out [B, Q, H, hd] f32, new pool — appended in place via
+    input/output aliasing)."""
+    b, qn, h, hd = q.shape
+    p_pages, kvh, ps, _ = pool["k"].shape
+    t = table.shape[1]
+    rep = h // kvh
+    qr = qn * rep
+    int8 = pool["k"].dtype == jnp.int8
+
+    q2 = _q_rows(q, kvh)  # [B, KV, QR, hd] f32 pre-scaled
+    kn2 = jnp.moveaxis(k_new.astype(jnp.float32), 1, 2)  # [B, KV, Q, hd]
+    vn2 = jnp.moveaxis(v_new.astype(jnp.float32), 1, 2)
+    pdt = pool["k"].dtype
+
+    blk = lambda shape: pl.BlockSpec(shape, lambda i, j, *_: (i, j, 0, 0))
+    any_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    in_specs = [blk((1, 1, qr, hd)), blk((1, 1, qn, hd)), blk((1, 1, qn, hd)),
+                any_spec, any_spec]
+    inputs = [q2, kn2, vn2, pool["k"], pool["v"]]
+    out_specs = [blk((1, 1, qr, hd)), any_spec, any_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, kvh, qr, hd), jnp.float32),
+        jax.ShapeDtypeStruct(pool["k"].shape, pdt),
+        jax.ShapeDtypeStruct(pool["v"].shape, pdt),
+    ]
+    # Input indices include the 2 scalar-prefetch args (table, pos).
+    aliases = {5: 1, 6: 2}
+    scratch = [
+        pltpu.VMEM((ps, hd), pdt),  # k page tile
+        pltpu.VMEM((ps, hd), pdt),  # v page tile
+    ]
+    if int8:
+        # Scales carried as [P, KV, ps, 1] so row tiles stay 2-D.
+        ks4 = pool["k_scale"][..., None]
+        vs4 = pool["v_scale"][..., None]
+        inputs += [ks4, vs4]
+        in_specs += [any_spec, any_spec]
+        out_specs += [any_spec, any_spec]
+        out_shape += [
+            jax.ShapeDtypeStruct(ks4.shape, jnp.float32),
+            jax.ShapeDtypeStruct(vs4.shape, jnp.float32),
+        ]
+        aliases.update({7: 3, 8: 4})
+        scratch += [
+            pltpu.VMEM((ps, 1), jnp.float32),  # k scale tile
+            pltpu.VMEM((ps, 1), jnp.float32),  # v scale tile
+        ]
+    scratch += [
+        pltpu.VMEM((1, hd), pdt),  # append row staging (k)
+        pltpu.VMEM((1, hd), pdt),  # append row staging (v)
+    ]
+    if int8:
+        scratch += [
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ]
+    scratch += [pltpu.SemaphoreType.DMA((4,))]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    res = pl.pallas_call(
+        functools.partial(
+            _paged_attn_kernel, ps=ps, qn=qn, rep=rep, t=t, int8=int8
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(table, jnp.broadcast_to(pos, (b,)).astype(jnp.int32), *inputs)
+    out = res[0]
+    new_pool = {"k": res[1], "v": res[2]}
+    if int8:
+        new_pool["k_scale"] = res[3][..., 0]
+        new_pool["v_scale"] = res[4][..., 0]
+    return _rows_out(out, qn), new_pool
+
+
+def paged_attention(
+    pool,
+    table,
+    pos,
+    q,
+    k_new,
+    v_new,
+    *,
+    block_tokens: int = 512,
+    vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+    interpret: bool = False,
+) -> Tuple:
+    """Shape-safe wrapper: fused append + paged flash-decode attention.
+
+    Falls back to the gather-free XLA formulation when the per-program page
+    tiles would not fit the VMEM budget (double-buffered k/v page tiles plus
+    the q/out row blocks). Dispatching between this and the XLA/gather paths
+    lives in :func:`repro.kernels.ops.paged_attention`.
+    """
+    b, qn, h, hd = q.shape
+    ps = pool["k"].shape[2]
+    itemsize = 1 if pool["k"].dtype == jnp.int8 else 4
+    qr = qn * (h // pool["k"].shape[1])
+    tile_bytes = 2 * (2 * ps * hd * itemsize + 2 * ps * 4) + 2 * qr * hd * 4
+    if tile_bytes > vmem_budget_bytes:
+        return paged_attention_xla(
+            pool, table, pos, q, k_new, v_new, block_tokens=block_tokens
+        )
+    return paged_attention_kernel(
+        pool, table, pos, q, k_new, v_new, interpret=interpret
+    )

@@ -49,6 +49,12 @@ def build_parser():
     ap.add_argument("--float-serve", action="store_true",
                     help="skip PTQ, serve float weights")
     ap.add_argument("--compare-float", action="store_true")
+    ap.add_argument("--paged-attn", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused paged-attention decode kernel (Pallas on "
+                         "TPU, gather-free XLA elsewhere); auto = the "
+                         "models.attention.USE_PALLAS_PAGED_ATTN default, "
+                         "off = the legacy gather_pages path")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="self-speculative decoding draft window (0 = off; "
                          "dense/moe archs: the quantized w8a8 path drafts, "
@@ -69,10 +75,12 @@ def _make_requests(n, vocab, rng, max_new):
 
 
 def serve_once(cfg, params, reqs, max_batch, max_len, matmul_mode="dequant",
-               spec=None):
+               spec=None, paged_attn=None):
     eng = ServingEngine(
         cfg, params, max_batch=max_batch, max_len=max_len,
         matmul_mode=matmul_mode, spec=spec,
+        use_pallas_paged_attn=paged_attn,
+        attn_probe=cfg.block in ("dense", "moe"),
     )
     for r in reqs:
         eng.submit(r)
@@ -118,13 +126,20 @@ def main(argv=None):
         from repro.serving import SpecConfig
 
         spec = SpecConfig(k=args.spec_k, draft_layers=args.draft_layers or None)
+    paged_attn = {"auto": None, "on": True, "off": False}[args.paged_attn]
     reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new)
     done, stats = serve_once(
         cfg, qparams, reqs, args.max_batch, args.max_len,
         matmul_mode=args.matmul_mode if not args.float_serve else "dequant",
-        spec=spec,
+        spec=spec, paged_attn=paged_attn,
     )
     print(f"[serve] {stats}")
+    if stats.get("kv_page_size"):
+        print(
+            f"[serve] paged attention: kernel={stats['attn_kernel']} "
+            f"({args.paged_attn}), probed attn step "
+            f"{stats['attn_step_ms']:.2f} ms/layer"
+        )
     if spec is not None:
         print(
             f"[serve] spec-decode: acceptance "

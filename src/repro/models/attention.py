@@ -13,12 +13,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import quant_rows as _quant_rows
 from repro.sharding.specs import activation_rules, logical, logical_guarded
 from .layers import dense, rms_norm
 
-__all__ = ["attention_params_shape", "attention", "attention_decode", "init_kv_cache"]
+__all__ = [
+    "attention_params_shape",
+    "attention",
+    "attention_decode",
+    "init_kv_cache",
+    "USE_PALLAS_PAGED_ATTN",
+]
 
 NEG_INF = -1e30
+
+# When True, paged decode attention routes through the fused paged-attention
+# kernel dispatch (``kernels.ops.paged_attention``: Pallas on TPU, the
+# gather-free XLA online-softmax loop elsewhere) instead of the legacy
+# scatter + ``gather_pages`` + dense-attention chain. Default False: the
+# gather path is the bit-exactness oracle (float pages == dense cache) and
+# what GSPMD partitions for multi-device dry-runs. Per-call ``paged_attn=``
+# (threaded from ``ServingEngine(use_pallas_paged_attn=...)``) overrides.
+USE_PALLAS_PAGED_ATTN = False
 
 
 # ---------------------------------------------------------------------------
@@ -324,12 +340,10 @@ def init_kv_cache(
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
-def _quant_rows(x: jnp.ndarray, qmax: float = 127.0):
-    """Symmetric absmax quantization over the last axis -> (int8, f32 scale)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-30) / qmax
-    q = jnp.clip(jnp.floor(x.astype(jnp.float32) / scale + 0.5), -qmax, qmax)
-    return q.astype(jnp.int8), scale[..., 0]
+# _quant_rows (the cache-row quantizer) now lives in
+# repro.kernels.paged_attention.quant_rows — one grid for the dense cache,
+# the page pool, and the fused in-kernel append — imported above under its
+# historical name for the serving layer (serving.kv_cache imports it here).
 
 
 def attention_decode(
@@ -342,6 +356,7 @@ def attention_decode(
     window: int = 0,
     kv_prefix: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     table: Optional[jnp.ndarray] = None,
+    paged_attn: Optional[bool] = None,
 ):
     """Decode attention against the KV cache. x: [B, Q, d]; pos: position of
     the *first* query token — a scalar (all slots in lockstep) or a [B]
@@ -362,6 +377,16 @@ def attention_decode(
     page ``table[b, p // page_size]``, and attention runs over the
     table-gathered ``[B, KV, T*page_size, hd]`` view, which reconstructs the
     contiguous cache positions exactly (bit-exact with the dense float cache).
+
+    ``paged_attn`` (paged only; ``None`` = :data:`USE_PALLAS_PAGED_ATTN`)
+    routes the paged path through the fused paged-attention kernel dispatch
+    instead: one dispatch appends the new K/V rows into their pages and runs
+    online-softmax attention over block-table-indexed page loads — the
+    per-lane gathered cache is never materialized. Float pages match the
+    gather path to float tolerance (online vs one-shot softmax); int8 pages
+    dequantize in-kernel to f32 instead of re-quantizing q/softmax weights
+    for integer dots, so logits differ within quantization tolerance while
+    the *pool* contents stay bitwise identical (same append grid).
     """
     b, qn, _ = x.shape
     hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
@@ -406,6 +431,16 @@ def attention_decode(
         # Runtime import: serving builds on models, not the reverse; the
         # paged branch is only traced by the serving engine / paged tests.
         from repro.serving import kv_cache as _kvc
+
+        if USE_PALLAS_PAGED_ATTN if paged_attn is None else paged_attn:
+            # Fused kernel path: append + page-indexed flash attention in
+            # one dispatch (Pallas on TPU, gather-free XLA elsewhere).
+            from repro.kernels import ops as kops
+
+            out, new_cache = kops.paged_attention(cache, table, pos, q, k, v)
+            new_cache = _kvc._shard_pool(new_cache)
+            out = out.astype(x.dtype).reshape(b, qn, h * hd)
+            return dense(params["wo"], out, name="attn_o"), new_cache
 
         if qn == 1:
             new_cache = _kvc.append_token(

@@ -29,6 +29,14 @@ float model in low precision. This engine is that provider's serving loop:
 * **matmul_mode** — ``dequant`` (weight-only int8) or ``w8a8`` (dynamic
   per-row activation quant; routes through the fused Pallas kernel when
   ``repro.models.layers.USE_PALLAS_SERVING`` is on);
+* **paged attention kernel** (``use_pallas_paged_attn=``, default: the
+  ``repro.models.attention.USE_PALLAS_PAGED_ATTN`` module flag) — decode
+  attention consumes the page pool in place through the fused
+  append + flash kernel dispatch (``kernels.paged_attention``) instead of
+  re-materializing the gathered cache per layer per step;
+  ``stats()["attn_kernel"]`` reports which path compiled and
+  ``stats()["attn_step_ms"]`` the probed per-step attention time (engines
+  built with ``attn_probe=True``);
 * **self-speculative decoding** (``spec=``/``spec_k=``, dense/moe) — the
   quantized model drafts ``k`` greedy tokens per lane (``serving.
   spec_decode``), the serving-precision target verifies all ``k+1``
@@ -55,6 +63,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
 from repro.models import layers
 from repro.models import transformer as T
 from . import kv_cache as kvc
@@ -97,19 +106,13 @@ class ServingEngine:
         n_pages: Optional[int] = None,
         spec: Optional[spec_mod.SpecConfig] = None,
         spec_k: int = 0,
+        use_pallas_paged_attn: Optional[bool] = None,
+        attn_probe: bool = False,
     ):
         if not cfg.causal:
             raise ValueError("encoder-only arch: no decode serving")
         if matmul_mode not in ("dequant", "w8a8"):
             raise ValueError(f"matmul_mode must be dequant|w8a8, got {matmul_mode}")
-        # Self-speculative decoding: the quantized model drafts k tokens per
-        # lane, the serving-precision target verifies them in one multi-token
-        # step (`spec_k=` is shorthand for `spec=SpecConfig(k=spec_k)`).
-        if spec is None and spec_k:
-            spec = spec_mod.SpecConfig(k=spec_k)
-        self._spec = (
-            spec_mod.SpecDecoder(cfg, spec, matmul_mode) if spec is not None else None
-        )
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -147,6 +150,28 @@ class ServingEngine:
         else:
             self.allocator = None
             self.caches = T.init_cache(cfg, max_batch, max_len, dtype=jnp.float32)
+        # Paged-attention kernel knob: None defers to the module default
+        # (attention.USE_PALLAS_PAGED_ATTN); only meaningful on paged caches.
+        self.paged_attn = self.paged and (
+            attn_mod.USE_PALLAS_PAGED_ATTN
+            if use_pallas_paged_attn is None
+            else bool(use_pallas_paged_attn)
+        )
+        # Self-speculative decoding: the quantized model drafts k tokens per
+        # lane, the serving-precision target verifies them in one multi-token
+        # step (`spec_k=` is shorthand for `spec=SpecConfig(k=spec_k)`).
+        if spec is None and spec_k:
+            spec = spec_mod.SpecConfig(k=spec_k)
+        self._spec = (
+            spec_mod.SpecDecoder(cfg, spec, matmul_mode, paged_attn=self.paged_attn)
+            if spec is not None
+            else None
+        )
+        # Per-step attention-time probe (stats()["attn_step_ms"]): off by
+        # default — it costs one extra jit compile per engine, which tier-1
+        # tests creating dozens of engines must not pay.
+        self.attn_probe = attn_probe and self.paged
+        self._attn_probe_fn: Optional[Callable] = None
         self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.steps = 0
         self.decoded_tokens = 0
@@ -176,7 +201,9 @@ class ServingEngine:
     def _decode_impl(self, params, caches, token):
         self.decode_traces += 1  # python side effect: runs only while tracing
         with layers.serving_mode(self.matmul_mode):
-            logits, new_caches = T.decode_step(params, token, caches, self.cfg)
+            logits, new_caches = T.decode_step(
+                params, token, caches, self.cfg, paged_attn=self.paged_attn
+            )
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         return nxt, new_caches
 
@@ -569,6 +596,41 @@ class ServingEngine:
                 break
         return self.done
 
+    def _attn_step_ms(self) -> float:
+        """Probe the decode-attention hot path: best-of-3 warm wall time (ms)
+        of ONE layer's paged attention dispatch at half-context positions on
+        the live page pool. An instrument, not an average over the run —
+        attention inside the fused decode jit cannot be timed separately, and
+        a fixed probe position makes the number comparable across runs (the
+        gather path's cost is position-independent by construction, which is
+        exactly what this metric is meant to expose)."""
+        if not self.attn_probe:
+            return 0.0
+        if self._attn_probe_fn is None:
+            p0 = jax.tree.map(lambda a: a[0], self.params["layers"])["attn"]
+
+            def impl(p, pool, table, pos, x):
+                with layers.serving_mode(self.matmul_mode):
+                    y, _ = attn_mod.attention_decode(
+                        p, x, pool, pos, self.cfg, table=table,
+                        paged_attn=self.paged_attn,
+                    )
+                return y
+
+            self._attn_probe_fn = (jax.jit(impl), p0)
+        fn, p0 = self._attn_probe_fn
+        pool = self.caches["layers"][0]["attn"]
+        table = self.caches["table"]
+        pos = jnp.full((self.max_batch,), self.max_len // 2, jnp.int32)
+        x = jnp.zeros((self.max_batch, 1, self.cfg.d_model), jnp.float32)
+        fn(p0, pool, table, pos, x).block_until_ready()  # compile + warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            fn(p0, pool, table, pos, x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best * 1e3
+
     def stats(self) -> Dict[str, float]:
         lat = [
             r.t_done - r.t_submit for r in self.done if r.t_done and r.t_submit
@@ -631,6 +693,17 @@ class ServingEngine:
                 "prefix_hit_pages": float(alloc.prefix_hit_pages) if alloc else 0.0,
             }
         )
+        # Decode-attention path accounting: which kernel serves the paged
+        # attention ("pallas" only when the Mosaic kernel actually compiles —
+        # paged + knob + TPU backend; the gather-free XLA loop and the legacy
+        # gather path both report "xla"), plus the probed per-step attention
+        # time (0.0 unless the engine was built with attn_probe=True).
+        out["attn_kernel"] = (
+            "pallas"
+            if self.paged_attn and jax.default_backend() == "tpu"
+            else "xla"
+        )
+        out["attn_step_ms"] = self._attn_step_ms()
         # Speculative-decoding accounting (zeros when speculation is off,
         # keeping the schema flat).
         spec_zero = {

@@ -46,8 +46,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.sharding.specs import logical
-# Single source of truth for cache-row quantization: the contiguous int8
-# cache and the int8 page pool must agree bitwise for parity tests.
+# Single source of truth for cache-row quantization and the page-pool
+# scatter: the contiguous int8 cache, the int8 page pool, and the fused
+# paged-attention kernel's in-kernel append must agree bitwise.
+from repro.kernels.paged_attention import append_rows as _append_rows
 from repro.models.attention import _quant_rows
 
 __all__ = [
@@ -140,23 +142,7 @@ def append_token(pool: Dict, k_new, v_new, table, pos) -> Dict:
     scatter: duplicate (page, slot) targets can only be trash-page writes
     from inactive lanes, which are never read.
     """
-    ps = pool["k"].shape[2]
-    t = table.shape[1]
-    lin = jnp.clip(pos, 0, t * ps - 1)
-    pidx = jnp.take_along_axis(table, (lin // ps)[:, None], axis=1)[:, 0]
-    slot = lin % ps
-    out = dict(pool)
-    if pool["k"].dtype == jnp.int8:
-        k_q, k_s = _quant_rows(k_new)
-        v_q, v_s = _quant_rows(v_new)
-        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_q)
-        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_q)
-        out["k_scale"] = pool["k_scale"].at[pidx, :, slot].set(k_s)
-        out["v_scale"] = pool["v_scale"].at[pidx, :, slot].set(v_s)
-    else:
-        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_new.astype(pool["k"].dtype))
-        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_new.astype(pool["v"].dtype))
-    return _shard_pool(out)
+    return append_tokens(pool, k_new[:, None], v_new[:, None], table, pos)
 
 
 def append_tokens(pool: Dict, k_new, v_new, table, pos) -> Dict:
@@ -169,25 +155,13 @@ def append_tokens(pool: Dict, k_new, v_new, table, pos) -> Dict:
     single-token overwrite-last semantics); clipped and trash-page targets
     are only ever read by queries past a request's budget, whose logits the
     engine never commits.
+
+    The scatter body is :func:`repro.kernels.paged_attention.append_rows` —
+    the same implementation the fused paged-attention dispatch appends with,
+    so the pools the two paths write agree bitwise by construction; this
+    wrapper only adds the sharding constraint.
     """
-    ps = pool["k"].shape[2]
-    t = table.shape[1]
-    b, qn = k_new.shape[:2]
-    lin = jnp.clip(pos[:, None] + jnp.arange(qn)[None, :], 0, t * ps - 1)  # [B,Q]
-    pidx = jnp.take_along_axis(table, lin // ps, axis=1)  # [B, Q]
-    slot = lin % ps
-    out = dict(pool)
-    if pool["k"].dtype == jnp.int8:
-        k_q, k_s = _quant_rows(k_new)
-        v_q, v_s = _quant_rows(v_new)
-        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_q)
-        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_q)
-        out["k_scale"] = pool["k_scale"].at[pidx, :, slot].set(k_s)
-        out["v_scale"] = pool["v_scale"].at[pidx, :, slot].set(v_s)
-    else:
-        out["k"] = pool["k"].at[pidx, :, slot, :].set(k_new.astype(pool["k"].dtype))
-        out["v"] = pool["v"].at[pidx, :, slot, :].set(v_new.astype(pool["v"].dtype))
-    return _shard_pool(out)
+    return _shard_pool(_append_rows(pool, k_new, v_new, table, pos))
 
 
 def rewind_positions(pos_vec, new_pos) -> jnp.ndarray:
@@ -211,20 +185,32 @@ def gather_pages(pool: Dict, table) -> Tuple:
     Returns ``(k [B, KV, L, hd], v, k_scale [B, KV, L] | None, v_scale)``
     with ``L = T * page_size``; gathered position ``j`` is sequence position
     ``j`` (page-major flatten — the layout invariant).
+
+    Trash-page entries (inactive lanes; table padding past a lane's
+    allocation) are *select-zeroed*: page 0 holds arbitrary dead writes —
+    NaN included — and the decode masks only add ``NEG_INF`` to scores, so a
+    NaN leaking through the gather would survive ``exp`` and ``p @ v`` into
+    an active lane's output. ``jnp.where`` discards the poisoned value
+    outright (a multiply would propagate it). Real-page positions are
+    untouched, preserving the bit-exact reconstruction contract.
     """
     b, t = table.shape
     n_kv, ps, hd = pool["k"].shape[1:]
+    trash = jnp.repeat(table == TRASH_PAGE, ps, axis=1)  # [B, T*ps]
 
     def flat4(x):  # [B, T, KV, ps, hd] -> [B, KV, T*ps, hd]
-        return jnp.moveaxis(x, 2, 1).reshape(b, n_kv, t * ps, hd)
+        x = jnp.moveaxis(x, 2, 1).reshape(b, n_kv, t * ps, hd)
+        return jnp.where(trash[:, None, :, None], jnp.zeros((), x.dtype), x)
+
+    def flat3(x):  # [B, T, KV, ps] -> [B, KV, T*ps]
+        x = jnp.moveaxis(x, 2, 1).reshape(b, n_kv, t * ps)
+        return jnp.where(trash[:, None, :], jnp.zeros((), x.dtype), x)
 
     k = flat4(pool["k"][table])
     v = flat4(pool["v"][table])
     if "k_scale" not in pool:
         return k, v, None, None
-    k_s = jnp.moveaxis(pool["k_scale"][table], 2, 1).reshape(b, n_kv, t * ps)
-    v_s = jnp.moveaxis(pool["v_scale"][table], 2, 1).reshape(b, n_kv, t * ps)
-    return k, v, k_s, v_s
+    return k, v, flat3(pool["k_scale"][table]), flat3(pool["v_scale"][table])
 
 
 def write_prompt_pages(pool: Dict, k, v, page_ids) -> Dict:

@@ -143,7 +143,8 @@ class SpecDecoder:
     counters so BENCH numbers track kernels, not jit noise.
     """
 
-    def __init__(self, cfg: ModelConfig, spec: SpecConfig, matmul_mode: str):
+    def __init__(self, cfg: ModelConfig, spec: SpecConfig, matmul_mode: str,
+                 paged_attn: bool = False):
         if cfg.block not in ("dense", "moe"):
             raise ValueError(
                 f"speculative decoding: dense/moe archs only, got {cfg.block} "
@@ -164,11 +165,16 @@ class SpecDecoder:
         self.draft_traces = 0
         self.verify_traces = 0
 
+        # Draft and verify trace the same paged-attention path as the
+        # engine's plain decode (``paged_attn``): the exactness contract
+        # compares verify logits against that path's own decode steps, so
+        # the two must go through one attention implementation.
         def draft_impl(params, caches, token):
             self.draft_traces += 1  # python side effect: bumps only tracing
             with layers.serving_mode(spec.draft_mode):
                 logits, new_caches = T.decode_step(
-                    params, token, caches, cfg, layers_limit=spec.draft_layers
+                    params, token, caches, cfg, layers_limit=spec.draft_layers,
+                    paged_attn=paged_attn,
                 )
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             return nxt, new_caches
@@ -176,7 +182,9 @@ class SpecDecoder:
         def verify_impl(params, caches, tokens):
             self.verify_traces += 1
             with layers.serving_mode(matmul_mode):
-                logits, new_caches = T.verify_step(params, tokens, caches, cfg)
+                logits, new_caches = T.verify_step(
+                    params, tokens, caches, cfg, paged_attn=paged_attn
+                )
             greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, Q]
             return greedy, new_caches
 

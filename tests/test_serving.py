@@ -192,6 +192,9 @@ def test_stats_schema(dense_setup):
         "spec_enabled", "spec_rounds", "spec_k", "spec_acceptance_rate",
         "spec_tokens_per_target_step", "spec_draft_time_s",
         "spec_verify_time_s", "spec_compile_s",
+        # decode-attention path ("pallas"/"xla"; probed step time, 0.0
+        # unless the engine was built with attn_probe=True)
+        "attn_kernel", "attn_step_ms",
     ):
         assert key in s, key
     assert s["spec_enabled"] == 0.0
