@@ -3,6 +3,12 @@
 #
 #   make test         tier-1 gate (must stay green; the driver checks it)
 #   make test-fast    tier-1 minus the slow-marked cases
+#   make test-strict  tier-1 with DeprecationWarning as error: internal code
+#                     may never touch the deprecated ServingEngine kwarg /
+#                     module-flag surfaces (dedicated legacy tests opt in
+#                     via pytest.warns)
+#   make example-smoke  streaming-facade example end to end (EngineConfig,
+#                     generate/TokenEvent, SamplingParams, cancel)
 #   make bench-smoke  serving throughput smoke (baseline + spec-decode arm)
 #                     + paged-attention microbench
 #                     -> results/BENCH_serving.json + BENCH_serving_spec.json
@@ -13,13 +19,19 @@
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast bench-smoke bench-attn bench
+.PHONY: test test-fast test-strict example-smoke bench-smoke bench-attn bench
 
 test:
 	$(PY) -m pytest -x -q
 
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+test-strict:
+	PYTHONPATH=src python -W error::DeprecationWarning -m pytest -x -q
+
+example-smoke:
+	$(PY) examples/serve_quantized.py --spec
 
 bench-smoke:
 	$(PY) -m benchmarks.serving_throughput --quick

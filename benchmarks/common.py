@@ -293,7 +293,12 @@ def save_json(name: str, obj) -> None:
 # v4: the paged-attention microbench (BENCH_paged_attention.json: kernel vs
 # gather-oracle decode latency/throughput over context x Q x page dtype) and
 # the attn_step_ms / attn_kernel decode-path accounting in BENCH_serving.
-BENCH_SCHEMA_VERSION = 4
+# v5: the EngineConfig API cut — BENCH_serving adds TTFT/ITL p50+p95 from
+# the per-token event stream (ttft_p50_s/ttft_p95_s/itl_p50_s/itl_p95_s),
+# meta gains matmul_kernel / attn_kernel_cfg, and attn_kernel now speaks the
+# full KernelChoice vocabulary ("gather" for the legacy oracle path that v4
+# reported as "xla").
+BENCH_SCHEMA_VERSION = 5
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:

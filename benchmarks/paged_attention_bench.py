@@ -144,15 +144,15 @@ def main(argv=None):
             for qn in QNS:
                 pool, table, pos, x = make_state(cfg, ctx, qn, args.seed)
 
-                def step(paged_attn, p, pl_, tb, ps_, xx):
+                def step(attn_kernel, p, pl_, tb, ps_, xx):
                     y, _ = attention_decode(
-                        p, xx, pl_, ps_, cfg, table=tb, paged_attn=paged_attn
+                        p, xx, pl_, ps_, cfg, table=tb, attn_kernel=attn_kernel
                     )
                     return y
 
                 fns = {
-                    "gather": jax.jit(partial(step, False)),
-                    "kernel": jax.jit(partial(step, True)),
+                    "gather": jax.jit(partial(step, "gather")),
+                    "kernel": jax.jit(partial(step, "pallas")),
                 }
                 arm_args = (params, pool, table, pos, x)
                 arms = time_interleaved(fns, arm_args, reps)

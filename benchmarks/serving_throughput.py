@@ -4,20 +4,26 @@
         [--arch glm4-9b] [--matmul-mode dequant|w8a8] [--n-requests N]
 
 Drives :class:`repro.serving.ServingEngine` on a smoke config with a
-mixed-length request queue and reports the three serving numbers the perf
+mixed-length request queue and reports the serving numbers the perf
 trajectory tracks:
 
 * **prefill tok/s** — prompt tokens through the chunked prefill path;
 * **decode tok/s** — generated tokens through the batched decode step;
-* **TTFT** — submit-to-first-token latency (queue wait + prefill);
+* **TTFT / ITL** (schema v5) — submit-to-first-token and inter-token
+  latencies from the engine's per-token event stream, p50 + p95 — the same
+  timestamps a ``generate()`` streaming client observes;
 * **KV pool accounting** — peak page occupancy and prefix-cache hit rate of
   the paged KV cache (``serving/kv_cache.py``);
-* **speculative decoding** (schema v3, ``BENCH_serving_spec.json``) — the
+* **speculative decoding** (``BENCH_serving_spec.json``) — the
   self-speculation arm (``serving/spec_decode.py``: quantized w8a8 draft,
   serving-precision multi-token verify) reruns the same workload and reports
   acceptance rate, tokens/target-step, and decode tok/s vs the baseline —
   after asserting the committed streams are token-identical and rollback
   left the page pool exactly as the baseline did.
+
+Engine knobs come from the auto-generated :class:`EngineConfig` flags
+(``--matmul-kernel``/``--attn-kernel`` speak the shared ``KernelChoice``
+vocabulary).
 
 It also *asserts* the chunked-prefill compile story via the engine's trace
 counters: O(1) jitted calls per request (the dead-``_prefill_cache`` era
@@ -43,20 +49,20 @@ from repro.configs import smoke_config
 from repro.core.apply import quantize_params
 from repro.core.recipe import QuantRecipe
 from repro.models import transformer as T
-from repro.serving import Request, ServingEngine, pages_needed
+from repro.serving import (
+    EngineConfig,
+    Request,
+    ServingEngine,
+    add_engine_config_args,
+    engine_config_from_args,
+    pages_needed,
+)
 
 from .common import save_bench_json
 
 
-def run_engine(
-    cfg, params, *, lengths, max_new, max_batch, max_len, matmul_mode,
-    n_pages=None, page_size=16, spec=None, paged_attn=None, attn_probe=False,
-):
-    eng = ServingEngine(
-        cfg, params, max_batch=max_batch, max_len=max_len,
-        matmul_mode=matmul_mode, n_pages=n_pages, page_size=page_size,
-        spec=spec, use_pallas_paged_attn=paged_attn, attn_probe=attn_probe,
-    )
+def run_engine(cfg, params, ecfg: EngineConfig, *, lengths, max_new):
+    eng = ServingEngine(cfg, params, ecfg)
     rng = np.random.default_rng(0)
     for i, n in enumerate(lengths):
         eng.submit(
@@ -75,8 +81,7 @@ def run_engine(
     return eng, s
 
 
-def check_backpressure(cfg, params, *, lengths, max_new, max_batch, max_len,
-                       matmul_mode):
+def check_backpressure(cfg, params, ecfg, *, lengths, max_new):
     """Page exhaustion must queue, never crash: rerun the workload against a
     pool sized for only ~2 concurrent requests (far below the fixed-slot
     footprint) and require every request to complete via page recycling."""
@@ -90,14 +95,14 @@ def check_backpressure(cfg, params, *, lengths, max_new, max_batch, max_len,
         return zeros  # schema v2: unpaged engines report zeros, not gaps
     page_size = 16
     need = [
-        min(pages_needed(n + max_new, page_size), max_len // page_size)
+        min(pages_needed(n + max_new, page_size), ecfg.max_len // page_size)
         for n in lengths
     ]
     n_pages = 2 * max(need) + 1  # ~2 requests resident; the rest queue
     eng, s = run_engine(
-        cfg, params, lengths=lengths, max_new=max_new, max_batch=max_batch,
-        max_len=max_len, matmul_mode=matmul_mode, n_pages=n_pages,
-        page_size=page_size,
+        cfg, params,
+        ecfg.replace(page_size=page_size, n_pages=n_pages, attn_probe=False),
+        lengths=lengths, max_new=max_new,
     )
     assert s["completed"] == len(lengths), s["completed"]
     assert s["kv_pages_peak"] <= s["kv_pages_capacity"], s
@@ -117,13 +122,12 @@ def check_backpressure(cfg, params, *, lengths, max_new, max_batch, max_len,
     }
 
 
-def run_spec_arm(cfg, params, base_eng, base_stats, *, lengths, max_new,
-                 max_batch, max_len, matmul_mode, spec_k, draft_layers,
-                 paged_attn=None):
-    """Speculative-decoding arm (schema v3): rerun the workload with the
-    self-speculative engine (quantized draft, serving-precision verify) and
-    report acceptance rate, tokens/target-step, and end-to-end decode
-    throughput vs the non-speculative baseline.
+def run_spec_arm(cfg, params, base_eng, base_stats, ecfg, *, lengths, max_new,
+                 spec_k, draft_layers):
+    """Speculative-decoding arm: rerun the workload with the self-speculative
+    engine (quantized draft, serving-precision verify) and report acceptance
+    rate, tokens/target-step, and end-to-end decode throughput vs the
+    non-speculative baseline.
 
     Asserts the subsystem's two contracts on the way: the committed token
     streams are identical to the baseline's, and rollback leaves the page
@@ -135,12 +139,11 @@ def run_spec_arm(cfg, params, base_eng, base_stats, *, lengths, max_new,
     from repro.serving import SpecConfig
 
     spec = SpecConfig(k=spec_k, draft_layers=draft_layers or None)
-    # Same attention path as the baseline arm: the output-identity assertion
-    # below compares the two engines token for token.
+    # Same kernel selection as the baseline arm: the output-identity
+    # assertion below compares the two engines token for token.
     eng, s = run_engine(
-        cfg, params, lengths=lengths, max_new=max_new, max_batch=max_batch,
-        max_len=max_len, matmul_mode=matmul_mode, spec=spec,
-        paged_attn=paged_attn,
+        cfg, params, ecfg.replace(spec=spec, attn_probe=False),
+        lengths=lengths, max_new=max_new,
     )
     base_out = {r.uid: r.output for r in base_eng.done}
     spec_out = {r.uid: r.output for r in eng.done}
@@ -201,25 +204,22 @@ def check_o1_prefill(eng, stats, lengths) -> None:
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="glm4-9b")
-    ap.add_argument("--matmul-mode", default="dequant", choices=["dequant", "w8a8"])
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--n-requests", type=int, default=0, help="0 = preset")
     ap.add_argument("--max-new", type=int, default=0, help="0 = preset")
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--float-weights", action="store_true",
                     help="skip PTQ, serve the float tree")
-    ap.add_argument("--paged-attn", default="auto",
-                    choices=["auto", "on", "off"],
-                    help="fused paged-attention decode kernel for the "
-                         "baseline arm (auto = models.attention."
-                         "USE_PALLAS_PAGED_ATTN default)")
-    ap.add_argument("--spec-k", type=int, default=3,
+    ap.add_argument("--spec-arm-k", type=int, default=3,
                     help="speculative-decoding arm draft window (0 = off)")
-    ap.add_argument("--draft-layers", type=int, default=0,
-                    help="truncate the drafter to the first L layers (0 = all)")
+    ap.add_argument("--spec-arm-draft-layers", type=int, default=0,
+                    help="truncate the spec arm's drafter to L layers (0 = all)")
     ap.add_argument("--ocs-ratio", type=float, default=0.02)
     ap.add_argument("--seed", type=int, default=0)
+    # The bench manages speculation (its own --spec-arm-* flags drive the
+    # spec arm) and the probe (always on for attention archs): those fields
+    # get no flags here rather than flags that would be silently overridden.
+    add_engine_config_args(ap, defaults=EngineConfig(max_batch=4, max_len=128),
+                           skip=("spec", "attn_probe"))
     args = ap.parse_args(argv)
 
     n_req = args.n_requests or (6 if args.quick else 16)
@@ -235,35 +235,34 @@ def main(argv=None):
         print(f"[ptq] OCS+int8 in {time.perf_counter() - t0:.1f}s")
 
     rng = np.random.default_rng(args.seed + 1)
-    lengths = [int(rng.integers(3, min(48, args.max_len // 2))) for _ in range(n_req)]
+    max_len = args.max_len
+    lengths = [int(rng.integers(3, min(48, max_len // 2))) for _ in range(n_req)]
     print(
         f"[bench] arch={cfg.name} mode={args.matmul_mode} "
         f"requests={n_req} lengths={lengths}"
     )
-    paged_attn = {"auto": None, "on": True, "off": False}[args.paged_attn]
-    eng, stats = run_engine(
-        cfg, params, lengths=lengths, max_new=max_new,
-        max_batch=args.max_batch, max_len=args.max_len,
-        matmul_mode=args.matmul_mode, paged_attn=paged_attn,
-        attn_probe=cfg.block in ("dense", "moe"),
+    ecfg = engine_config_from_args(
+        args, attn_probe=cfg.block in ("dense", "moe")
     )
+    eng, stats = run_engine(cfg, params, ecfg, lengths=lengths, max_new=max_new)
     check_o1_prefill(eng, stats, lengths)
     spec_metrics = run_spec_arm(
-        cfg, params, eng, stats, lengths=lengths, max_new=max_new,
-        max_batch=args.max_batch, max_len=args.max_len,
-        matmul_mode=args.matmul_mode, spec_k=args.spec_k,
-        draft_layers=args.draft_layers, paged_attn=paged_attn,
+        cfg, params, eng, stats, ecfg, lengths=lengths, max_new=max_new,
+        spec_k=args.spec_arm_k, draft_layers=args.spec_arm_draft_layers,
     )
     bp_metrics = check_backpressure(
-        cfg, params, lengths=lengths, max_new=max_new,
-        max_batch=args.max_batch, max_len=args.max_len,
-        matmul_mode=args.matmul_mode,
+        cfg, params, ecfg, lengths=lengths, max_new=max_new
     )
 
     print(
         f"[bench] prefill {stats['prefill_tok_per_s']:.1f} tok/s | "
         f"decode {stats['decode_tok_per_s']:.1f} tok/s | "
         f"ttft {stats['mean_ttft_s'] * 1e3:.0f} ms | wall {stats['wall_s']:.1f} s"
+    )
+    print(
+        f"[bench] latency: ttft p50/p95 {stats['ttft_p50_s'] * 1e3:.0f}/"
+        f"{stats['ttft_p95_s'] * 1e3:.0f} ms | itl p50/p95 "
+        f"{stats['itl_p50_s'] * 1e3:.1f}/{stats['itl_p95_s'] * 1e3:.1f} ms"
     )
     if stats["kv_page_size"]:
         print(
@@ -283,6 +282,11 @@ def main(argv=None):
             "decode_tok_per_s": stats["decode_tok_per_s"],
             "mean_ttft_s": stats["mean_ttft_s"],
             "mean_latency_s": stats["mean_latency_s"],
+            # TTFT/ITL percentiles from the token event stream (schema v5)
+            "ttft_p50_s": stats["ttft_p50_s"],
+            "ttft_p95_s": stats["ttft_p95_s"],
+            "itl_p50_s": stats["itl_p50_s"],
+            "itl_p95_s": stats["itl_p95_s"],
             "prefill_compile_s": stats["prefill_compile_s"],
             "decode_compile_s": stats["decode_compile_s"],
             "prefill_calls_per_request": stats["prefill_calls_per_request"],
@@ -304,15 +308,16 @@ def main(argv=None):
         },
         meta={
             "arch": cfg.name,
-            "matmul_mode": args.matmul_mode,
+            "matmul_mode": ecfg.matmul_mode,
+            "matmul_kernel": stats["matmul_kernel"],
             "attn_kernel": stats["attn_kernel"],
-            "paged_attn": args.paged_attn,
+            "attn_kernel_cfg": ecfg.kernels.attn.value,
             "backend": jax.default_backend(),
             "quantized": not args.float_weights,
             "n_requests": n_req,
             "max_new": max_new,
-            "max_batch": args.max_batch,
-            "max_len": args.max_len,
+            "max_batch": ecfg.max_batch,
+            "max_len": ecfg.max_len,
             "quick": bool(args.quick),
         },
     )
@@ -330,9 +335,9 @@ def main(argv=None):
             metrics=spec_metrics,
             meta={
                 "arch": cfg.name,
-                "matmul_mode": args.matmul_mode,
+                "matmul_mode": ecfg.matmul_mode,
                 "draft_mode": "w8a8",
-                "draft_layers": args.draft_layers,
+                "draft_layers": args.spec_arm_draft_layers,
                 "backend": jax.default_backend(),
                 "quantized": not args.float_weights,
                 "n_requests": n_req,

@@ -1,64 +1,147 @@
-"""Serve an OCS-quantized model with continuous batching.
+"""Serve an OCS-quantized model through the streaming request lifecycle.
 
-Builds a smoke-scale model from the zoo (hybrid Hymba by default — the most
-structurally interesting arch: parallel attention + SSM heads, meta tokens,
-sliding window), quantizes the weights with OCS+MSE to int8, and drives the
-batched serving engine with a queue of requests, comparing against float
-serving.
+Builds a smoke-scale model, quantizes the weights with OCS+MSE to int8, and
+drives :class:`repro.serving.ServingEngine` through the typed serving API:
 
-``--spec`` additionally demos the self-speculative engine on a dense arch:
-the same quantized tree drafts its own tokens through the w8a8 fast path
-while the dequant-mode target verifies them in one multi-token step —
-acceptance-rate stats print alongside the ordinary serving output.
+* ``EngineConfig`` — one validated config object instead of scattered
+  kwargs/module flags (``--attn-kernel``/``--matmul-kernel`` pick kernel
+  backends in the shared ``KernelChoice`` vocabulary);
+* ``engine.generate(prompt, SamplingParams(...)) -> Iterator[TokenEvent]``
+  — tokens stream as they land (first tokens arrive while other requests
+  are still decoding), greedy and sampled side by side;
+* ``engine.cancel(uid)`` — a long request is cancelled mid-decode and its
+  pages are reclaimed on the spot;
+* a hybrid (Hymba) engine and, with ``--spec``, the self-speculative
+  engine, both through the same config surface.
 
-Run:  PYTHONPATH=src python examples/serve_quantized.py [--arch hymba-1.5b]
+Run:  PYTHONPATH=src python examples/serve_quantized.py
       PYTHONPATH=src python examples/serve_quantized.py --spec
 """
 import argparse
+import time
 
-from repro.launch import serve as serve_launcher
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.apply import quantize_params
+from repro.core.recipe import QuantRecipe
+from repro.models import transformer as T
+from repro.serving import (
+    EngineConfig,
+    KernelConfig,
+    Request,
+    SamplingParams,
+    ServingEngine,
+)
+
+
+def build_engine(arch, *, bits=8, spec=None, max_batch=3, max_len=96):
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    recipe = QuantRecipe(w_bits=bits, w_clip="mse", ocs_ratio=0.02,
+                        per_channel=True, pad_to=1)
+    qparams = quantize_params(params, recipe)
+    ecfg = EngineConfig(
+        max_batch=max_batch, max_len=max_len, spec=spec,
+        kernels=KernelConfig(matmul="xla", attn="gather"),
+    )
+    return cfg, ServingEngine(cfg, qparams, ecfg)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="hymba-1.5b")
+    ap.add_argument("--arch", default="glm4-9b")
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--spec", action="store_true",
                     help="also demo self-speculative decoding (dense arch)")
-    ap.add_argument("--spec-arch", default="glm4-9b",
-                    help="arch for the speculative demo (dense/moe only)")
     ap.add_argument("--spec-k", type=int, default=3)
     args = ap.parse_args()
 
-    stats = serve_launcher.main([
-        "--arch", args.arch, "--smoke",
-        "--n-requests", "6", "--max-batch", "3",
-        "--max-new", "8", "--max-len", "96",
-        "--bits", str(args.bits), "--ocs-ratio", "0.02",
-        "--compare-float",
-    ])
-    assert stats["completed"] == 6
-    print("\nserved 6/6 requests through the int8 OCS engine")
+    rng = np.random.default_rng(0)
+    cfg, eng = build_engine(args.arch, bits=args.bits)
+
+    # Background traffic: two batch requests keep lanes busy while we stream
+    # (engine has 3 lanes) — proof that first tokens arrive before the batch
+    # completes.
+    for i in range(2):
+        eng.submit(Request(uid=100 + i,
+                           prompt=rng.integers(0, cfg.vocab, 7).tolist(),
+                           max_new_tokens=16))
+
+    print(f"--- streaming (greedy) off the int8 {cfg.name} engine ---")
+    t0 = time.perf_counter()
+    toks = []
+    for ev in eng.generate(rng.integers(0, cfg.vocab, 5).tolist(),
+                           max_new_tokens=8):
+        toks.append(ev.token)
+        stamp = (ev.t - t0) * 1e3
+        print(f"  token[{ev.index}] = {ev.token:5d}  (+{stamp:6.0f} ms"
+              f"{', finished: ' + str(ev.finish_reason) if ev.finished else ''})")
+        if ev.index == 0:
+            busy = sum(1 for s in eng.slots if s.req is not None)
+            print(f"  ... first token streamed with {busy} lanes still busy")
+    assert len(toks) == 8
+
+    print("--- streaming (sampled: temperature=0.8, top_k=40) ---")
+    sampled = list(
+        eng.generate(rng.integers(0, cfg.vocab, 5).tolist(),
+                     SamplingParams(temperature=0.8, top_k=40, seed=7),
+                     max_new_tokens=8)
+    )
+    print("  sampled tokens:", [e.token for e in sampled])
+    assert len(sampled) == 8 and sampled[-1].finished
+
+    print("--- cancellation mid-decode ---")
+    victim = Request(uid=999, prompt=rng.integers(0, cfg.vocab, 6).tolist(),
+                     max_new_tokens=64)
+    eng.submit(victim)
+    for _ in range(4):
+        eng.step()
+    assert eng.cancel(999)
+    eng.run()  # drain everything else
+    s = eng.stats()
+    print(f"  cancelled after {len(victim.output)} tokens "
+          f"(reason={victim.finish_reason}); kv pages in use: "
+          f"{s['kv_pages_in_use']:.0f}")
+    assert victim.finish_reason == "cancelled"
+    assert s["kv_pages_in_use"] == 0 and s["cancelled"] == 1
+    print(f"  ttft p50 {s['ttft_p50_s'] * 1e3:.0f} ms | "
+          f"itl p50 {s['itl_p50_s'] * 1e3:.1f} ms | "
+          f"attn kernel: {s['attn_kernel']}")
+
+    print("--- hybrid (hymba) engine through the same config surface ---")
+    hcfg, heng = build_engine("hymba-1.5b", bits=args.bits)
+    for i in range(3):
+        heng.submit(Request(uid=i, prompt=rng.integers(0, hcfg.vocab, 6).tolist(),
+                            max_new_tokens=4))
+    hdone = heng.run()
+    assert len(hdone) == 3
+    print(f"  served {len(hdone)}/3 requests on {hcfg.name} "
+          f"(unpaged: {heng.paged is False})")
 
     if args.spec:
-        print("\n--- self-speculative decoding (the quantized model drafts "
+        from repro.serving import SpecConfig
+
+        print("--- self-speculative decoding (the quantized model drafts "
               "for itself) ---")
-        sstats = serve_launcher.main([
-            "--arch", args.spec_arch, "--smoke",
-            "--n-requests", "6", "--max-batch", "3",
-            "--max-new", "8", "--max-len", "96",
-            "--bits", str(args.bits), "--ocs-ratio", "0.02",
-            "--spec-k", str(args.spec_k),
-        ])
-        assert sstats["completed"] == 6
-        assert sstats["spec_rounds"] > 0
+        scfg, seng = build_engine(args.arch, bits=args.bits,
+                                  spec=SpecConfig(k=args.spec_k))
+        for i in range(6):
+            seng.submit(Request(uid=i,
+                                prompt=rng.integers(0, scfg.vocab, 7).tolist(),
+                                max_new_tokens=8))
+        sdone = seng.run()
+        ss = seng.stats()
+        assert len(sdone) == 6 and ss["spec_rounds"] > 0
         print(
-            f"\nspeculative serving: {sstats['spec_acceptance_rate']:.0%} of "
-            f"drafts accepted, {sstats['spec_tokens_per_target_step']:.2f} "
-            f"tokens committed per target step "
-            f"({sstats['decode_steps']:.0f} target steps for "
-            f"{sstats['decoded_tokens']:.0f} decode tokens)"
+            f"  {ss['spec_acceptance_rate']:.0%} of drafts accepted, "
+            f"{ss['spec_tokens_per_target_step']:.2f} tokens committed per "
+            f"target step ({ss['decode_steps']:.0f} target steps for "
+            f"{ss['decoded_tokens']:.0f} decode tokens)"
         )
+
+    print("\nserved all requests through the int8 OCS engine")
 
 
 if __name__ == "__main__":

@@ -107,6 +107,13 @@ def paged_attention(pool, table, pos, q, k_new, v_new, *, force: Optional[str] =
     the gather-free XLA online-softmax loop elsewhere — neither materializes
     the per-lane gathered cache. ``force="gather"`` runs the demoted
     gather-everything oracle; ``force="interpret"`` the kernel interpreted.
+
+    This is where the serving API's ``KernelChoice`` attention selections
+    land (threaded from ``EngineConfig.kernels.attn`` through
+    ``attention_decode(attn_kernel=)``): ``"pallas"`` -> ``force=None``
+    (backend auto), ``"xla"`` -> ``force="ref"`` (pin the XLA loop even on
+    TPU); the ``"gather"`` choice takes the legacy path inside
+    ``attention_decode`` and never reaches this dispatch.
     """
     if force == "gather":
         return _pa.paged_attention_gather_ref(pool, table, pos, q, k_new, v_new)

@@ -6,6 +6,12 @@ clipping + integer quantization — zero training data needed, §3.4), then
 serves batched requests through :class:`repro.serving.ServingEngine` with
 the int8 parameter tree.
 
+Engine flags are **auto-generated from the EngineConfig dataclass**
+(:func:`repro.serving.add_engine_config_args`) — the CLI cannot drift from
+the config surface: adding a field to ``EngineConfig`` adds the flag here.
+``--temperature/--top-k/--top-p`` exercise the per-request
+:class:`SamplingParams` lifecycle (greedy by default).
+
 ``--compare-float`` serves the same requests with the float weights and
 reports the token-level agreement — the serving-side analogue of the
 paper's accuracy tables.
@@ -13,7 +19,9 @@ paper's accuracy tables.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +33,18 @@ from repro.core.apply import quantize_params
 from repro.core.recipe import QuantRecipe
 from repro.models import transformer as T
 from repro.optim import adamw_init
-from repro.serving import Request, ServingEngine
+from repro.serving import (
+    EngineConfig,
+    KernelChoice,
+    Request,
+    SamplingParams,
+    ServingEngine,
+    add_engine_config_args,
+    engine_config_from_args,
+)
+
+# Legacy --paged-attn vocabulary -> the shared KernelChoice vocabulary.
+_PAGED_ATTN_ALIAS = {"auto": "auto", "on": "pallas", "off": "gather"}
 
 
 def build_parser():
@@ -34,54 +53,69 @@ def build_parser():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--n-requests", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--bits", type=int, default=8)
     ap.add_argument("--kv-bits", type=int, default=0,
                     help="8 = int8 KV cache (see EXPERIMENTS.md §Perf C1)")
     ap.add_argument("--ocs-ratio", type=float, default=0.02)
     ap.add_argument("--clip", default="mse")
-    ap.add_argument("--matmul-mode", default="dequant",
-                    choices=["dequant", "w8a8"],
-                    help="w8a8 = dynamic per-row int8 activations "
-                         "(fused Pallas kernel under USE_PALLAS_SERVING)")
     ap.add_argument("--float-serve", action="store_true",
                     help="skip PTQ, serve float weights")
     ap.add_argument("--compare-float", action="store_true")
-    ap.add_argument("--paged-attn", default="auto",
-                    choices=["auto", "on", "off"],
-                    help="fused paged-attention decode kernel (Pallas on "
-                         "TPU, gather-free XLA elsewhere); auto = the "
-                         "models.attention.USE_PALLAS_PAGED_ATTN default, "
-                         "off = the legacy gather_pages path")
-    ap.add_argument("--spec-k", type=int, default=0,
-                    help="self-speculative decoding draft window (0 = off; "
-                         "dense/moe archs: the quantized w8a8 path drafts, "
-                         "the serving-precision target verifies)")
-    ap.add_argument("--draft-layers", type=int, default=0,
-                    help="truncate the drafter to the first L layers (0 = all)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="request top-k restriction (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="request nucleus restriction (1 = off)")
+    ap.add_argument("--paged-attn", default=None,
+                    choices=sorted(_PAGED_ATTN_ALIAS),
+                    help="DEPRECATED alias for --attn-kernel "
+                         "(on = pallas, off = gather)")
     ap.add_argument("--seed", type=int, default=0)
+    # Engine flags, generated from the EngineConfig fields themselves.
+    add_engine_config_args(ap, defaults=EngineConfig(max_batch=4, max_len=128))
     return ap
 
 
-def _make_requests(n, vocab, rng, max_new):
+def _engine_config(args, cfg) -> EngineConfig:
+    ecfg = engine_config_from_args(args)
+    if args.paged_attn is not None:
+        if args.attn_kernel != "auto":
+            raise SystemExit(
+                "serve.py: --paged-attn (deprecated) conflicts with an "
+                "explicit --attn-kernel; drop --paged-attn"
+            )
+        warnings.warn(
+            "--paged-attn is deprecated; use --attn-kernel "
+            f"{_PAGED_ATTN_ALIAS[args.paged_attn]}",
+            DeprecationWarning,
+        )
+        ecfg = ecfg.replace(
+            kernels=dataclasses.replace(
+                ecfg.kernels,
+                attn=KernelChoice.coerce(_PAGED_ATTN_ALIAS[args.paged_attn]),
+            )
+        )
+    if cfg.block in ("dense", "moe") and not ecfg.attn_probe:
+        ecfg = ecfg.replace(attn_probe=True)  # probed attn time in the report
+    return ecfg
+
+
+def _make_requests(n, vocab, rng, max_new, sampling=None):
     reqs = []
     for i in range(n):
         plen = int(rng.integers(4, 12))
         prompt = rng.integers(0, vocab, plen).tolist()
-        reqs.append(Request(uid=i, prompt=prompt, max_new_tokens=max_new))
+        reqs.append(
+            Request(uid=i, prompt=prompt, max_new_tokens=max_new,
+                    sampling=sampling)
+        )
     return reqs
 
 
-def serve_once(cfg, params, reqs, max_batch, max_len, matmul_mode="dequant",
-               spec=None, paged_attn=None):
-    eng = ServingEngine(
-        cfg, params, max_batch=max_batch, max_len=max_len,
-        matmul_mode=matmul_mode, spec=spec,
-        use_pallas_paged_attn=paged_attn,
-        attn_probe=cfg.block in ("dense", "moe"),
-    )
+def serve_once(cfg, params, reqs, ecfg: EngineConfig):
+    eng = ServingEngine(cfg, params, ecfg)
     for r in reqs:
         eng.submit(r)
     t0 = time.time()
@@ -97,8 +131,6 @@ def main(argv=None):
     args = build_parser().parse_args(argv)
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.kv_bits:
-        import dataclasses
-
         cfg = dataclasses.replace(cfg, kv_bits=args.kv_bits)
     rng = np.random.default_rng(args.seed)
 
@@ -121,26 +153,39 @@ def main(argv=None):
     else:
         qparams = params
 
-    spec = None
-    if args.spec_k:
-        from repro.serving import SpecConfig
-
-        spec = SpecConfig(k=args.spec_k, draft_layers=args.draft_layers or None)
-    paged_attn = {"auto": None, "on": True, "off": False}[args.paged_attn]
-    reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new)
-    done, stats = serve_once(
-        cfg, qparams, reqs, args.max_batch, args.max_len,
-        matmul_mode=args.matmul_mode if not args.float_serve else "dequant",
-        spec=spec, paged_attn=paged_attn,
-    )
+    ecfg = _engine_config(args, cfg)
+    if args.float_serve and ecfg.matmul_mode != "dequant":
+        ecfg = ecfg.replace(matmul_mode="dequant")
+    sampling = None
+    if args.temperature > 0:
+        sampling = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=args.seed,
+        )
+    elif args.top_k or args.top_p < 1.0:
+        # temperature == 0 is exact greedy; silently dropping the
+        # restriction flags would masquerade as sampled decode.
+        raise SystemExit(
+            "serve.py: --top-k/--top-p only apply to sampled decode; "
+            "set --temperature > 0"
+        )
+    reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new,
+                          sampling=sampling)
+    done, stats = serve_once(cfg, qparams, reqs, ecfg)
     print(f"[serve] {stats}")
+    print(
+        f"[serve] latency: ttft p50 {stats['ttft_p50_s'] * 1e3:.0f} ms / "
+        f"p95 {stats['ttft_p95_s'] * 1e3:.0f} ms | itl p50 "
+        f"{stats['itl_p50_s'] * 1e3:.1f} ms / p95 "
+        f"{stats['itl_p95_s'] * 1e3:.1f} ms"
+    )
     if stats.get("kv_page_size"):
         print(
             f"[serve] paged attention: kernel={stats['attn_kernel']} "
-            f"({args.paged_attn}), probed attn step "
+            f"(cfg {ecfg.kernels.attn.value}), probed attn step "
             f"{stats['attn_step_ms']:.2f} ms/layer"
         )
-    if spec is not None:
+    if ecfg.spec is not None:
         print(
             f"[serve] spec-decode: acceptance "
             f"{stats['spec_acceptance_rate']:.1%}, "
@@ -151,8 +196,10 @@ def main(argv=None):
 
     if args.compare_float and not args.float_serve:
         freqs = _make_requests(args.n_requests, cfg.vocab,
-                               np.random.default_rng(args.seed), args.max_new)
-        fdone, fstats = serve_once(cfg, params, freqs, args.max_batch, args.max_len)
+                               np.random.default_rng(args.seed), args.max_new,
+                               sampling=sampling)
+        fdone, fstats = serve_once(cfg, params, freqs,
+                                   ecfg.replace(matmul_mode="dequant", spec=None))
         by_uid = {r.uid: r.output for r in fdone}
         agree = total = 0
         for r in done:

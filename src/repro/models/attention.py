@@ -27,14 +27,36 @@ __all__ = [
 
 NEG_INF = -1e30
 
-# When True, paged decode attention routes through the fused paged-attention
-# kernel dispatch (``kernels.ops.paged_attention``: Pallas on TPU, the
-# gather-free XLA online-softmax loop elsewhere) instead of the legacy
-# scatter + ``gather_pages`` + dense-attention chain. Default False: the
-# gather path is the bit-exactness oracle (float pages == dense cache) and
-# what GSPMD partitions for multi-device dry-runs. Per-call ``paged_attn=``
-# (threaded from ``ServingEngine(use_pallas_paged_attn=...)``) overrides.
+# DEPRECATED shim (since ISSUE 5). This global is no longer read by
+# ``attention_decode`` at dispatch time; it only seeds
+# ``EngineConfig.kernels.attn`` when that field is ``KernelChoice.AUTO``
+# (resolved once at engine construction by ``repro.serving.config``).
+# Select the path explicitly instead, via the per-call ``attn_kernel=``
+# argument ("pallas" | "xla" | "gather") threaded from
+# ``EngineConfig(kernels=KernelConfig(attn=...))``. The flag-off default
+# ("gather") is the legacy scatter + ``gather_pages`` + dense-attention
+# chain — the bit-exactness oracle (float pages == dense cache) and what
+# GSPMD partitions for multi-device dry-runs.
 USE_PALLAS_PAGED_ATTN = False
+
+
+def _coerce_attn_kernel(choice) -> str:
+    """Normalize the paged decode-attention backend selection.
+
+    ``None`` -> "gather" (the legacy default-default); legacy bools map
+    True -> "pallas", False -> "gather" (the pre-ISSUE-5 ``paged_attn=``
+    vocabulary). Strings must be the ``KernelChoice`` vocabulary.
+    """
+    if choice is None:
+        return "gather"
+    if isinstance(choice, bool):
+        return "pallas" if choice else "gather"
+    choice = getattr(choice, "value", choice)
+    if choice not in ("pallas", "xla", "gather"):
+        raise ValueError(
+            f"attn_kernel must be pallas|xla|gather (or None), got {choice!r}"
+        )
+    return choice
 
 
 # ---------------------------------------------------------------------------
@@ -356,7 +378,7 @@ def attention_decode(
     window: int = 0,
     kv_prefix: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     table: Optional[jnp.ndarray] = None,
-    paged_attn: Optional[bool] = None,
+    attn_kernel=None,
 ):
     """Decode attention against the KV cache. x: [B, Q, d]; pos: position of
     the *first* query token — a scalar (all slots in lockstep) or a [B]
@@ -378,15 +400,20 @@ def attention_decode(
     table-gathered ``[B, KV, T*page_size, hd]`` view, which reconstructs the
     contiguous cache positions exactly (bit-exact with the dense float cache).
 
-    ``paged_attn`` (paged only; ``None`` = :data:`USE_PALLAS_PAGED_ATTN`)
-    routes the paged path through the fused paged-attention kernel dispatch
-    instead: one dispatch appends the new K/V rows into their pages and runs
+    ``attn_kernel`` (paged only; ``"pallas" | "xla" | "gather"``, ``None`` =
+    ``"gather"``; legacy bools coerce True -> "pallas", False -> "gather")
+    selects the paged decode path. ``"pallas"``/``"xla"`` route through the
+    fused paged-attention dispatch (``kernels.ops.paged_attention``): one
+    dispatch appends the new K/V rows into their pages and runs
     online-softmax attention over block-table-indexed page loads — the
-    per-lane gathered cache is never materialized. Float pages match the
-    gather path to float tolerance (online vs one-shot softmax); int8 pages
+    per-lane gathered cache is never materialized (``"xla"`` pins the
+    gather-free XLA formulation even on TPU). Float pages match the gather
+    path to float tolerance (online vs one-shot softmax); int8 pages
     dequantize in-kernel to f32 instead of re-quantizing q/softmax weights
     for integer dots, so logits differ within quantization tolerance while
-    the *pool* contents stay bitwise identical (same append grid).
+    the *pool* contents stay bitwise identical (same append grid). The
+    choice is threaded explicitly from ``EngineConfig.kernels.attn`` — this
+    function never reads the deprecated ``USE_PALLAS_PAGED_ATTN`` global.
     """
     b, qn, _ = x.shape
     hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
@@ -432,12 +459,17 @@ def attention_decode(
         # paged branch is only traced by the serving engine / paged tests.
         from repro.serving import kv_cache as _kvc
 
-        if USE_PALLAS_PAGED_ATTN if paged_attn is None else paged_attn:
-            # Fused kernel path: append + page-indexed flash attention in
-            # one dispatch (Pallas on TPU, gather-free XLA elsewhere).
+        kernel = _coerce_attn_kernel(attn_kernel)
+        if kernel in ("pallas", "xla"):
+            # Fused dispatch: append + page-indexed flash attention in one
+            # call ("pallas" = Mosaic on TPU with the gather-free XLA loop
+            # as the off-TPU/VMEM fallback; "xla" pins that loop outright).
             from repro.kernels import ops as kops
 
-            out, new_cache = kops.paged_attention(cache, table, pos, q, k, v)
+            out, new_cache = kops.paged_attention(
+                cache, table, pos, q, k, v,
+                force=None if kernel == "pallas" else "ref",
+            )
             new_cache = _kvc._shard_pool(new_cache)
             out = out.astype(x.dtype).reshape(b, qn, h * hd)
             return dense(params["wo"], out, name="attn_o"), new_cache

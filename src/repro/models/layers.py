@@ -44,18 +44,31 @@ Weight = Union[jnp.ndarray, OCSQuantLinear]
 # model via the ``serving_mode`` context manager around its traced steps.
 SERVING_MODE = "dequant"
 
+# Ambient kernel backend for quantized matmuls: "xla" (the GSPMD-shardable
+# default) or "pallas" (the fused serving kernels). Set per traced region by
+# ``serving_mode(..., kernel=...)`` — the engine threads its resolved
+# ``EngineConfig.kernels.matmul`` here, so two co-resident engines with
+# different configs dispatch independently. ``dense`` never consults the
+# deprecated ``USE_PALLAS_SERVING`` module global (see below).
+SERVING_KERNEL = "xla"
+
 
 @contextlib.contextmanager
-def serving_mode(mode: str):
-    """Set the default quantized-matmul mode ('dequant' | 'w8a8') for every
-    ``dense`` call traced inside the context."""
-    global SERVING_MODE
-    prev = SERVING_MODE
+def serving_mode(mode: str, kernel: Optional[str] = None):
+    """Set the default quantized-matmul mode ('dequant' | 'w8a8') — and
+    optionally the kernel backend ('xla' | 'pallas') — for every ``dense``
+    call traced inside the context."""
+    global SERVING_MODE, SERVING_KERNEL
+    prev = (SERVING_MODE, SERVING_KERNEL)
     SERVING_MODE = mode
+    if kernel is not None:
+        if kernel not in ("xla", "pallas"):
+            raise ValueError(f"matmul kernel must be xla|pallas, got {kernel!r}")
+        SERVING_KERNEL = kernel
     try:
         yield
     finally:
-        SERVING_MODE = prev
+        SERVING_MODE, SERVING_KERNEL = prev
 
 
 def _int8_matmul(x8, w8, out_scale, out_dtype):
@@ -68,10 +81,12 @@ def _int8_matmul(x8, w8, out_scale, out_dtype):
     return (acc.astype(jnp.float32) * out_scale).astype(out_dtype)
 
 
-# When True (TPU deployment), 2-D quantized matmuls route through the Pallas
-# kernels (fused OCS expansion, no HBM materialization of expanded
-# activations). Default False: the pure-XLA path is what the 512-device
-# dry-run lowers (GSPMD partitions it; a custom-call would not shard).
+# DEPRECATED shim (since ISSUE 5). This global is no longer read by
+# ``dense`` at dispatch time; it only seeds ``EngineConfig.kernels.matmul``
+# when that field is ``KernelChoice.AUTO`` (resolved once at engine
+# construction by ``repro.serving.config``). Select the kernel explicitly
+# instead: ``EngineConfig(kernels=KernelConfig(matmul="pallas"))``, the
+# ``dense(..., kernel=)`` argument, or ``serving_mode(..., kernel=)``.
 USE_PALLAS_SERVING = False
 
 
@@ -160,7 +175,14 @@ def _dynamic_w8a8_xla(w: OCSQuantLinear, x: jnp.ndarray, bits: int) -> jnp.ndarr
     )
 
 
-def dense(w: Weight, x: jnp.ndarray, *, name: str = "", mode: Optional[str] = None):
+def dense(
+    w: Weight,
+    x: jnp.ndarray,
+    *,
+    name: str = "",
+    mode: Optional[str] = None,
+    kernel: Optional[str] = None,
+):
     """y = x @ w with quantization-aware dispatch. x: [..., Cin].
 
     ``mode`` (defaults to the ambient :data:`SERVING_MODE`):
@@ -168,13 +190,22 @@ def dense(w: Weight, x: jnp.ndarray, *, name: str = "", mode: Optional[str] = No
     * ``dequant`` — int weights dequantized into the compute dtype;
     * ``w8a8``   — int8 x int8 -> int32. With a calibrated ``a_scale`` the
       static grid is used (paper Tables 3/4); otherwise activations are
-      dynamically quantized per row — through the fused Pallas kernel under
-      :data:`USE_PALLAS_SERVING`, or the XLA chain elsewhere.
+      dynamically quantized per row.
+
+    ``kernel`` (defaults to the ambient :data:`SERVING_KERNEL`): ``"xla"``
+    runs the pure-XLA formulations (GSPMD-shardable); ``"pallas"`` routes
+    2-D quantized matmuls through the fused Pallas kernels (dequant -> the
+    ``ocs_matmul`` kernel, dynamic w8a8 -> the one-pass ``fused_qmatmul``
+    kernel). The choice is threaded per call/engine — ``dense`` never reads
+    the deprecated ``USE_PALLAS_SERVING`` module global.
     """
     if isinstance(w, OCSQuantLinear):
         tap.tag(name, x)
         if mode is None:
             mode = SERVING_MODE
+        if kernel is None:
+            kernel = SERVING_KERNEL
+        pallas = kernel == "pallas"
         two_d = w.weight.values.ndim == 2 and jnp.asarray(w.spec.mult).ndim == 1
         if mode == "w8a8":
             if w.a_bits is not None and w.a_scale is not None:
@@ -189,10 +220,10 @@ def dense(w: Weight, x: jnp.ndarray, *, name: str = "", mode: Optional[str] = No
                 return _int8_matmul(x8, w.weight.values, out_scale, x.dtype)
             bits = w.a_bits if w.a_bits is not None else 8
             _check_packed(w)
-            if USE_PALLAS_SERVING and two_d:
+            if pallas and two_d:
                 return _pallas_fused_w8a8(w, x, bits)
             return _dynamic_w8a8_xla(w, x, bits)
-        if USE_PALLAS_SERVING and mode == "dequant" and two_d:
+        if pallas and mode == "dequant" and two_d:
             return _pallas_ocs_matmul(w, x)
         xe = expand_activations(x, w.spec)
         wf = w.weight.dequant(x.dtype)

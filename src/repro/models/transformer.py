@@ -359,15 +359,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 
 def _decode_block(cfg: ModelConfig, p, x, cache, pos, window: int = 0, table=None,
-                  paged_attn=None):
+                  attn_kernel=None):
     """One layer, one token. Returns (x, new_cache). ``table`` (dense/moe):
     the paged cache's block table — ``cache`` is then a page pool;
-    ``paged_attn`` selects the fused paged-attention kernel dispatch (see
-    ``attention.USE_PALLAS_PAGED_ATTN``)."""
+    ``attn_kernel`` ("pallas" | "xla" | "gather") selects the paged decode
+    attention path (see ``attention.attention_decode``)."""
     if cfg.block in ("dense", "moe"):
         h = _norm(cfg, p["norm1"], x)
         a, new_attn = attention_decode(p["attn"], h, cache, pos, cfg, table=table,
-                                       paged_attn=paged_attn)
+                                       attn_kernel=attn_kernel)
         x = x + a
         h = _norm(cfg, p["norm2"], x)
         x = x + (moe(p["moe"], h, cfg) if cfg.block == "moe" else mlp(p["mlp"], h, cfg))
@@ -412,7 +412,7 @@ def decode_tokens(
     cfg: ModelConfig,
     *,
     layers_limit: Optional[int] = None,
-    paged_attn: Optional[bool] = None,
+    attn_kernel=None,
 ):
     """Shared decode body: Q tokens [B, Q] -> (logits [B, Q, V], new caches).
 
@@ -428,8 +428,9 @@ def decode_tokens(
 
     Paged caches (``"table"`` present, see ``serving.kv_cache``): per-layer
     leaves are page pools and reads/writes go through the shared block table;
-    ``paged_attn`` (``None`` = ``attention.USE_PALLAS_PAGED_ATTN``) routes
-    their attention through the fused paged-attention kernel dispatch.
+    ``attn_kernel`` ("pallas" | "xla" | "gather"; ``None`` = "gather")
+    selects their decode-attention path — threaded explicitly from
+    ``EngineConfig.kernels.attn``, never read from a module global.
 
     ``layers_limit`` (dense/moe): run only the first L layers and project
     their output through final_norm + lm_head — the early-exit *drafter* of
@@ -465,7 +466,7 @@ def decode_tokens(
         elif cfg.block in ("dense", "moe"):
             x, nc_attn = _decode_block(
                 cfg, p_i, x, caches["layers"][i]["attn"], pos, table=table,
-                paged_attn=paged_attn,
+                attn_kernel=attn_kernel,
             )
             nc = {"attn": nc_attn}
         elif cfg.block == "mamba2":
@@ -491,23 +492,23 @@ def decode_step(
     cfg: ModelConfig,
     *,
     layers_limit: Optional[int] = None,
-    paged_attn: Optional[bool] = None,
+    attn_kernel=None,
 ):
     """serve_step: one new token [B, 1] -> (logits [B, V], new caches).
 
     ``layers_limit`` truncates to the first L layers (the speculative
-    drafter); ``paged_attn`` selects the fused paged-attention kernel for
-    paged caches; see :func:`decode_tokens`.
+    drafter); ``attn_kernel`` selects the paged decode-attention path; see
+    :func:`decode_tokens`.
     """
     logits, new_caches = decode_tokens(
         params, token, caches, cfg, layers_limit=layers_limit,
-        paged_attn=paged_attn,
+        attn_kernel=attn_kernel,
     )
     return logical(logits[:, 0, :], "batch", "vocab"), new_caches
 
 
 def verify_step(params, tokens: jnp.ndarray, caches, cfg: ModelConfig, *,
-                paged_attn: Optional[bool] = None):
+                attn_kernel=None):
     """Speculative verify: score Q proposed tokens in ONE batched step.
 
     tokens: ``[B, Q]`` — each lane's current token followed by its Q-1 draft
@@ -520,7 +521,7 @@ def verify_step(params, tokens: jnp.ndarray, caches, cfg: ModelConfig, *,
     — K/V written past the committed position is invisible to the causal
     mask and overwritten in place later. Dense/moe archs only.
     """
-    return decode_tokens(params, tokens, caches, cfg, paged_attn=paged_attn)
+    return decode_tokens(params, tokens, caches, cfg, attn_kernel=attn_kernel)
 
 
 def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, max_len: int):

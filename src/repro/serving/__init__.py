@@ -1,5 +1,15 @@
-from .engine import Request, ServingEngine  # noqa: F401
+from .config import (  # noqa: F401
+    EngineConfig,
+    KernelChoice,
+    KernelConfig,
+    SamplingParams,
+    add_engine_config_args,
+    engine_config_from_args,
+)
+from .engine import EngineStats, Request, ServingEngine, TokenEvent  # noqa: F401
 from .kv_cache import PageAllocator, pages_needed  # noqa: F401
 from .spec_decode import AdaptiveK, SpecConfig, SpecDecoder  # noqa: F401
+from . import config  # noqa: F401
 from . import kv_cache  # noqa: F401
+from . import sampling  # noqa: F401
 from . import spec_decode  # noqa: F401

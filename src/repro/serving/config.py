@@ -1,0 +1,396 @@
+"""Typed serving configuration: ``EngineConfig``, ``KernelChoice``,
+``SamplingParams``.
+
+The paper's deployment story is an ML provider serving a client's float model
+in low precision without retraining. Through PRs 1-4 the provider-side knob
+space accreted into three disjoint surfaces — ``ServingEngine`` constructor
+kwargs, the ``USE_PALLAS_SERVING`` / ``USE_PALLAS_PAGED_ATTN`` module globals,
+and hand-written ``launch/serve.py`` flags — which disagreed on vocabulary
+(``--paged-attn {auto,on,off}`` vs ``use_pallas_paged_attn=bool``) and leaked
+state across engines (a test flipping a module global changed every engine
+traced afterwards). This module makes the knob space one validated, hashable
+surface:
+
+* :class:`KernelChoice` — the single kernel-selection vocabulary
+  (``auto | pallas | xla | gather``) shared by the config, the CLI, and
+  ``stats()["attn_kernel"]``;
+* :class:`KernelConfig` — per-engine backend selection for the quantized
+  matmuls and the paged decode attention, threaded *explicitly* through
+  ``layers.dense`` / ``models.attention.attention_decode`` (the module
+  globals survive only as deprecated shims that seed ``auto`` at engine
+  construction — nothing reads them at dispatch time);
+* :class:`EngineConfig` — every engine-level knob (batching, paging, matmul
+  mode, kernels, speculation, probes) as one frozen dataclass.
+  ``launch/serve.py`` auto-generates its argparse flags from these fields
+  (:func:`add_engine_config_args` / :func:`engine_config_from_args`), so the
+  CLI can never drift from the config again;
+* :class:`SamplingParams` — per-request decode sampling (greedy by default,
+  which is what the spec-decode exactness contract requires; temperature /
+  top-k / top-p with a per-request seed otherwise).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import enum
+from typing import Optional
+
+from .spec_decode import SpecConfig
+
+__all__ = [
+    "KernelChoice",
+    "KernelConfig",
+    "EngineConfig",
+    "SamplingParams",
+    "add_engine_config_args",
+    "engine_config_from_args",
+]
+
+
+class KernelChoice(str, enum.Enum):
+    """The one kernel-selection vocabulary (config == CLI == stats).
+
+    * ``AUTO``   — defer to the deprecated module-global shims
+      (``layers.USE_PALLAS_SERVING`` / ``attention.USE_PALLAS_PAGED_ATTN``),
+      read once at engine construction, never at dispatch;
+    * ``PALLAS`` — the fused Pallas kernels (Mosaic on TPU; off-TPU the
+      ``kernels.ops`` dispatch lowers them to their XLA formulations);
+    * ``XLA``    — force the pure-XLA formulation even on TPU (what GSPMD
+      partitions for multi-device runs);
+    * ``GATHER`` — attention only: the legacy gather-everything paged path,
+      the bit-exactness oracle (float pages == dense cache).
+    """
+
+    AUTO = "auto"
+    PALLAS = "pallas"
+    XLA = "xla"
+    GATHER = "gather"
+
+    @classmethod
+    def coerce(cls, v) -> "KernelChoice":
+        if isinstance(v, KernelChoice):
+            return v
+        try:
+            return cls(str(v).lower())
+        except ValueError:
+            raise ValueError(
+                f"kernel choice must be one of {[c.value for c in cls]}, "
+                f"got {v!r}"
+            ) from None
+
+
+def _default_matmul_kernel() -> KernelChoice:
+    """AUTO resolution for the matmul backend: the deprecated module shim."""
+    from repro.models import layers
+
+    return KernelChoice.PALLAS if layers.USE_PALLAS_SERVING else KernelChoice.XLA
+
+
+def _default_attn_kernel() -> KernelChoice:
+    """AUTO resolution for paged decode attention: the deprecated shim.
+
+    The flag-off default is the legacy *gather* path — the engine-level
+    bit-exactness oracle — exactly as before this config existed.
+    """
+    from repro.models import attention
+
+    return (
+        KernelChoice.PALLAS
+        if attention.USE_PALLAS_PAGED_ATTN
+        else KernelChoice.GATHER
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Kernel backend selection for one engine (no module-global leakage:
+    two co-resident engines with different ``KernelConfig``s dispatch
+    independently — the choice is captured per engine at construction and
+    threaded through every traced call)."""
+
+    matmul: KernelChoice = KernelChoice.AUTO  # quantized matmuls (dense)
+    attn: KernelChoice = KernelChoice.AUTO  # paged decode attention
+
+    def __post_init__(self):
+        object.__setattr__(self, "matmul", KernelChoice.coerce(self.matmul))
+        object.__setattr__(self, "attn", KernelChoice.coerce(self.attn))
+        if self.matmul == KernelChoice.GATHER:
+            raise ValueError(
+                "kernels.matmul: 'gather' is an attention-only choice "
+                "(matmul backends: auto | pallas | xla)"
+            )
+
+    def resolve(self) -> "KernelConfig":
+        """Pin ``AUTO`` fields to concrete backends (reads the deprecated
+        module shims — the only place they are consulted)."""
+        return KernelConfig(
+            matmul=(
+                _default_matmul_kernel()
+                if self.matmul == KernelChoice.AUTO
+                else self.matmul
+            ),
+            attn=(
+                _default_attn_kernel()
+                if self.attn == KernelChoice.AUTO
+                else self.attn
+            ),
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode sampling.
+
+    The default (``temperature == 0``) is exact greedy argmax — the decode
+    semantics every PR-1..4 contract (spec-decode output identity, paged
+    bit-exactness) is stated over. Non-greedy requests draw from the
+    temperature-scaled distribution restricted by ``top_k`` / ``top_p``,
+    with a per-lane PRNG key derived from ``(seed, token position)`` — so a
+    fixed seed is bit-reproducible across runs, across batch compositions,
+    and across paged/unpaged engines (float pages are bit-exact, hence so
+    are the logits the key is applied to).
+    """
+
+    temperature: float = 0.0  # 0 = greedy (exact argmax)
+    top_k: int = 0  # 0 = no top-k restriction
+    top_p: float = 1.0  # 1 = no nucleus restriction
+    seed: int = 0  # per-request PRNG seed
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+# Three-state CLI vocabulary for Optional[bool] fields (``paged``): "auto"
+# defers to the engine's per-arch default.
+_TRI = {"auto": None, "on": True, "off": False}
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every engine-level serving knob, validated and hashable.
+
+    One instance fully determines an engine's serving behavior (given the
+    model config and parameters): jit caches and benchmark records can key
+    on it, and flipping a module flag can never change an engine that was
+    already built (the old leakage hazard). Like every ambient trace
+    context here (``layers.SERVING_MODE`` included), the kernel selection
+    assumes jit tracing is single-threaded per process.
+
+    CLI metadata: each field's ``metadata`` drives the auto-generated
+    ``launch/serve.py`` flags (:func:`add_engine_config_args`) — adding a
+    field here *is* adding the flag.
+    """
+
+    max_batch: int = dataclasses.field(
+        default=8, metadata={"help": "decode lanes (continuous-batching width)"}
+    )
+    max_len: int = dataclasses.field(
+        default=512, metadata={"help": "max prompt+decode positions per lane"}
+    )
+    matmul_mode: str = dataclasses.field(
+        default="dequant",
+        metadata={
+            "help": "dequant = weight-only int8; w8a8 = dynamic per-row "
+            "int8 activations",
+            "choices": ["dequant", "w8a8"],
+        },
+    )
+    paged: Optional[bool] = dataclasses.field(
+        default=None,
+        metadata={
+            "help": "paged KV cache (auto = paged on attention archs)",
+            "tri_state": True,
+        },
+    )
+    page_size: int = dataclasses.field(
+        default=16, metadata={"help": "KV page size in tokens (power of two)"}
+    )
+    n_pages: Optional[int] = dataclasses.field(
+        default=None,
+        metadata={
+            "help": "KV pool pages (0/unset = the fixed-slot footprint; "
+            "smaller oversubscribes via recycling)",
+            "optional_int": True,
+        },
+    )
+    kernels: KernelConfig = dataclasses.field(
+        default=KernelConfig(),
+        metadata={
+            "help": "kernel backends",  # expanded to --matmul-kernel/--attn-kernel
+            "kernels": True,
+        },
+    )
+    spec: Optional[SpecConfig] = dataclasses.field(
+        default=None,
+        metadata={
+            "help": "self-speculative decoding",  # expanded to --spec-k/--draft-layers
+            "spec": True,
+        },
+    )
+    attn_probe: bool = dataclasses.field(
+        default=False,
+        metadata={
+            "help": "probe per-step attention time into stats().attn_step_ms "
+            "(costs one extra jit compile)",
+            "store_true": True,
+        },
+    )
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_len < 2:
+            raise ValueError(
+                f"max_len must leave room for prompt + 1 token, got {self.max_len}"
+            )
+        if self.matmul_mode not in ("dequant", "w8a8"):
+            raise ValueError(
+                f"matmul_mode must be dequant|w8a8, got {self.matmul_mode!r}"
+            )
+        if self.page_size < 1 or self.page_size & (self.page_size - 1):
+            raise ValueError(
+                f"page_size must be a power of two, got {self.page_size}"
+            )
+        if self.n_pages is not None and self.n_pages < 2:
+            raise ValueError(
+                f"n_pages must be >= 2 (page 0 is the trash page), got {self.n_pages}"
+            )
+        if self.spec is not None and not isinstance(self.spec, SpecConfig):
+            raise TypeError(f"spec must be a SpecConfig, got {type(self.spec)}")
+        if not isinstance(self.kernels, KernelConfig):
+            if isinstance(self.kernels, dict):
+                object.__setattr__(self, "kernels", KernelConfig(**self.kernels))
+            elif isinstance(self.kernels, (tuple, list)):
+                object.__setattr__(self, "kernels", KernelConfig(*self.kernels))
+            else:
+                raise TypeError(
+                    "kernels must be a KernelConfig (or a dict/tuple of its "
+                    f"fields), got {type(self.kernels)}"
+                )
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# CLI generation: EngineConfig fields -> argparse flags -> EngineConfig.
+# One loop over dataclasses.fields keeps flag names, defaults, help text and
+# choices mechanically in sync with the dataclass — the CLI cannot drift.
+
+
+def _flag(name: str) -> str:
+    return "--" + name.replace("_", "-")
+
+
+def add_engine_config_args(
+    ap: argparse.ArgumentParser,
+    defaults: Optional[EngineConfig] = None,
+    skip: tuple = (),
+) -> None:
+    """Add one flag per :class:`EngineConfig` field to ``ap``.
+
+    Nested fields expand to their canonical flags: ``kernels`` ->
+    ``--matmul-kernel`` / ``--attn-kernel`` (choices = :class:`KernelChoice`),
+    ``spec`` -> ``--spec-k`` / ``--draft-layers``. Tri-state fields take
+    ``{auto,on,off}``. ``skip`` names fields a tool manages itself — they
+    get no flag, and :func:`engine_config_from_args` falls back to the
+    defaults for them (never silently discards a flag the user passed).
+    """
+    d = defaults or EngineConfig()
+    g = ap.add_argument_group("engine", "EngineConfig fields (auto-generated)")
+    for f in dataclasses.fields(EngineConfig):
+        if f.name in skip:
+            continue
+        meta = f.metadata
+        default = getattr(d, f.name)
+        if meta.get("kernels"):
+            choices = [c.value for c in KernelChoice]
+            g.add_argument(
+                _flag("matmul_kernel"), default=default.matmul.value,
+                choices=[c for c in choices if c != "gather"],
+                help="quantized-matmul backend (auto = the deprecated "
+                "layers.USE_PALLAS_SERVING shim)",
+            )
+            g.add_argument(
+                _flag("attn_kernel"), default=default.attn.value, choices=choices,
+                help="paged decode-attention backend (auto = the deprecated "
+                "attention.USE_PALLAS_PAGED_ATTN shim; gather = the legacy "
+                "bit-exactness oracle)",
+            )
+        elif meta.get("spec"):
+            sd = default if default is not None else SpecConfig()
+            g.add_argument(
+                _flag("spec_k"), type=int,
+                default=(sd.k if default is not None else 0),
+                help="self-speculative draft window (0 = off)",
+            )
+            g.add_argument(
+                _flag("draft_layers"), type=int,
+                default=(sd.draft_layers or 0),
+                help="truncate the drafter to the first L layers (0 = all)",
+            )
+        elif meta.get("tri_state"):
+            g.add_argument(
+                _flag(f.name), choices=sorted(_TRI),
+                default=next(k for k, v in _TRI.items() if v == default),
+                help=meta.get("help"),
+            )
+        elif meta.get("store_true"):
+            g.add_argument(
+                _flag(f.name), action="store_true", default=default,
+                help=meta.get("help"),
+            )
+        elif meta.get("optional_int"):
+            g.add_argument(
+                _flag(f.name), type=int, default=default or 0,
+                help=meta.get("help"),
+            )
+        else:
+            g.add_argument(
+                _flag(f.name), type=type(default), default=default,
+                choices=meta.get("choices"), help=meta.get("help"),
+            )
+
+
+def engine_config_from_args(args: argparse.Namespace, **overrides) -> EngineConfig:
+    """Invert :func:`add_engine_config_args`: parsed flags -> EngineConfig.
+
+    Fields whose flags were ``skip``-ped at generation time are absent from
+    ``args`` and fall back to the EngineConfig defaults (or ``overrides``).
+    """
+    kw = {}
+    for f in dataclasses.fields(EngineConfig):
+        meta = f.metadata
+        if meta.get("kernels"):
+            if hasattr(args, "matmul_kernel"):
+                kw["kernels"] = KernelConfig(
+                    matmul=args.matmul_kernel, attn=args.attn_kernel
+                )
+        elif meta.get("spec"):
+            if hasattr(args, "spec_k"):
+                kw["spec"] = (
+                    SpecConfig(
+                        k=args.spec_k, draft_layers=args.draft_layers or None
+                    )
+                    if args.spec_k
+                    else None
+                )
+        elif not hasattr(args, f.name):
+            pass  # skipped at generation time: EngineConfig default applies
+        elif meta.get("tri_state"):
+            kw[f.name] = _TRI[getattr(args, f.name)]
+        elif meta.get("optional_int"):
+            kw[f.name] = getattr(args, f.name) or None
+        else:
+            kw[f.name] = getattr(args, f.name)
+    kw.update(overrides)
+    return EngineConfig(**kw)

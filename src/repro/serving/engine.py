@@ -3,60 +3,61 @@
 The paper's deployment scenario is an ML service provider running a client's
 float model in low precision. This engine is that provider's serving loop:
 
+* **configuration** — one validated, hashable :class:`EngineConfig`
+  (``serving.config``) owns every engine-level knob: batching, paging,
+  matmul mode, kernel backend selection (:class:`KernelConfig` — threaded
+  explicitly through ``layers.dense`` / ``attention_decode``; the old
+  ``USE_PALLAS_*`` module globals survive only as deprecated shims that seed
+  ``auto``), speculation, and probes. Legacy constructor kwargs
+  (``max_batch=`` etc.) keep working one release behind a
+  ``DeprecationWarning``;
 * **weights** — the OCS+clip+int8 parameter tree from
   :func:`repro.core.apply.quantize_params` (float trees also accepted: the
   model layer dispatches on leaf type);
+* **request lifecycle** — ``submit(Request)`` queues; per-request
+  :class:`SamplingParams` select greedy (default — the mode every
+  bit-exactness contract is stated over) or temperature/top-k/top-p
+  sampling with a per-lane PRNG key derived from ``(seed, position)``
+  (``serving.sampling``), folded into the jitted decode/prefill steps;
+  :meth:`ServingEngine.generate` is a streaming facade yielding
+  :class:`TokenEvent` s as tokens land (first tokens stream before the
+  batch completes); :meth:`ServingEngine.cancel` retires a request
+  mid-flight, reclaiming its lane and releasing its pages through
+  ``PageAllocator.truncate``;
 * **decode lanes** — a fixed decode batch of ``max_batch`` sequences sharing
   one jitted ``decode_step``; finished sequences free their lane immediately
   and the next queued request is *hot-swapped in* (continuous batching);
 * **paged KV cache** (attention archs, the default) — KV lives in a global
-  page pool (``serving.kv_cache``): ``[n_pages, KV, page_size, hd]`` per
-  layer (int8 pages + f32 scales when ``cfg.kv_bits == 8``), addressed per
-  lane through a block table. **Admission is page-based**: a request is
-  admitted when a free lane exists *and*
-  ``pages_needed(prompt_len + max_new_tokens)`` fits the free pool — engine
-  capacity is a function of actual traffic, not worst-case ``max_len``.
-  Pages are reclaimed at retirement; full prompt pages are content-hashed
-  into a prefix cache, so a repeated system prompt's pages are refcount-
-  shared and only the unseen suffix is prefilled. SSM/hybrid blocks keep the
-  dense per-lane caches (their decode state is O(1) per sequence);
+  page pool (``serving.kv_cache``) addressed per lane through a block table;
+  admission is page-based (see PR 2) with FIFO backpressure, prefix reuse,
+  and page reclamation at retirement;
 * **prefill** — *chunked*: the prompt suffix (zero-padded to a pow2 bucket)
-  runs through one jitted call — O(1) jitted calls per request, one compile
-  per (bucket, prefix-pages) shape (the ``_prefill_cache``). SSM/hybrid
+  runs through one jitted call — O(1) jitted calls per request. SSM/hybrid
   blocks fall back to decode-step replay;
-* **positions** — per-lane: ``caches["pos"]`` is a ``[max_batch]`` vector, so
-  mixed-length admission decodes with exact causal masks and RoPE phases;
-* **matmul_mode** — ``dequant`` (weight-only int8) or ``w8a8`` (dynamic
-  per-row activation quant; routes through the fused Pallas kernel when
-  ``repro.models.layers.USE_PALLAS_SERVING`` is on);
-* **paged attention kernel** (``use_pallas_paged_attn=``, default: the
-  ``repro.models.attention.USE_PALLAS_PAGED_ATTN`` module flag) — decode
-  attention consumes the page pool in place through the fused
-  append + flash kernel dispatch (``kernels.paged_attention``) instead of
-  re-materializing the gathered cache per layer per step;
-  ``stats()["attn_kernel"]`` reports which path compiled and
-  ``stats()["attn_step_ms"]`` the probed per-step attention time (engines
-  built with ``attn_probe=True``);
-* **self-speculative decoding** (``spec=``/``spec_k=``, dense/moe) — the
-  quantized model drafts ``k`` greedy tokens per lane (``serving.
-  spec_decode``), the serving-precision target verifies all ``k+1``
-  positions in one batched multi-token step, the accepted prefix commits
-  and the rejected tail rolls back by rewinding the per-lane positions.
-  Greedy spec-decode is *output-identical* to plain greedy decode — the
-  subsystem's correctness contract.
+* **self-speculative decoding** (``EngineConfig.spec``, dense/moe) — the
+  quantized model drafts ``k`` greedy tokens per lane, the target verifies
+  all ``k+1`` positions in one step (``serving.spec_decode``). Greedy
+  spec-decode is *output-identical* to plain greedy decode; lanes with
+  non-greedy ``SamplingParams`` fall back to plain decode steps for the
+  rounds they are active (greedy lanes keep their exact token streams —
+  plain decode and spec-decode commit the same argmax chain);
+* **stats** — a typed :class:`EngineStats` (schema frozen at v5: adds
+  TTFT/ITL p50+p95 from the per-token event timestamps, ``cancelled``, and
+  the resolved ``matmul_kernel``/``attn_kernel`` in the shared
+  ``KernelChoice`` vocabulary); ``stats()`` keeps returning the flat dict
+  view.
 
-The engine is deliberately synchronous and deterministic (greedy argmax) —
-batching policy, not sampling, is what the systems layer exercises. Trace
-counters (``prefill_traces`` / ``decode_traces`` bump only while jit is
-tracing) let benchmarks assert the compile story: a request must cost O(1)
-jitted calls, not O(prompt_len).
+Trace counters (``prefill_traces`` / ``decode_traces`` bump only while jit
+is tracing) let benchmarks assert the compile story: a request must cost
+O(1) jitted calls, not O(prompt_len).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from collections import deque
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,9 +68,14 @@ from repro.models import attention as attn_mod
 from repro.models import layers
 from repro.models import transformer as T
 from . import kv_cache as kvc
+from . import sampling as sampling_mod
 from . import spec_decode as spec_mod
+from .config import EngineConfig, KernelChoice, KernelConfig, SamplingParams
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "TokenEvent", "EngineStats", "ServingEngine"]
+
+_GREEDY = SamplingParams()
+_UNSET = object()  # legacy-kwarg sentinel: None is a meaningful value
 
 
 @dataclasses.dataclass
@@ -78,11 +84,94 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    sampling: Optional[SamplingParams] = None  # None = greedy
     # Filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None  # "eos" | "length" | "cancelled"
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One streamed token of one request (the ``generate`` facade's unit).
+
+    ``t`` is the ``time.perf_counter`` stamp the engine booked the token at
+    — TTFT and inter-token latencies derive from these, so the benchmark
+    numbers and the stream a client observes are the same measurement.
+    """
+
+    uid: int
+    token: int
+    index: int  # 0-based position in the request's output stream
+    t: float
+    finished: bool = False
+    finish_reason: Optional[str] = None  # set on the final event
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Typed serving counters (stats schema v5, frozen).
+
+    The dict view (:meth:`as_dict`, what ``ServingEngine.stats()`` returns)
+    is the stable cross-PR schema consumed by benchmarks — append fields,
+    never rename. v5 additions over v4: ``cancelled``, ``ttft_p50_s`` /
+    ``ttft_p95_s`` / ``itl_p50_s`` / ``itl_p95_s`` (percentiles over the
+    per-token event stream), ``matmul_kernel`` / ``matmul_mode``, and
+    ``attn_kernel`` now speaks the full ``KernelChoice`` vocabulary
+    (``"gather"`` for the legacy oracle path that v4 reported as ``"xla"``).
+    """
+
+    completed: int = 0
+    cancelled: int = 0
+    decode_steps: int = 0
+    decoded_tokens: int = 0
+    mean_latency_s: float = 0.0
+    mean_ttft_s: float = 0.0
+    ttft_p50_s: float = 0.0
+    ttft_p95_s: float = 0.0
+    itl_p50_s: float = 0.0
+    itl_p95_s: float = 0.0
+    prefill_tokens: int = 0
+    prefill_time_s: float = 0.0
+    prefill_compile_s: float = 0.0
+    prefill_tok_per_s: float = 0.0
+    decode_time_s: float = 0.0
+    decode_compile_s: float = 0.0
+    decode_tok_per_s: float = 0.0
+    prefill_calls: int = 0
+    prefill_requests: int = 0
+    prefill_calls_per_request: float = 0.0
+    prefill_traces: int = 0
+    decode_traces: int = 0
+    kv_page_size: float = 0.0
+    kv_pages_capacity: float = 0.0
+    kv_pages_in_use: float = 0.0
+    kv_pages_cached: float = 0.0
+    kv_pages_peak: float = 0.0
+    kv_pool_occupancy: float = 0.0
+    kv_pool_peak_occupancy: float = 0.0
+    prefix_hit_rate: float = 0.0
+    prefix_hit_pages: float = 0.0
+    attn_kernel: str = "xla"
+    matmul_kernel: str = "xla"
+    matmul_mode: str = "dequant"
+    attn_step_ms: float = 0.0
+    spec_enabled: float = 0.0
+    spec_rounds: float = 0.0
+    spec_k: float = 0.0
+    spec_proposed: float = 0.0
+    spec_accepted: float = 0.0
+    spec_acceptance_rate: float = 0.0
+    spec_tokens_per_target_step: float = 0.0
+    spec_draft_time_s: float = 0.0
+    spec_verify_time_s: float = 0.0
+    spec_compile_s: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
 
 
 @dataclasses.dataclass
@@ -92,89 +181,142 @@ class _Slot:
     pages: List[int] = dataclasses.field(default_factory=list)
 
 
+def _percentile(values: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values, np.float64), q)) if values else 0.0
+
+
+def _fold_legacy_kwargs(config: Optional[EngineConfig], legacy: Dict) -> EngineConfig:
+    """One release of backwards compatibility: map deprecated ``ServingEngine``
+    kwargs onto :class:`EngineConfig` fields behind a ``DeprecationWarning``."""
+    present = {k: v for k, v in legacy.items() if v is not _UNSET}
+    config = config if config is not None else EngineConfig()
+    if not present:
+        return config
+    warnings.warn(
+        f"ServingEngine kwargs {sorted(present)} are deprecated; pass "
+        "EngineConfig(...) (repro.serving.EngineConfig) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+    upa = present.pop("use_pallas_paged_attn", None)
+    if upa is not None:  # legacy bool vocabulary -> KernelChoice
+        config = config.replace(
+            kernels=dataclasses.replace(
+                config.kernels,
+                attn=KernelChoice.PALLAS if upa else KernelChoice.GATHER,
+            )
+        )
+    spec_k = present.pop("spec_k", 0)
+    if spec_k and present.get("spec") is None:
+        present["spec"] = spec_mod.SpecConfig(k=spec_k)
+    return config.replace(**present)
+
+
 class ServingEngine:
     def __init__(
         self,
         cfg: ModelConfig,
         params,
+        config: Optional[EngineConfig] = None,
         *,
-        max_batch: int = 8,
-        max_len: int = 512,
-        matmul_mode: str = "dequant",
-        paged: Optional[bool] = None,
-        page_size: int = 16,
-        n_pages: Optional[int] = None,
-        spec: Optional[spec_mod.SpecConfig] = None,
-        spec_k: int = 0,
-        use_pallas_paged_attn: Optional[bool] = None,
-        attn_probe: bool = False,
+        # Deprecated kwargs (one release behind a DeprecationWarning; the
+        # canonical surface is EngineConfig):
+        max_batch=_UNSET,
+        max_len=_UNSET,
+        matmul_mode=_UNSET,
+        paged=_UNSET,
+        page_size=_UNSET,
+        n_pages=_UNSET,
+        spec=_UNSET,
+        spec_k=_UNSET,
+        use_pallas_paged_attn=_UNSET,
+        attn_probe=_UNSET,
     ):
         if not cfg.causal:
             raise ValueError("encoder-only arch: no decode serving")
-        if matmul_mode not in ("dequant", "w8a8"):
-            raise ValueError(f"matmul_mode must be dequant|w8a8, got {matmul_mode}")
+        config = _fold_legacy_kwargs(
+            config,
+            dict(
+                max_batch=max_batch, max_len=max_len, matmul_mode=matmul_mode,
+                paged=paged, page_size=page_size, n_pages=n_pages, spec=spec,
+                spec_k=spec_k, use_pallas_paged_attn=use_pallas_paged_attn,
+                attn_probe=attn_probe,
+            ),
+        )
         self.cfg = cfg
         self.params = params
-        self.max_batch = max_batch
-        self.max_len = max_len
-        self.matmul_mode = matmul_mode
-        self.slots = [_Slot() for _ in range(max_batch)]
+        self.config = config
+        self.max_batch = config.max_batch
+        self.max_len = config.max_len
+        self.matmul_mode = config.matmul_mode
+        # Kernel backends, resolved ONCE (the only reads of the deprecated
+        # USE_PALLAS_* shims) and captured per engine: co-resident engines
+        # with different KernelConfigs dispatch independently.
+        resolved = config.kernels.resolve()
+        self.matmul_kernel = resolved.matmul.value  # "pallas" | "xla"
+        self.slots = [_Slot() for _ in range(self.max_batch)]
         self.queue: Deque[Request] = deque()  # FIFO; popleft is O(1) on the
         # admission hot loop (a plain list.pop(0) is O(n) for deep queues)
         self.done: List[Request] = []
         # Paged KV cache: attention archs only (SSM/hybrid decode states are
         # O(1) per lane — nothing to page).
-        self.paged = cfg.block in ("dense", "moe") if paged is None else paged
+        self.paged = (
+            cfg.block in ("dense", "moe") if config.paged is None else config.paged
+        )
         if self.paged:
             if cfg.block not in ("dense", "moe"):
                 raise ValueError(f"paged KV cache: dense/moe only, got {cfg.block}")
-            # Power-of-two only: prefill buckets are pow2 (>= page_size), and
-            # write_prompt_pages needs bucket % page_size == 0.
-            if page_size < 1 or page_size & (page_size - 1):
-                raise ValueError(f"page_size must be a power of two, got {page_size}")
-            if max_len % page_size:
+            page_size = config.page_size
+            if self.max_len % page_size:
                 raise ValueError(
-                    f"max_len {max_len} must be a multiple of page_size {page_size}"
+                    f"max_len {self.max_len} must be a multiple of page_size "
+                    f"{page_size}"
                 )
             self.page_size = page_size
-            self.max_pages_per_seq = max_len // page_size
+            self.max_pages_per_seq = self.max_len // page_size
+            n_pages = config.n_pages
             if n_pages is None:
                 # Default pool = the old fixed-slot memory footprint
                 # (+ the reserved trash page); shrink it to oversubscribe.
-                n_pages = max_batch * self.max_pages_per_seq + 1
+                n_pages = self.max_batch * self.max_pages_per_seq + 1
             self.allocator = kvc.PageAllocator(n_pages, page_size)
             self.caches = kvc.init_paged_cache(
-                cfg, max_batch, n_pages, page_size, self.max_pages_per_seq,
+                cfg, self.max_batch, n_pages, page_size, self.max_pages_per_seq,
                 dtype=jnp.float32,
             )
         else:
             self.allocator = None
-            self.caches = T.init_cache(cfg, max_batch, max_len, dtype=jnp.float32)
-        # Paged-attention kernel knob: None defers to the module default
-        # (attention.USE_PALLAS_PAGED_ATTN); only meaningful on paged caches.
-        self.paged_attn = self.paged and (
-            attn_mod.USE_PALLAS_PAGED_ATTN
-            if use_pallas_paged_attn is None
-            else bool(use_pallas_paged_attn)
-        )
+            self.caches = T.init_cache(cfg, self.max_batch, self.max_len,
+                                       dtype=jnp.float32)
+        # Paged decode-attention backend (KernelChoice vocabulary); unpaged
+        # engines have no paged path and report "xla" (the dense einsums).
+        self.attn_kernel = resolved.attn.value if self.paged else "xla"
         # Self-speculative decoding: the quantized model drafts k tokens per
         # lane, the serving-precision target verifies them in one multi-token
-        # step (`spec_k=` is shorthand for `spec=SpecConfig(k=spec_k)`).
-        if spec is None and spec_k:
-            spec = spec_mod.SpecConfig(k=spec_k)
+        # step. The decoder traces the engine's exact kernel selection.
         self._spec = (
-            spec_mod.SpecDecoder(cfg, spec, matmul_mode, paged_attn=self.paged_attn)
-            if spec is not None
+            spec_mod.SpecDecoder(
+                cfg, config.spec, self.matmul_mode,
+                matmul_kernel=self.matmul_kernel, attn_kernel=self.attn_kernel,
+            )
+            if config.spec is not None
             else None
         )
         # Per-step attention-time probe (stats()["attn_step_ms"]): off by
         # default — it costs one extra jit compile per engine, which tier-1
         # tests creating dozens of engines must not pay.
-        self.attn_probe = attn_probe and self.paged
+        self.attn_probe = config.attn_probe and self.paged
         self._attn_probe_fn: Optional[Callable] = None
-        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
         self.steps = 0
         self.decoded_tokens = 0
+        # Per-lane sampling state (greedy unless a request says otherwise).
+        # The device-array view is rebuilt lazily on admission/retirement;
+        # the decode jit's static `sampled` flag follows the live batch, so
+        # greedy-only rounds never trace (or pay for) the sampling branch.
+        self._sampling: List[SamplingParams] = [_GREEDY] * self.max_batch
+        self._samp_cache: Optional[Dict[str, jnp.ndarray]] = None
+        self._auto_uid = 0
         # Perf counters (the serving benchmark's raw data). Throughput is
         # computed from *warm* time/tokens only: calls that triggered a jit
         # trace are booked under *_compile_s so BENCH numbers track kernels,
@@ -191,21 +333,53 @@ class ServingEngine:
         self.prefill_traces = 0  # distinct prefill compilations (buckets)
         self.decode_traces = 0
 
-        self._decode = jax.jit(lambda p, c, t: self._decode_impl(p, c, t))
+        self._decode = jax.jit(self._decode_impl, static_argnames=("sampled",))
         # Prefill jits per shape key: prompt-length bucket (pow2 padding
-        # bounds recompiles), plus the prefix-hit page count when paged.
+        # bounds recompiles) + the sampled flag, plus the prefix-hit page
+        # count when paged.
         self._prefill_cache: Dict[Tuple, Callable] = {}
 
     # ------------------------------------------------------------- internals
 
-    def _decode_impl(self, params, caches, token):
+    @property
+    def paged_attn(self) -> bool:
+        """Legacy view of the attention-kernel selection (True = the fused
+        paged-attention dispatch, i.e. ``kernels.attn`` is pallas/xla)."""
+        return self.paged and self.attn_kernel in ("pallas", "xla")
+
+    def _decode_impl(self, params, caches, token, samp, *, sampled: bool):
         self.decode_traces += 1  # python side effect: runs only while tracing
-        with layers.serving_mode(self.matmul_mode):
+        with layers.serving_mode(self.matmul_mode, kernel=self.matmul_kernel):
             logits, new_caches = T.decode_step(
-                params, token, caches, self.cfg, paged_attn=self.paged_attn
+                params, token, caches, self.cfg, attn_kernel=self.attn_kernel
             )
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return nxt, new_caches
+        if sampled:
+            # Keys derive from (request seed, position): reproducible across
+            # runs, batch compositions, and paged/unpaged engines.
+            nxt = sampling_mod.sample_tokens(logits, samp, caches["pos"])
+        else:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt[:, None], new_caches
+
+    def _samp_device(self) -> Dict[str, jnp.ndarray]:
+        if self._samp_cache is None:
+            self._samp_cache = sampling_mod.params_to_arrays(self._sampling)
+        return self._samp_cache
+
+    @staticmethod
+    def _samp_one(sp: SamplingParams) -> Dict[str, jnp.ndarray]:
+        """Single-lane sampling arrays (the per-request prefill call)."""
+        return sampling_mod.params_to_arrays([sp])
+
+    def _set_lane_sampling(self, slot_idx: int, sp: SamplingParams) -> None:
+        self._sampling[slot_idx] = sp
+        self._samp_cache = None
+
+    def _active_sampled(self) -> bool:
+        return any(
+            s.req is not None and not self._sampling[i].greedy
+            for i, s in enumerate(self.slots)
+        )
 
     def _prefill_bucket(self, n: int) -> int:
         b = 8
@@ -216,30 +390,45 @@ class ServingEngine:
         return min(b, self.max_len)
 
     def _prefill_fn(self, key) -> Callable:
+        """key: (bucket, sampled) unpaged / (bucket, n_hit, sampled) paged."""
         fn = self._prefill_cache.get(key)
         if fn is not None:
             return fn
+        sampled = key[-1]
         if self.paged:
 
-            def impl(params, tokens, length, page_ids, prefix_ids, pools):
+            def impl(params, tokens, length, page_ids, prefix_ids, pools,
+                     samp, samp_pos):
                 self.prefill_traces += 1
-                with layers.serving_mode(self.matmul_mode):
+                with layers.serving_mode(
+                    self.matmul_mode, kernel=self.matmul_kernel
+                ):
                     logits, new_pools = T.prefill_into_pages(
                         params, tokens, self.cfg, pools, page_ids,
                         length=length, prefix_ids=prefix_ids,
                     )
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_pools
+                if sampled:
+                    nxt = sampling_mod.sample_tokens(logits, samp, samp_pos)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, new_pools
 
         else:
 
-            def impl(params, tokens, length):
+            def impl(params, tokens, length, samp):
                 self.prefill_traces += 1
-                with layers.serving_mode(self.matmul_mode):
+                with layers.serving_mode(
+                    self.matmul_mode, kernel=self.matmul_kernel
+                ):
                     logits, scratch = T.prefill_with_cache(
                         params, tokens, self.cfg, self.max_len,
                         length=length, cache_dtype=jnp.float32,
                     )
-                return jnp.argmax(logits, axis=-1).astype(jnp.int32), scratch
+                if sampled:
+                    nxt = sampling_mod.sample_tokens(logits, samp, length - 1)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, scratch
 
         fn = jax.jit(impl)
         self._prefill_cache[key] = fn
@@ -254,13 +443,14 @@ class ServingEngine:
             self.prefill_time_s += elapsed
             self.prefill_tokens_warm += n_tokens
 
-    def _run_prefill(self, prompt: np.ndarray):
+    def _run_prefill(self, prompt: np.ndarray, sp: SamplingParams):
         """Prompt -> (first generated token, single-slot scratch caches).
 
         Attention archs (unpaged engines): chunked prefill — the padded
         prompt runs in ONE jitted call per request. SSM/hybrid archs:
         decode-step replay (one jitted call per token; exactly consistent
-        with the decode path).
+        with the decode path — including the sampled first token, whose key
+        position ``n - 1`` matches the chunked path).
         """
         n = len(prompt)
         self._validate_prompt_len(n)  # backstop; submit() already rejected
@@ -270,17 +460,22 @@ class ServingEngine:
             bucket = self._prefill_bucket(n)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :n] = prompt
-            nxt, scratch = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32)
+            nxt, scratch = self._prefill_fn((bucket, not sp.greedy))(
+                self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32),
+                self._samp_one(sp),
             )
             self.prefill_calls += 1
             first = int(nxt[0])
         else:
             scratch = T.init_cache(self.cfg, 1, self.max_len, dtype=jnp.float32)
             tok = jnp.asarray(prompt, jnp.int32)[None, :]
+            samp1 = self._samp_one(sp)
             nxt = None
             for i in range(tok.shape[1]):
-                nxt, scratch = self._decode(self.params, scratch, tok[:, i : i + 1])
+                nxt, scratch = self._decode(
+                    self.params, scratch, tok[:, i : i + 1], samp1,
+                    sampled=not sp.greedy,
+                )
                 self.prefill_calls += 1
             first = int(nxt[0, 0])
         elapsed = time.perf_counter() - t0
@@ -289,13 +484,16 @@ class ServingEngine:
         return first, scratch
 
     def _run_prefill_paged(
-        self, suffix: np.ndarray, hit_ids: List[int], new_ids: List[int]
+        self, suffix: np.ndarray, hit_ids: List[int], new_ids: List[int],
+        sp: SamplingParams, n_total: int,
     ) -> int:
         """Suffix-only prefill, writing K/V straight into the page pool.
 
         ONE jitted call per request; prefix pages (``hit_ids``) are gathered
         read-only inside the call, so a full-prefix hit prefills only the
-        suffix. Returns the first generated token.
+        suffix. ``n_total`` is the full prompt length — the sampled first
+        token's key position (``n_total - 1``) must not depend on how much
+        prefix the cache happened to hit. Returns the first generated token.
         """
         m = len(suffix)  # >= 1: admission caps prefix hits at (n-1)//page_size
         bucket = self._prefill_bucket(m)
@@ -308,13 +506,15 @@ class ServingEngine:
         pools = [layer["attn"] for layer in self.caches["layers"]]
         traces0 = self.prefill_traces
         t0 = time.perf_counter()
-        nxt, new_pools = self._prefill_fn((bucket, len(hit_ids)))(
+        nxt, new_pools = self._prefill_fn((bucket, len(hit_ids), not sp.greedy))(
             self.params,
             jnp.asarray(toks),
             jnp.asarray([m], jnp.int32),
             jnp.asarray(ids),
             jnp.asarray(hit_ids, jnp.int32),
             pools,
+            self._samp_one(sp),
+            jnp.asarray([n_total - 1], jnp.int32),
         )
         self.prefill_calls += 1
         first = int(nxt[0])
@@ -328,15 +528,19 @@ class ServingEngine:
         done (immediate eos, or a 1-token budget) and must not take a lane —
         the old engine appended it unchecked, so an immediate-eos request
         still burned ``max_new_tokens - 1`` decode steps (and its pages)."""
-        req.t_first_token = time.perf_counter()
+        now = time.perf_counter()
+        req.t_first_token = now
         req.output.append(first)
-        if req.max_new_tokens <= 1 or (
-            req.eos_id is not None and first == req.eos_id
-        ):
-            req.t_done = time.perf_counter()
-            self.done.append(req)
-            return True
-        return False
+        req.t_tokens.append(now)
+        if req.eos_id is not None and first == req.eos_id:
+            req.finish_reason = "eos"
+        elif req.max_new_tokens <= 1:
+            req.finish_reason = "length"
+        else:
+            return False
+        req.t_done = time.perf_counter()
+        self.done.append(req)
+        return True
 
     def _install(self, slot_idx: int, req: Request) -> bool:
         """Admit ``req`` into lane ``slot_idx``. Returns False — leaving the
@@ -344,7 +548,8 @@ class ServingEngine:
         the lane stays free if the request finishes at its first token."""
         if self.paged:
             return self._install_paged(slot_idx, req)
-        first, scratch = self._run_prefill(np.asarray(req.prompt, np.int64))
+        sp = req.sampling or _GREEDY
+        first, scratch = self._run_prefill(np.asarray(req.prompt, np.int64), sp)
         if self._finish_first_token(req, first):
             return True
 
@@ -365,12 +570,14 @@ class ServingEngine:
         self.caches["pos"] = self.caches["pos"].at[slot_idx].set(scratch["pos"][0])
         self.tokens = self.tokens.at[slot_idx, 0].set(first)
         self.slots[slot_idx] = _Slot(req=req, remaining=req.max_new_tokens - 1)
+        self._set_lane_sampling(slot_idx, sp)
         return True
 
     def _install_paged(self, slot_idx: int, req: Request) -> bool:
         prompt = np.asarray(req.prompt, np.int64)
         n = len(prompt)
         self._validate_prompt_len(n)
+        sp = req.sampling or _GREEDY
         ps = self.page_size
         need_total = min(
             kvc.pages_needed(n + req.max_new_tokens, ps), self.max_pages_per_seq
@@ -392,7 +599,7 @@ class ServingEngine:
         row_ids = hit_ids + new_ids
         n_hit = len(hit_ids) * ps
 
-        first = self._run_prefill_paged(prompt[n_hit:], hit_ids, new_ids)
+        first = self._run_prefill_paged(prompt[n_hit:], hit_ids, new_ids, sp, n)
         # Publish the freshly written *full* prompt pages (decode never
         # touches them — it appends past the prompt — so sharing is safe).
         for j in range(len(hit_ids), n // ps):
@@ -410,23 +617,29 @@ class ServingEngine:
         self.slots[slot_idx] = _Slot(
             req=req, remaining=req.max_new_tokens - 1, pages=row_ids
         )
+        self._set_lane_sampling(slot_idx, sp)
         return True
 
     def _retire(self, slot_idx: int) -> None:
         slot = self.slots[slot_idx]
         slot.req.t_done = time.perf_counter()
+        if slot.req.finish_reason is None:
+            slot.req.finish_reason = "length"
         self.done.append(slot.req)
         if self.paged:
             # Reclaim pages and point the lane at the trash page so its dead
             # writes can never land in a page the allocator hands out again.
             # Retirement is the keep_tokens=0 case of the page-aware truncate
-            # (the speculative rollback path — one release policy for both).
+            # (the speculative rollback path — one release policy for both;
+            # cancel() rides the same path, so a cancelled lane's pages are
+            # reclaimed exactly like a drained one's).
             self.allocator.truncate(slot.pages, 0)
             self.caches["table"] = (
                 self.caches["table"].at[slot_idx].set(kvc.TRASH_PAGE)
             )
             self.caches["pos"] = self.caches["pos"].at[slot_idx].set(0)
         self.slots[slot_idx] = _Slot()
+        self._set_lane_sampling(slot_idx, _GREEDY)
 
     # ------------------------------------------------------------------ API
 
@@ -444,6 +657,10 @@ class ServingEngine:
         # abort the engine loop and strand every in-flight sequence — and a
         # request larger than the whole pool would deadlock the queue.
         self._validate_prompt_len(len(req.prompt))
+        if req.sampling is not None and not isinstance(req.sampling, SamplingParams):
+            raise TypeError(
+                f"Request.sampling must be SamplingParams, got {type(req.sampling)}"
+            )
         if self._spec is not None and len(req.prompt) + req.max_new_tokens > self.max_len:
             # Speculative windows write up to k positions past the committed
             # point; exactness needs every *committed* position to live in a
@@ -466,8 +683,89 @@ class ServingEngine:
                     f"request needs {need} pages; pool capacity is "
                     f"{self.allocator.capacity} (raise n_pages)"
                 )
+        if isinstance(req.uid, int):  # generate()'s auto-uids stay unique
+            self._auto_uid = max(self._auto_uid, req.uid + 1)
         req.t_submit = time.perf_counter()
         self.queue.append(req)
+
+    def generate(
+        self,
+        prompt: Sequence[int],
+        sampling: Optional[SamplingParams] = None,
+        *,
+        max_new_tokens: int = 32,
+        eos_id: Optional[int] = None,
+        uid: Optional[int] = None,
+    ) -> Iterator[TokenEvent]:
+        """Submit one request and stream its tokens as :class:`TokenEvent` s.
+
+        The returned generator *drives the engine* (each ``next()`` runs
+        engine steps until the request produces its next token), so tokens
+        stream as they land — the first event arrives right after this
+        request's prefill, not when the batch drains. Other in-flight
+        requests keep decoding in the same steps: interleaving several
+        ``generate`` iterators (or a background ``run()``) is the intended
+        multi-client shape. ``cancel(uid)`` mid-iteration ends the stream
+        with ``finish_reason="cancelled"``.
+        """
+        if uid is None:
+            uid = self._auto_uid  # submit() bumps past it
+        req = Request(
+            uid=uid, prompt=list(prompt), max_new_tokens=max_new_tokens,
+            eos_id=eos_id, sampling=sampling,
+        )
+        self.submit(req)
+        return self.stream(req)
+
+    def stream(self, req: Request) -> Iterator[TokenEvent]:
+        """Yield ``req``'s tokens as they are produced, stepping the engine
+        as needed. ``req`` must already be submitted to this engine.
+
+        The final event carries ``finished=True`` + ``finish_reason`` when
+        the engine knew the outcome as it booked the token (eos, budget). A
+        ``cancel()`` that lands *after* the last token was already yielded
+        simply ends the stream — check ``req.finish_reason`` for the
+        verdict (a queue-cancelled request yields no events at all)."""
+        seen = 0
+        while True:
+            while seen < len(req.output):
+                last = req.t_done > 0.0 and seen == len(req.output) - 1
+                yield TokenEvent(
+                    uid=req.uid,
+                    token=req.output[seen],
+                    index=seen,
+                    t=req.t_tokens[seen],
+                    finished=last,
+                    finish_reason=req.finish_reason if last else None,
+                )
+                seen += 1
+            if req.t_done > 0.0:
+                return  # finished (a queue-cancelled request yields nothing)
+            if not self.step() and not self.queue:
+                return  # engine drained without finishing the request
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request mid-flight. Returns True if found.
+
+        A queued request is removed before ever taking a lane; an active
+        one retires immediately — its lane frees for the next admission and
+        its pages are released through ``PageAllocator.truncate`` (the
+        retirement path), leaving the allocator exactly as if the request
+        had drained. Completed requests are not cancellable.
+        """
+        for r in self.queue:
+            if r.uid == uid:
+                self.queue.remove(r)
+                r.finish_reason = "cancelled"
+                r.t_done = time.perf_counter()
+                self.done.append(r)
+                return True
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None and slot.req.uid == uid:
+                slot.req.finish_reason = "cancelled"
+                self._retire(i)
+                return True
+        return False
 
     def _admit(self):
         """FIFO admission: stop at the first request that doesn't fit (no
@@ -505,6 +803,7 @@ class ServingEngine:
             self.params, self.caches, self.tokens, k_want
         )
         self.steps += 1
+        now = time.perf_counter()
         new_pos = pos0.copy()
         next_tok = tok0.copy()
         round_committed = round_acc = round_prop = 0
@@ -518,13 +817,17 @@ class ServingEngine:
             done = False
             for t in commit:
                 slot.req.output.append(int(t))
+                slot.req.t_tokens.append(now)
                 self.decoded_tokens += 1
                 slot.remaining -= 1
                 used += 1
-                if slot.remaining <= 0 or (
-                    slot.req.eos_id is not None and int(t) == slot.req.eos_id
-                ):
-                    done = True  # eos/budget mid-window: drop the tail
+                if slot.req.eos_id is not None and int(t) == slot.req.eos_id:
+                    slot.req.finish_reason = "eos"
+                    done = True  # eos mid-window: drop the tail
+                    break
+                if slot.remaining <= 0:
+                    slot.req.finish_reason = "length"
+                    done = True  # budget mid-window: drop the tail
                     break
             # Acceptance is booked over the drafts that could possibly commit
             # — window tails past a lane's budget measure nothing.
@@ -561,15 +864,28 @@ class ServingEngine:
         self._admit()
         if not any(s.req for s in self.slots):
             return False
-        if self._spec is not None:
+        # Speculation requires every active lane greedy (the draft/verify
+        # accept rule is an argmax-chain comparison); rounds with a sampled
+        # lane fall back to plain decode — greedy lanes still emit their
+        # exact argmax tokens (the spec output-identity contract), sampled
+        # lanes get the ordinary sampled step. Spec rounds resume once the
+        # sampled lanes retire.
+        if self._spec is not None and not self._active_sampled():
             return self._spec_step()
         n_active = sum(1 for s in self.slots if s.req)
         traces0 = self.decode_traces
         t0 = time.perf_counter()
-        nxt, self.caches = self._decode(self.params, self.caches, self.tokens)
+        # Static per-round flag: greedy-only rounds skip the sampling branch
+        # entirely (no sort/softmax over [B, V] per step). Both variants
+        # compile at most once, so mixed workloads cannot retrace-thrash.
+        nxt, self.caches = self._decode(
+            self.params, self.caches, self.tokens, self._samp_device(),
+            sampled=self._active_sampled(),
+        )
         self.steps += 1
         nxt_np = np.asarray(nxt)  # sync point: decode step fully retired
         elapsed = time.perf_counter() - t0
+        now = time.perf_counter()
         if self.decode_traces > traces0:
             self.decode_compile_s += elapsed
         else:
@@ -580,11 +896,14 @@ class ServingEngine:
                 continue
             tok = int(nxt_np[i, 0])
             slot.req.output.append(tok)
+            slot.req.t_tokens.append(now)
             self.decoded_tokens += 1
             slot.remaining -= 1
-            if slot.remaining <= 0 or (
-                slot.req.eos_id is not None and tok == slot.req.eos_id
-            ):
+            if slot.req.eos_id is not None and tok == slot.req.eos_id:
+                slot.req.finish_reason = "eos"
+                self._retire(i)
+            elif slot.remaining <= 0:
+                slot.req.finish_reason = "length"
                 self._retire(i)
         self.tokens = nxt
         return True
@@ -610,10 +929,12 @@ class ServingEngine:
             p0 = jax.tree.map(lambda a: a[0], self.params["layers"])["attn"]
 
             def impl(p, pool, table, pos, x):
-                with layers.serving_mode(self.matmul_mode):
+                with layers.serving_mode(
+                    self.matmul_mode, kernel=self.matmul_kernel
+                ):
                     y, _ = attn_mod.attention_decode(
                         p, x, pool, pos, self.cfg, table=table,
-                        paged_attn=self.paged_attn,
+                        attn_kernel=self.attn_kernel,
                     )
                 return y
 
@@ -631,92 +952,101 @@ class ServingEngine:
             best = min(best, time.perf_counter() - t0)
         return best * 1e3
 
-    def stats(self) -> Dict[str, float]:
+    def _attn_kernel_stat(self) -> str:
+        """The compiled decode-attention path, in KernelChoice vocabulary:
+        ``"pallas"`` only when the Mosaic kernel actually compiles (paged +
+        pallas choice + TPU backend — off TPU the dispatch lowers to the
+        gather-free XLA loop, reported as ``"xla"``); ``"gather"`` for the
+        legacy oracle path; unpaged engines report ``"xla"`` (dense
+        einsums)."""
+        if not self.paged or self.attn_kernel == "gather":
+            return self.attn_kernel if self.paged else "xla"
+        if self.attn_kernel == "pallas" and jax.default_backend() != "tpu":
+            return "xla"
+        return self.attn_kernel
+
+    def engine_stats(self) -> EngineStats:
+        """The typed v5 stats record (``stats()`` is its flat dict view)."""
+        finished = [r for r in self.done if r.finish_reason != "cancelled"]
         lat = [
-            r.t_done - r.t_submit for r in self.done if r.t_done and r.t_submit
+            r.t_done - r.t_submit for r in finished if r.t_done and r.t_submit
         ]
         ttft = [
             r.t_first_token - r.t_submit
             for r in self.done
             if r.t_first_token and r.t_submit
         ]
-        out = {
-            "completed": len(self.done),
-            "decode_steps": self.steps,
-            "decoded_tokens": self.decoded_tokens,
-            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
-            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
-            "prefill_tokens": self.prefill_tokens,
-            "prefill_time_s": self.prefill_time_s,
-            "prefill_compile_s": self.prefill_compile_s,
+        # Inter-token latencies from the per-token event stamps — the same
+        # numbers a generate() client observes between TokenEvents.
+        itl: List[float] = []
+        for r in self.done:
+            itl.extend(
+                b - a for a, b in zip(r.t_tokens[:-1], r.t_tokens[1:])
+            )
+        alloc = self.allocator
+        s = EngineStats(
+            completed=len(finished),
+            cancelled=len(self.done) - len(finished),
+            decode_steps=self.steps,
+            decoded_tokens=self.decoded_tokens,
+            mean_latency_s=float(np.mean(lat)) if lat else 0.0,
+            mean_ttft_s=float(np.mean(ttft)) if ttft else 0.0,
+            ttft_p50_s=_percentile(ttft, 50),
+            ttft_p95_s=_percentile(ttft, 95),
+            itl_p50_s=_percentile(itl, 50),
+            itl_p95_s=_percentile(itl, 95),
+            prefill_tokens=self.prefill_tokens,
+            prefill_time_s=self.prefill_time_s,
+            prefill_compile_s=self.prefill_compile_s,
             # Warm-only throughput: compile calls are excluded so the number
             # tracks kernels across PRs, not jit noise. 0.0 when every call
             # hit a fresh bucket (e.g. a single-request run).
-            "prefill_tok_per_s": (
+            prefill_tok_per_s=(
                 self.prefill_tokens_warm / self.prefill_time_s
                 if self.prefill_time_s > 0
                 else 0.0
             ),
-            "decode_time_s": self.decode_time_s,
-            "decode_compile_s": self.decode_compile_s,
-            "decode_tok_per_s": (
+            decode_time_s=self.decode_time_s,
+            decode_compile_s=self.decode_compile_s,
+            decode_tok_per_s=(
                 self.decode_tokens_warm / self.decode_time_s
                 if self.decode_time_s > 0
                 else 0.0
             ),
-            "prefill_calls": self.prefill_calls,
-            "prefill_requests": self.prefill_requests,
-            "prefill_calls_per_request": (
+            prefill_calls=self.prefill_calls,
+            prefill_requests=self.prefill_requests,
+            prefill_calls_per_request=(
                 self.prefill_calls / self.prefill_requests
                 if self.prefill_requests
                 else 0.0
             ),
-            "prefill_traces": self.prefill_traces,
-            "decode_traces": self.decode_traces,
-        }
-        # Page-pool accounting (zeros when unpaged, keeping the schema flat).
-        alloc = self.allocator
-        out.update(
-            {
-                "kv_page_size": float(self.page_size) if self.paged else 0.0,
-                "kv_pages_capacity": float(alloc.capacity) if alloc else 0.0,
-                "kv_pages_in_use": float(alloc.in_use()) if alloc else 0.0,
-                "kv_pages_cached": float(alloc.cached_pages()) if alloc else 0.0,
-                "kv_pages_peak": float(alloc.peak_in_use) if alloc else 0.0,
-                "kv_pool_occupancy": (
-                    alloc.in_use() / alloc.capacity if alloc else 0.0
-                ),
-                "kv_pool_peak_occupancy": (
-                    alloc.peak_in_use / alloc.capacity if alloc else 0.0
-                ),
-                "prefix_hit_rate": alloc.hit_rate() if alloc else 0.0,
-                "prefix_hit_pages": float(alloc.prefix_hit_pages) if alloc else 0.0,
-            }
+            prefill_traces=self.prefill_traces,
+            decode_traces=self.decode_traces,
+            # Page-pool accounting (zeros when unpaged, keeping the schema flat).
+            kv_page_size=float(self.page_size) if self.paged else 0.0,
+            kv_pages_capacity=float(alloc.capacity) if alloc else 0.0,
+            kv_pages_in_use=float(alloc.in_use()) if alloc else 0.0,
+            kv_pages_cached=float(alloc.cached_pages()) if alloc else 0.0,
+            kv_pages_peak=float(alloc.peak_in_use) if alloc else 0.0,
+            kv_pool_occupancy=(
+                alloc.in_use() / alloc.capacity if alloc else 0.0
+            ),
+            kv_pool_peak_occupancy=(
+                alloc.peak_in_use / alloc.capacity if alloc else 0.0
+            ),
+            prefix_hit_rate=alloc.hit_rate() if alloc else 0.0,
+            prefix_hit_pages=float(alloc.prefix_hit_pages) if alloc else 0.0,
+            attn_kernel=self._attn_kernel_stat(),
+            matmul_kernel=self.matmul_kernel,
+            matmul_mode=self.matmul_mode,
+            attn_step_ms=self._attn_step_ms(),
+            spec_enabled=1.0 if self._spec is not None else 0.0,
         )
-        # Decode-attention path accounting: which kernel serves the paged
-        # attention ("pallas" only when the Mosaic kernel actually compiles —
-        # paged + knob + TPU backend; the gather-free XLA loop and the legacy
-        # gather path both report "xla"), plus the probed per-step attention
-        # time (0.0 unless the engine was built with attn_probe=True).
-        out["attn_kernel"] = (
-            "pallas"
-            if self.paged_attn and jax.default_backend() == "tpu"
-            else "xla"
-        )
-        out["attn_step_ms"] = self._attn_step_ms()
-        # Speculative-decoding accounting (zeros when speculation is off,
-        # keeping the schema flat).
-        spec_zero = {
-            "spec_rounds": 0.0,
-            "spec_k": 0.0,
-            "spec_proposed": 0.0,
-            "spec_accepted": 0.0,
-            "spec_acceptance_rate": 0.0,
-            "spec_tokens_per_target_step": 0.0,
-            "spec_draft_time_s": 0.0,
-            "spec_verify_time_s": 0.0,
-            "spec_compile_s": 0.0,
-        }
-        out["spec_enabled"] = 1.0 if self._spec is not None else 0.0
-        out.update(self._spec.stats() if self._spec is not None else spec_zero)
-        return out
+        if self._spec is not None:
+            for k, v in self._spec.stats().items():
+                setattr(s, k, v)
+        return s
+
+    def stats(self) -> Dict:
+        """The flat dict view of :meth:`engine_stats` (stats schema v5)."""
+        return self.engine_stats().as_dict()

@@ -1,0 +1,92 @@
+"""Jit-foldable per-lane token sampling (temperature / top-k / top-p).
+
+One pure function, traced *inside* the engine's jitted decode and prefill
+steps (never a separate dispatch): ``[B, V]`` logits plus per-lane sampling
+parameter vectors in, ``[B]`` next tokens out.
+
+Determinism contract (what the tests pin down):
+
+* lanes with ``temperature == 0`` take the exact greedy argmax — bit-equal
+  to the pre-sampling engine, which is what the spec-decode output-identity
+  and paged bit-exactness contracts are stated over;
+* a sampled lane's PRNG key is ``fold_in(PRNGKey(seed), position)`` where
+  ``position`` is the cache position of the token being consumed — a pure
+  function of the *request* (seed, tokens generated so far), never of the
+  lane index, batch composition, or engine paging mode. Fixed-seed sampling
+  is therefore bit-reproducible across runs and identical between paged and
+  unpaged engines (float pages reconstruct bit-exact logits);
+* ``temperature -> 0`` converges to greedy: the scaled logit gap dwarfs the
+  Gumbel noise long before underflow, so tiny temperatures reproduce argmax
+  exactly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["params_to_arrays", "sample_tokens", "greedy_sampling_arrays"]
+
+
+def params_to_arrays(params: Sequence) -> Dict[str, jnp.ndarray]:
+    """Per-lane ``SamplingParams`` -> the device-array schema
+    :func:`sample_tokens` consumes. The ONE place the array layout lives:
+    adding a sampling field means extending this dict and
+    :func:`sample_tokens`, nothing else."""
+    return {
+        "temperature": jnp.asarray(
+            [p.temperature for p in params], jnp.float32
+        ),
+        "top_k": jnp.asarray([p.top_k for p in params], jnp.int32),
+        "top_p": jnp.asarray([p.top_p for p in params], jnp.float32),
+        "seed": jnp.asarray(
+            [p.seed & 0xFFFFFFFF for p in params], jnp.uint32
+        ),
+    }
+
+
+def greedy_sampling_arrays(batch: int) -> Dict[str, jnp.ndarray]:
+    """The all-greedy per-lane parameter vectors (the engine's idle state)."""
+    from .config import SamplingParams
+
+    return params_to_arrays([SamplingParams()] * batch)
+
+
+def sample_tokens(
+    logits: jnp.ndarray, samp: Dict[str, jnp.ndarray], pos: jnp.ndarray
+) -> jnp.ndarray:
+    """logits ``[B, V]``, per-lane params, positions ``[B]`` -> tokens ``[B]``.
+
+    ``samp``: ``temperature``/``top_p`` f32 ``[B]``, ``top_k`` i32 ``[B]``
+    (0 = off), ``seed`` u32 ``[B]``. Greedy lanes (``temperature == 0``)
+    bypass the sampled branch through a ``where`` on the exact argmax.
+    """
+    logits = logits.astype(jnp.float32)
+    b, v = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    temp = samp["temperature"]
+    scaled = logits / jnp.maximum(temp, 1e-6)[:, None]
+    # Sort once (descending); both restrictions become thresholds on it.
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]
+    # top-k: keep logits >= the k-th largest (ties widen the set — a
+    # deterministic, order-independent rule).
+    k_eff = jnp.where(samp["top_k"] > 0, jnp.minimum(samp["top_k"], v), v)
+    kth = jnp.take_along_axis(srt, (k_eff - 1)[:, None], axis=-1)  # [B, 1]
+    # top-p (nucleus): smallest prefix of the sorted distribution with
+    # cumulative probability >= top_p; `cum - p < top_p` always keeps the
+    # top token, so the masked distribution can never be empty.
+    probs = jax.nn.softmax(srt, axis=-1)
+    keep = (jnp.cumsum(probs, axis=-1) - probs) < samp["top_p"][:, None]
+    p_thresh = jnp.min(
+        jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True
+    )
+    masked = jnp.where(
+        (scaled >= kth) & (scaled >= p_thresh), scaled, -jnp.inf
+    )
+    keys = jax.vmap(
+        lambda s, p: jax.random.fold_in(jax.random.PRNGKey(s), p)
+    )(samp["seed"], pos.astype(jnp.uint32))
+    sampled = jax.vmap(jax.random.categorical)(keys, masked).astype(jnp.int32)
+    return jnp.where(temp > 0.0, sampled, greedy)

@@ -144,7 +144,7 @@ class SpecDecoder:
     """
 
     def __init__(self, cfg: ModelConfig, spec: SpecConfig, matmul_mode: str,
-                 paged_attn: bool = False):
+                 *, matmul_kernel: str = "xla", attn_kernel: str = "gather"):
         if cfg.block not in ("dense", "moe"):
             raise ValueError(
                 f"speculative decoding: dense/moe archs only, got {cfg.block} "
@@ -165,25 +165,26 @@ class SpecDecoder:
         self.draft_traces = 0
         self.verify_traces = 0
 
-        # Draft and verify trace the same paged-attention path as the
-        # engine's plain decode (``paged_attn``): the exactness contract
+        # Draft and verify trace the same kernel selection as the engine's
+        # plain decode (``attn_kernel`` / ``matmul_kernel`` from the
+        # resolved ``EngineConfig.kernels``): the exactness contract
         # compares verify logits against that path's own decode steps, so
         # the two must go through one attention implementation.
         def draft_impl(params, caches, token):
             self.draft_traces += 1  # python side effect: bumps only tracing
-            with layers.serving_mode(spec.draft_mode):
+            with layers.serving_mode(spec.draft_mode, kernel=matmul_kernel):
                 logits, new_caches = T.decode_step(
                     params, token, caches, cfg, layers_limit=spec.draft_layers,
-                    paged_attn=paged_attn,
+                    attn_kernel=attn_kernel,
                 )
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             return nxt, new_caches
 
         def verify_impl(params, caches, tokens):
             self.verify_traces += 1
-            with layers.serving_mode(matmul_mode):
+            with layers.serving_mode(matmul_mode, kernel=matmul_kernel):
                 logits, new_caches = T.verify_step(
-                    params, tokens, caches, cfg, paged_attn=paged_attn
+                    params, tokens, caches, cfg, attn_kernel=attn_kernel
                 )
             greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, Q]
             return greedy, new_caches

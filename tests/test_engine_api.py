@@ -1,0 +1,372 @@
+"""Unified serving API (ISSUE 5): EngineConfig + request lifecycle.
+
+The contracts under test:
+
+* **one config surface** — ``EngineConfig`` validates and hashes; the
+  auto-generated CLI round-trips every field (the drift guard);
+* **legacy compat** — PR-4 style ``ServingEngine`` kwargs keep working one
+  release behind a ``DeprecationWarning`` and produce engines identical to
+  their ``EngineConfig`` equivalents;
+* **no module-global leakage** — the ``USE_PALLAS_*`` shims seed
+  ``KernelChoice.AUTO`` at construction only; two co-resident engines with
+  different ``EngineConfig.kernels`` dispatch independently (the regression
+  for the old flip-a-global-and-bleed hazard);
+* **streaming lifecycle** — ``generate()`` yields first tokens before the
+  batch completes; ``cancel()`` works from queue and mid-decode;
+* **typed stats** — ``engine_stats()`` returns the frozen-v5 ``EngineStats``
+  whose dict view is ``stats()``.
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import smoke_config
+from repro.models import attention as attn_mod
+from repro.models import layers
+from repro.models import transformer as T
+from repro.serving import (
+    EngineConfig,
+    EngineStats,
+    KernelChoice,
+    KernelConfig,
+    Request,
+    SamplingParams,
+    ServingEngine,
+    SpecConfig,
+    TokenEvent,
+    add_engine_config_args,
+    engine_config_from_args,
+)
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config("glm4-9b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mk_requests(rng, vocab, lengths, max_new=4):
+    return [
+        Request(uid=i, prompt=rng.integers(0, vocab, n).tolist(),
+                max_new_tokens=max_new)
+        for i, n in enumerate(lengths)
+    ]
+
+
+def _outputs(eng):
+    return {r.uid: r.output for r in eng.done}
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig / KernelChoice validation
+
+
+def test_engine_config_validates():
+    with pytest.raises(ValueError):
+        EngineConfig(matmul_mode="int4")
+    with pytest.raises(ValueError):
+        EngineConfig(page_size=12)  # not a power of two
+    with pytest.raises(ValueError):
+        EngineConfig(n_pages=1)  # page 0 is the trash page
+    with pytest.raises(ValueError):
+        EngineConfig(max_batch=0)
+    with pytest.raises(ValueError):
+        KernelConfig(matmul="gather")  # attention-only choice
+    with pytest.raises(ValueError):
+        KernelConfig(attn="mosaic")  # not in the vocabulary
+
+
+def test_engine_config_hashable_and_replace():
+    a = EngineConfig(max_batch=2, kernels=KernelConfig(attn="pallas"),
+                     spec=SpecConfig(k=3))
+    b = EngineConfig(max_batch=2, kernels=KernelConfig(attn="pallas"),
+                     spec=SpecConfig(k=3))
+    assert a == b and hash(a) == hash(b)
+    assert {a: 1}[b] == 1  # usable as a jit-cache / bench-record key
+    c = a.replace(max_batch=4)
+    assert c.max_batch == 4 and a.max_batch == 2
+
+
+def test_kernel_choice_coerce():
+    assert KernelChoice.coerce("PALLAS") is KernelChoice.PALLAS
+    assert KernelChoice.coerce(KernelChoice.XLA) is KernelChoice.XLA
+    assert KernelConfig(attn="gather").attn is KernelChoice.GATHER
+    # EngineConfig coerces dict/tuple kernels; anything else is a TypeError.
+    assert EngineConfig(kernels={"matmul": "pallas", "attn": "xla"}).kernels \
+        == KernelConfig(matmul="pallas", attn="xla")
+    assert EngineConfig(kernels=("pallas", "xla")).kernels \
+        == KernelConfig(matmul="pallas", attn="xla")
+    with pytest.raises(TypeError):
+        EngineConfig(kernels="pallas")
+
+
+def test_sampling_params_validate():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+# ---------------------------------------------------------------------------
+# Legacy kwargs: one release behind a DeprecationWarning
+
+
+def test_legacy_kwargs_warn_and_match_config(dense_setup):
+    cfg, params = dense_setup
+    rng = np.random.default_rng(0)
+    prompts = [r.prompt for r in _mk_requests(rng, cfg.vocab, [5, 9])]
+
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        legacy = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                               matmul_mode="dequant", n_pages=9)
+    assert legacy.config == EngineConfig(max_batch=2, max_len=64, n_pages=9)
+    modern = ServingEngine(
+        cfg, params, EngineConfig(max_batch=2, max_len=64, n_pages=9)
+    )
+    for eng in (legacy, modern):
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=4))
+        eng.run()
+    assert _outputs(legacy) == _outputs(modern)
+
+
+def test_legacy_spec_k_and_paged_attn_kwargs(dense_setup):
+    cfg, params = dense_setup
+    with pytest.warns(DeprecationWarning):
+        eng = ServingEngine(cfg, params, max_batch=1, max_len=32, spec_k=2,
+                            use_pallas_paged_attn=True)
+    assert eng.config.spec == SpecConfig(k=2)
+    assert eng.config.kernels.attn is KernelChoice.PALLAS
+    assert eng.attn_kernel == "pallas"
+    with pytest.warns(DeprecationWarning):
+        eng2 = ServingEngine(cfg, params, max_batch=1, max_len=32,
+                             use_pallas_paged_attn=False)
+    assert eng2.attn_kernel == "gather"  # legacy False -> the gather oracle
+
+
+def test_new_api_emits_no_deprecation_warning(dense_setup):
+    """The canonical path must stay silent — the CI `-W error` job depends
+    on it (internal code may never touch the deprecated surfaces)."""
+    import warnings
+
+    cfg, params = dense_setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=32))
+        eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+        eng.run()
+        eng.stats()
+
+
+# ---------------------------------------------------------------------------
+# Kernel-flag leakage: config threading replaces the module globals
+
+
+def test_module_flag_seeds_matmul_auto(dense_setup):
+    cfg, params = dense_setup
+    old = layers.USE_PALLAS_SERVING
+    layers.USE_PALLAS_SERVING = True
+    try:
+        eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=32))
+    finally:
+        layers.USE_PALLAS_SERVING = old
+    assert eng.matmul_kernel == "pallas"  # seeded at construction...
+    eng2 = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=32))
+    assert eng2.matmul_kernel == "xla"  # ...and only at construction
+
+
+def test_coresident_engines_dispatch_independently(dense_setup):
+    """The PR-4 hazard: flipping USE_PALLAS_* bled into every engine traced
+    afterwards. With per-engine threading, two co-resident engines with
+    different kernel configs interleave steps without affecting each other —
+    both emit exactly their solo-run tokens."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in [5, 8]]
+
+    def fresh(attn):
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(max_batch=2, max_len=64,
+                         kernels=KernelConfig(attn=attn)),
+        )
+        for i, p in enumerate(prompts):
+            eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=5))
+        return eng
+
+    solo_gather = fresh("gather")
+    solo_gather.run()
+    solo_pallas = fresh("pallas")
+    solo_pallas.run()
+
+    a, b = fresh("gather"), fresh("pallas")
+    assert a.attn_kernel == "gather" and b.attn_kernel == "pallas"
+    while a.step() | b.step() or a.queue or b.queue:  # interleave lockstep
+        pass
+    assert _outputs(a) == _outputs(solo_gather)
+    assert _outputs(b) == _outputs(solo_pallas)
+    # Resolved selections stayed captured per engine.
+    assert a.attn_kernel == "gather" and b.attn_kernel == "pallas"
+    assert a.stats()["attn_kernel"] == "gather"
+
+
+# ---------------------------------------------------------------------------
+# CLI generation: the drift guard
+
+
+def test_cli_roundtrip_defaults():
+    ap = argparse.ArgumentParser()
+    add_engine_config_args(ap)
+    assert engine_config_from_args(ap.parse_args([])) == EngineConfig()
+
+
+def test_cli_roundtrip_explicit():
+    ap = argparse.ArgumentParser()
+    add_engine_config_args(ap)
+    args = ap.parse_args([
+        "--max-batch", "2", "--max-len", "64", "--matmul-mode", "w8a8",
+        "--paged", "off", "--page-size", "8", "--n-pages", "17",
+        "--matmul-kernel", "pallas", "--attn-kernel", "gather",
+        "--spec-k", "3", "--draft-layers", "2", "--attn-probe",
+    ])
+    assert engine_config_from_args(args) == EngineConfig(
+        max_batch=2, max_len=64, matmul_mode="w8a8", paged=False, page_size=8,
+        n_pages=17, kernels=KernelConfig(matmul="pallas", attn="gather"),
+        spec=SpecConfig(k=3, draft_layers=2), attn_probe=True,
+    )
+
+
+def test_cli_covers_every_engine_config_field():
+    """Every EngineConfig field must surface in the generated CLI — adding a
+    field without CLI coverage is exactly the drift this API cut removes."""
+    ap = argparse.ArgumentParser()
+    add_engine_config_args(ap)
+    flags = {a.dest for a in ap._actions}
+    for f in dataclasses.fields(EngineConfig):
+        if f.metadata.get("kernels"):
+            assert {"matmul_kernel", "attn_kernel"} <= flags
+        elif f.metadata.get("spec"):
+            assert {"spec_k", "draft_layers"} <= flags
+        else:
+            assert f.name in flags, f.name
+
+
+def test_cli_skip_fields_fall_back_to_defaults():
+    """A tool may skip fields it manages itself (the serving bench skips
+    spec/attn_probe): no flag is generated — a user passing one gets a loud
+    argparse error, never a silently discarded value — and from_args falls
+    back to the EngineConfig defaults / explicit overrides."""
+    ap = argparse.ArgumentParser()
+    add_engine_config_args(ap, skip=("spec", "attn_probe"))
+    flags = {a.dest for a in ap._actions}
+    assert "spec_k" not in flags and "attn_probe" not in flags
+    args = ap.parse_args(["--max-batch", "2"])
+    cfg = engine_config_from_args(args, attn_probe=True)
+    assert cfg.spec is None and cfg.attn_probe and cfg.max_batch == 2
+    with pytest.raises(SystemExit):  # skipped flag errors instead of no-op
+        ap.parse_args(["--spec-k", "3"])
+
+
+def test_serve_launcher_parser_builds():
+    from repro.launch import serve as serve_launcher
+
+    args = serve_launcher.build_parser().parse_args(["--smoke"])
+    assert args.max_batch == 4 and args.max_len == 128  # launcher defaults
+    assert engine_config_from_args(args).max_batch == 4
+
+
+# ---------------------------------------------------------------------------
+# Streaming lifecycle
+
+
+def test_generate_streams_before_batch_completion(dense_setup):
+    cfg, params = dense_setup
+    rng = np.random.default_rng(5)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=3, max_len=64))
+    # Background traffic with a *bigger* budget than the streamed request.
+    for i in range(2):
+        eng.submit(Request(uid=100 + i,
+                           prompt=rng.integers(0, cfg.vocab, 6).tolist(),
+                           max_new_tokens=12))
+    events = []
+    for ev in eng.generate(rng.integers(0, cfg.vocab, 5).tolist(),
+                           max_new_tokens=4):
+        assert isinstance(ev, TokenEvent)
+        if ev.index == 0:
+            # First token arrived while the background batch is mid-flight.
+            assert any(s.req is not None for s in eng.slots)
+        events.append(ev)
+    assert [e.index for e in events] == [0, 1, 2, 3]
+    assert events[-1].finished and events[-1].finish_reason == "length"
+    assert all(not e.finished for e in events[:-1])
+    # Timestamps are the engine's own booking: monotone, and matching the
+    # request record the stats derive TTFT/ITL from.
+    ts = [e.t for e in events]
+    assert ts == sorted(ts)
+    done = eng.run()
+    assert len(done) == 3  # background requests still completed
+
+
+def test_generate_eos_finish_reason(dense_setup):
+    cfg, params = dense_setup
+    prompt = [3, 1, 4, 1, 5]
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
+    ref = list(eng.generate(list(prompt), max_new_tokens=6))
+    eos = ref[2].token  # force eos at (the latest) the third generated token
+    eng2 = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
+    evs = list(eng2.generate(list(prompt), max_new_tokens=6, eos_id=eos))
+    n = len(evs)  # eos may match an earlier ref token too
+    assert [e.token for e in evs] == [e.token for e in ref[:n]]
+    assert evs[-1].token == eos
+    assert evs[-1].finished and evs[-1].finish_reason == "eos"
+
+
+def test_cancel_queued_request(dense_setup):
+    cfg, params = dense_setup
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
+    r0 = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    r1 = Request(uid=1, prompt=[4, 5, 6], max_new_tokens=4)
+    eng.submit(r0)
+    eng.submit(r1)
+    assert eng.cancel(1)  # still queued: removed before taking a lane
+    assert not eng.cancel(42)  # unknown uid
+    done = eng.run()
+    assert {r.uid for r in done} == {0, 1}
+    assert r1.finish_reason == "cancelled" and r1.output == []
+    s = eng.stats()
+    assert s["completed"] == 1 and s["cancelled"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Typed stats
+
+
+def test_engine_stats_typed_and_dict_view(dense_setup):
+    cfg, params = dense_setup
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=32))
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    eng.submit(Request(uid=1, prompt=[4, 5, 6], max_new_tokens=4))
+    eng.run()
+    st = eng.engine_stats()
+    assert isinstance(st, EngineStats)
+    s = eng.stats()
+    assert set(s) == {f.name for f in dataclasses.fields(EngineStats)}
+    # v5 additions: latency percentiles from the event stream + kernel ids.
+    assert s["ttft_p50_s"] > 0 and s["ttft_p95_s"] >= s["ttft_p50_s"]
+    assert s["itl_p50_s"] > 0 and s["itl_p95_s"] >= s["itl_p50_s"]
+    assert s["attn_kernel"] in [c.value for c in KernelChoice]
+    assert s["matmul_kernel"] in ("pallas", "xla")
+    assert s["matmul_mode"] == "dequant" and s["cancelled"] == 0
+    # Per-request timing: one stamp per token, TTFT is the first of them.
+    for r in eng.done:
+        assert len(r.t_tokens) == len(r.output)
+        assert r.t_first_token == r.t_tokens[0]

@@ -102,7 +102,8 @@ def test_ops_fused_dispatch_cpu_ref():
 
 
 def test_dense_w8a8_fused_wiring():
-    """dense(mode='w8a8') under USE_PALLAS_SERVING == the XLA dynamic chain."""
+    """dense(mode='w8a8', kernel='pallas') == the XLA dynamic chain (the
+    explicit kernel argument replaced the USE_PALLAS_SERVING global)."""
     from repro.models import layers
 
     rng = np.random.RandomState(5)
@@ -111,11 +112,8 @@ def test_dense_w8a8_fused_wiring():
     lin = make_ocs_quant_linear(w, 0.03, 8, per_channel=True, pad_to=32)
     x = jnp.asarray(rng.randn(4, 96), jnp.float32)
     y_xla = layers.dense(lin, x, mode="w8a8")
-    layers.USE_PALLAS_SERVING = True
-    try:
-        y_fused = layers.dense(lin, x, mode="w8a8")
-    finally:
-        layers.USE_PALLAS_SERVING = False
+    with layers.serving_mode("w8a8", kernel="pallas"):
+        y_fused = layers.dense(lin, x)
     np.testing.assert_allclose(
         np.asarray(y_xla), np.asarray(y_fused), rtol=1e-5, atol=1e-5
     )

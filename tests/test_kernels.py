@@ -194,7 +194,9 @@ def test_ocs_matmul_property(m, k, n, s):
 
 
 def test_dense_pallas_serving_wiring():
-    """layers.dense with USE_PALLAS_SERVING matches the XLA dequant path."""
+    """layers.dense with kernel="pallas" matches the XLA dequant path — via
+    the explicit argument and via the serving_mode(kernel=) ambient, which
+    replaced dispatch-time reads of the USE_PALLAS_SERVING module global."""
     from repro.core.ocs import make_ocs_quant_linear
     from repro.models import layers
 
@@ -204,12 +206,11 @@ def test_dense_pallas_serving_wiring():
     lin = make_ocs_quant_linear(w, 0.03, 8, pad_to=32)
     x = jnp.asarray(rng.randn(4, 96), jnp.float32)
     y_xla = layers.dense(lin, x)
-    layers.USE_PALLAS_SERVING = True
-    try:
-        y_kernel = layers.dense(lin, x)
-    finally:
-        layers.USE_PALLAS_SERVING = False
+    y_kernel = layers.dense(lin, x, kernel="pallas")
+    with layers.serving_mode("dequant", kernel="pallas"):
+        y_ambient = layers.dense(lin, x)
     np.testing.assert_allclose(y_xla, y_kernel, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(y_kernel), np.asarray(y_ambient))
 
 
 def test_ops_dispatch_cpu_ref():

@@ -13,9 +13,11 @@ The contracts under test:
 * **trash-page invariant** — page 0 poisoned with NaN changes no active
   lane's output, for the legacy gather path (the new `gather_pages` mask),
   the XLA fallback, and the interpreted kernel;
-* **engine integration** — `USE_PALLAS_PAGED_ATTN` / the engine knob
-  produce token-identical greedy output, spec-decode output identity holds
-  with the kernel enabled, and `stats()` reports the attention path.
+* **engine integration** — `EngineConfig.kernels.attn` selections produce
+  token-identical greedy output, spec-decode output identity holds with the
+  kernel enabled, `stats()` reports the attention path in the shared
+  `KernelChoice` vocabulary, and the deprecated `USE_PALLAS_PAGED_ATTN`
+  module flag seeds the `auto` default at engine construction only.
 """
 import dataclasses
 
@@ -30,7 +32,8 @@ from repro.kernels import ops
 from repro.kernels import paged_attention as pa
 from repro.models import attention as attn_mod
 from repro.models import transformer as T
-from repro.serving import Request, ServingEngine
+from repro.serving import (EngineConfig, KernelConfig, Request,
+                           ServingEngine, SpecConfig)
 from repro.serving import kv_cache as kvc
 
 
@@ -261,9 +264,14 @@ def dense_setup():
     return cfg, params
 
 
-def _run_engine(cfg, params, *, seed=0, max_new=6, **kw):
+def _run_engine(cfg, params, *, seed=0, max_new=6, attn="gather", spec_k=0,
+                attn_probe=False):
     rng = np.random.default_rng(seed)
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, **kw)
+    ecfg = EngineConfig(
+        max_batch=2, max_len=64, kernels=KernelConfig(attn=attn),
+        spec=SpecConfig(k=spec_k) if spec_k else None, attn_probe=attn_probe,
+    )
+    eng = ServingEngine(cfg, params, ecfg)
     for i, n in enumerate([5, 11, 3, 17]):
         eng.submit(Request(uid=i, prompt=rng.integers(0, cfg.vocab, n).tolist(),
                            max_new_tokens=max_new))
@@ -273,10 +281,10 @@ def _run_engine(cfg, params, *, seed=0, max_new=6, **kw):
 
 def test_engine_outputs_identical_with_kernel_enabled(dense_setup):
     cfg, params = dense_setup
-    _, base = _run_engine(cfg, params, use_pallas_paged_attn=False)
-    eng, fused = _run_engine(cfg, params, use_pallas_paged_attn=True)
+    _, base = _run_engine(cfg, params, attn="gather")
+    eng, fused = _run_engine(cfg, params, attn="pallas")
     assert fused == base
-    assert eng.paged_attn is True
+    assert eng.paged_attn is True  # legacy view of the kernel selection
 
 
 @pytest.mark.parametrize("kv_bits", [None, 8])
@@ -285,34 +293,39 @@ def test_spec_decode_output_identity_with_kernel_enabled(kv_bits):
     attention kernel path enabled: spec == plain, both through the kernel."""
     cfg = dataclasses.replace(smoke_config("deepseek-7b"), kv_bits=kv_bits)
     params = T.init_params(cfg, jax.random.PRNGKey(1))
-    _, plain = _run_engine(cfg, params, use_pallas_paged_attn=True)
-    eng, spec = _run_engine(cfg, params, use_pallas_paged_attn=True, spec_k=3)
+    _, plain = _run_engine(cfg, params, attn="pallas")
+    eng, spec = _run_engine(cfg, params, attn="pallas", spec_k=3)
     assert spec == plain
     assert eng.stats()["spec_rounds"] > 0
 
 
-def test_module_flag_drives_engine_default(dense_setup):
+def test_module_flag_seeds_engine_config_default(dense_setup):
+    """The deprecated USE_PALLAS_PAGED_ATTN shim seeds KernelChoice.AUTO at
+    engine construction — and ONLY there: an engine built while the flag was
+    set keeps its resolved kernel after the flag is restored."""
     cfg, params = dense_setup
     old = attn_mod.USE_PALLAS_PAGED_ATTN
     attn_mod.USE_PALLAS_PAGED_ATTN = True
     try:
-        eng = ServingEngine(cfg, params, max_batch=1, max_len=32)
-        assert eng.paged_attn is True
+        eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=32))
+        assert eng.attn_kernel == "pallas" and eng.paged_attn is True
     finally:
         attn_mod.USE_PALLAS_PAGED_ATTN = old
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=32)
-    assert eng.paged_attn is False  # flag restored -> default off
+    # Construction-time seeding only: the engine keeps "pallas" ...
+    assert eng.attn_kernel == "pallas"
+    # ... and a fresh default engine resolves the restored flag to "gather".
+    eng2 = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=32))
+    assert eng2.attn_kernel == "gather" and eng2.paged_attn is False
 
 
 def test_stats_report_attention_path(dense_setup):
     cfg, params = dense_setup
-    eng, _ = _run_engine(cfg, params, use_pallas_paged_attn=True,
-                         attn_probe=True)
+    eng, _ = _run_engine(cfg, params, attn="pallas", attn_probe=True)
     s = eng.stats()
     assert s["attn_kernel"] in ("pallas", "xla")
     if jax.default_backend() != "tpu":
-        assert s["attn_kernel"] == "xla"
+        assert s["attn_kernel"] == "xla"  # kernel can't compile off-TPU
     assert s["attn_step_ms"] > 0.0  # probe enabled
     eng2, _ = _run_engine(cfg, params)
     assert eng2.stats()["attn_step_ms"] == 0.0  # probe off by default
-    assert "attn_kernel" in eng2.stats()
+    assert eng2.stats()["attn_kernel"] == "gather"  # KernelChoice vocabulary

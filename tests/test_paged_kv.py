@@ -16,7 +16,8 @@ import jax.numpy as jnp
 
 from repro.configs import smoke_config
 from repro.models import transformer as T
-from repro.serving import PageAllocator, Request, ServingEngine, pages_needed
+from repro.serving import (EngineConfig, PageAllocator, Request,
+                           ServingEngine, pages_needed)
 from repro.serving import kv_cache as kvc
 
 
@@ -133,7 +134,7 @@ def test_paged_engine_matches_unpaged(dense_setup):
     prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in [3, 11, 6, 21]]
 
     def run(paged):
-        eng = ServingEngine(cfg, params, max_batch=3, max_len=64, paged=paged)
+        eng = ServingEngine(cfg, params, EngineConfig(max_batch=3, max_len=64, paged=paged))
         for i, p in enumerate(prompts):
             eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=6))
         return {r.uid: r.output for r in eng.run()}
@@ -150,7 +151,7 @@ def test_paged_engine_matches_unpaged_moe():
     prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in [4, 13]]
 
     def run(paged):
-        eng = ServingEngine(cfg, params, max_batch=2, max_len=64, paged=paged)
+        eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=64, paged=paged))
         for i, p in enumerate(prompts):
             eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=4))
         return {r.uid: r.output for r in eng.run()}
@@ -169,7 +170,7 @@ def test_page_reclamation_across_retire_admit_cycles(dense_setup):
     cfg, params = dense_setup
     rng = np.random.default_rng(11)
     # capacity 8 pages = 128 cache tokens, far below max_batch * max_len
-    eng = ServingEngine(cfg, params, max_batch=4, max_len=64, n_pages=9)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=4, max_len=64, n_pages=9))
     lengths = [int(rng.integers(4, 30)) for _ in range(8)]
     reqs = _mk_requests(rng, cfg.vocab, lengths, max_new=6)
     for r in reqs:
@@ -192,7 +193,7 @@ def test_page_exhaustion_backpressure_queues(dense_setup):
     submit so it can never deadlock the queue."""
     cfg, params = dense_setup
     rng = np.random.default_rng(13)
-    eng = ServingEngine(cfg, params, max_batch=4, max_len=64, n_pages=4)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=4, max_len=64, n_pages=4))
     # each request needs 2 pages (17 + 5 tokens @ ps=16); pool holds 1 at once
     reqs = _mk_requests(rng, cfg.vocab, [17, 17, 17, 17], max_new=5)
     for r in reqs:
@@ -220,11 +221,11 @@ def test_shared_prefix_batched_matches_solo(dense_setup):
 
     solo = []
     for t in tails:
-        eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+        eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
         eng.submit(Request(uid=0, prompt=sys_prompt + t, max_new_tokens=5))
         solo.append(eng.run()[0].output)
 
-    eng = ServingEngine(cfg, params, max_batch=3, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=3, max_len=64))
     for i, t in enumerate(tails):
         eng.submit(Request(uid=i, prompt=sys_prompt + t, max_new_tokens=5))
     done = {r.uid: r.output for r in eng.run()}
@@ -243,7 +244,7 @@ def test_repeated_prompt_prefills_once(dense_setup):
     cfg, params = dense_setup
     rng = np.random.default_rng(9)
     prompt = rng.integers(0, cfg.vocab, 33).tolist()  # 2 full pages + 1 tail
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
     for i in range(3):
         eng.submit(Request(uid=i, prompt=list(prompt), max_new_tokens=4))
     done = {r.uid: r.output for r in eng.run()}
@@ -262,7 +263,7 @@ def test_prefix_pages_shared_not_copied(dense_setup):
     cfg, params = dense_setup
     rng = np.random.default_rng(21)
     prompt = rng.integers(0, cfg.vocab, 32).tolist()
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
     # long decode budgets keep both sequences live simultaneously
     for i in range(2):
         eng.submit(Request(uid=i, prompt=list(prompt), max_new_tokens=8))
@@ -286,11 +287,11 @@ def test_eos_on_first_token_retires_immediately(dense_setup, paged):
     cfg, params = dense_setup
     rng = np.random.default_rng(17)
     prompt = rng.integers(0, cfg.vocab, 9).tolist()
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=64, paged=paged)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64, paged=paged))
     eng.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=8))
     first = eng.run()[0].output[0]
 
-    eng2 = ServingEngine(cfg, params, max_batch=1, max_len=64, paged=paged)
+    eng2 = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64, paged=paged))
     eng2.submit(Request(uid=0, prompt=list(prompt), max_new_tokens=8, eos_id=first))
     done = eng2.run()
     s = eng2.stats()
@@ -302,7 +303,7 @@ def test_eos_on_first_token_retires_immediately(dense_setup, paged):
 
 def test_max_new_tokens_one(dense_setup):
     cfg, params = dense_setup
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
     eng.submit(Request(uid=0, prompt=[5, 6, 7], max_new_tokens=1))
     done = eng.run()
     assert len(done) == 1 and len(done[0].output) == 1

@@ -1,0 +1,328 @@
+"""Per-request sampling + cancellation (ISSUE 5).
+
+The contracts under test:
+
+* **greedy is untouched** — temperature 0 (and the top-k=1 / tiny-top-p /
+  tiny-temperature limits) reproduce the exact argmax stream, so every
+  PR-1..4 bit-exactness contract survives the sampling fold-in;
+* **determinism** — fixed-seed sampling is bit-reproducible across runs,
+  across batch compositions (a sampled request draws the same tokens solo
+  or batched), and identical between paged and unpaged engines (the PRNG
+  key is a function of (seed, position) only; float pages give bit-exact
+  logits);
+* **spec fallback** — lanes with non-greedy params fall back to plain
+  decode on speculative engines this PR; greedy-only workloads still
+  speculate;
+* **cancellation** — cancel mid-decode reclaims exactly the lane's pages:
+  allocator-state parity vs never having submitted the request, for paged
+  and unpaged engines, dense and MoE.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.serving import (
+    EngineConfig,
+    Request,
+    SamplingParams,
+    ServingEngine,
+    SpecConfig,
+)
+from repro.serving.sampling import greedy_sampling_arrays, sample_tokens
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = smoke_config("glm4-9b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve(cfg, params, reqs, **cfg_kw):
+    eng = ServingEngine(cfg, params, EngineConfig(**cfg_kw))
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    return eng, {r.uid: r.output for r in eng.done}
+
+
+def _reqs(rng, vocab, lengths, max_new=6, sampling=None, eos=None):
+    return [
+        Request(uid=i, prompt=rng.integers(0, vocab, n).tolist(),
+                max_new_tokens=max_new, eos_id=eos, sampling=sampling)
+        for i, n in enumerate(lengths)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# sample_tokens unit: the degenerate limits all reproduce argmax
+
+
+def _unit_case(b=4, v=64, seed=0):
+    rng = np.random.RandomState(seed)
+    logits = jnp.asarray(rng.randn(b, v) * 3, jnp.float32)
+    pos = jnp.asarray(rng.randint(1, 50, b), jnp.int32)
+    return logits, pos, np.argmax(np.asarray(logits), -1)
+
+
+def _samp(b, **kw):
+    s = greedy_sampling_arrays(b)
+    for k, val in kw.items():
+        s[k] = jnp.full_like(s[k], val)
+    return s
+
+
+def test_sample_tokens_degenerate_limits_equal_argmax():
+    logits, pos, argmax = _unit_case()
+    b = logits.shape[0]
+    # temperature == 0: the exact greedy branch.
+    np.testing.assert_array_equal(
+        np.asarray(sample_tokens(logits, _samp(b), pos)), argmax)
+    # top_k == 1: only the argmax survives the mask.
+    np.testing.assert_array_equal(
+        np.asarray(sample_tokens(
+            logits, _samp(b, temperature=1.0, top_k=1), pos)), argmax)
+    # top_p -> 0: the nucleus keeps only the top token.
+    np.testing.assert_array_equal(
+        np.asarray(sample_tokens(
+            logits, _samp(b, temperature=1.0, top_p=1e-9), pos)), argmax)
+    # temperature -> 0: the scaled gap dwarfs the Gumbel noise.
+    np.testing.assert_array_equal(
+        np.asarray(sample_tokens(
+            logits, _samp(b, temperature=1e-4), pos)), argmax)
+
+
+def test_sample_tokens_respects_top_k_support():
+    """Sampled tokens always come from the top-k set, across many keys."""
+    logits, pos, _ = _unit_case(b=3, v=32, seed=1)
+    top4 = np.argsort(np.asarray(logits), -1)[:, -4:]
+    for p0 in range(20):
+        toks = np.asarray(sample_tokens(
+            logits, _samp(3, temperature=2.0, top_k=4), pos + p0))
+        for b in range(3):
+            assert toks[b] in top4[b], (b, p0)
+
+
+def test_sample_tokens_mixed_lanes_keep_greedy_exact():
+    logits, pos, argmax = _unit_case(b=4)
+    s = greedy_sampling_arrays(4)
+    s["temperature"] = jnp.asarray([0.0, 1.5, 0.0, 0.7], jnp.float32)
+    s["seed"] = jnp.asarray([0, 9, 0, 9], jnp.uint32)
+    toks = np.asarray(sample_tokens(logits, s, pos))
+    assert toks[0] == argmax[0] and toks[2] == argmax[2]
+
+
+# ---------------------------------------------------------------------------
+# Engine level: reproducibility and paged/unpaged identity
+
+
+@pytest.mark.parametrize("matmul_mode", ["dequant", "w8a8"])
+def test_fixed_seed_bit_reproducible_and_paged_matches_unpaged(
+    dense_setup, matmul_mode
+):
+    cfg, params = dense_setup
+    sp = SamplingParams(temperature=0.9, top_k=50, top_p=0.95, seed=123)
+
+    def run(paged):
+        rng = np.random.default_rng(11)
+        _, out = _serve(cfg, params, _reqs(rng, cfg.vocab, [5, 11, 3], 6, sp),
+                        max_batch=2, max_len=64, paged=paged,
+                        matmul_mode=matmul_mode)
+        return out
+
+    a, b = run(True), run(True)
+    assert a == b, "fixed-seed sampling must be bit-reproducible"
+    assert run(False) == a, "paged and unpaged engines must sample identically"
+
+
+def test_sampled_request_identical_solo_or_batched(dense_setup):
+    """The PRNG key depends on (seed, position) only — batch composition
+    and lane index cannot change a request's sampled stream."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab, 6).tolist()
+    sp = SamplingParams(temperature=1.1, top_k=0, top_p=0.9, seed=5)
+
+    _, solo = _serve(
+        cfg, params,
+        [Request(uid=0, prompt=list(prompt), max_new_tokens=5, sampling=sp)],
+        max_batch=1, max_len=64,
+    )
+    neighbours = _reqs(np.random.default_rng(8), cfg.vocab, [4, 9], 5,
+                       SamplingParams(temperature=0.8, seed=99))
+    for i, r in enumerate(neighbours):
+        r.uid = 10 + i
+    _, batched = _serve(
+        cfg, params,
+        [Request(uid=0, prompt=list(prompt), max_new_tokens=5, sampling=sp)]
+        + neighbours,
+        max_batch=3, max_len=64,
+    )
+    assert batched[0] == solo[0]
+
+
+def test_temperature_to_zero_converges_to_greedy(dense_setup):
+    cfg, params = dense_setup
+    rng = np.random.default_rng(2)
+    lengths = [5, 9]
+    _, greedy = _serve(cfg, params,
+                       _reqs(np.random.default_rng(2), cfg.vocab, lengths),
+                       max_batch=2, max_len=64)
+    for temp in (0.0, 1e-4):
+        sp = SamplingParams(temperature=temp, seed=7)
+        _, out = _serve(cfg, params,
+                        _reqs(np.random.default_rng(2), cfg.vocab, lengths,
+                              sampling=sp),
+                        max_batch=2, max_len=64)
+        assert out == greedy, f"temperature={temp} must reproduce argmax"
+
+
+def test_mixed_batch_greedy_lane_is_exact(dense_setup):
+    """A greedy request surrounded by sampled neighbours emits exactly its
+    solo-greedy stream (the sampling fold-in cannot perturb greedy lanes)."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(13)
+    gprompt = rng.integers(0, cfg.vocab, 7).tolist()
+    _, solo = _serve(
+        cfg, params,
+        [Request(uid=0, prompt=list(gprompt), max_new_tokens=6)],
+        max_batch=1, max_len=64,
+    )
+    sp = SamplingParams(temperature=1.3, seed=3)
+    mixed = [Request(uid=0, prompt=list(gprompt), max_new_tokens=6)]
+    mixed += [
+        Request(uid=1 + i, prompt=rng.integers(0, cfg.vocab, 5).tolist(),
+                max_new_tokens=6, sampling=sp)
+        for i in range(2)
+    ]
+    _, out = _serve(cfg, params, mixed, max_batch=3, max_len=64)
+    assert out[0] == solo[0]
+
+
+# ---------------------------------------------------------------------------
+# Spec engines: sampled lanes fall back to plain decode (this PR)
+
+
+def test_spec_engine_sampled_fallback_matches_plain(dense_setup):
+    cfg, params = dense_setup
+    sp = SamplingParams(temperature=0.8, top_k=30, seed=21)
+
+    def run(spec):
+        rng = np.random.default_rng(4)
+        return _serve(cfg, params, _reqs(rng, cfg.vocab, [5, 8], 5, sp),
+                      max_batch=2, max_len=32, spec=spec)
+
+    _, plain = run(None)
+    eng, specd = run(SpecConfig(k=3))
+    assert specd == plain  # the fallback is the ordinary sampled decode
+    assert eng.stats()["spec_rounds"] == 0  # no round speculated
+
+
+def test_spec_engine_still_speculates_greedy_workloads(dense_setup):
+    cfg, params = dense_setup
+    rng = np.random.default_rng(6)
+    reqs = _reqs(rng, cfg.vocab, [5, 9], 6)
+    eng, out = _serve(cfg, params, reqs, max_batch=2, max_len=32,
+                      spec=SpecConfig(k=2))
+    rng = np.random.default_rng(6)
+    _, plain = _serve(cfg, params, _reqs(rng, cfg.vocab, [5, 9], 6),
+                      max_batch=2, max_len=32)
+    assert out == plain
+    assert eng.stats()["spec_rounds"] > 0
+
+
+def test_spec_engine_mixed_greedy_sampled_batch(dense_setup):
+    """Greedy requests keep their exact stream even when a sampled
+    neighbour forces plain-decode rounds mid-flight."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(9)
+    gprompt = rng.integers(0, cfg.vocab, 6).tolist()
+    _, solo = _serve(cfg, params,
+                     [Request(uid=0, prompt=list(gprompt), max_new_tokens=6)],
+                     max_batch=1, max_len=32, spec=SpecConfig(k=2))
+    mixed = [
+        Request(uid=0, prompt=list(gprompt), max_new_tokens=6),
+        Request(uid=1, prompt=rng.integers(0, cfg.vocab, 4).tolist(),
+                max_new_tokens=3,
+                sampling=SamplingParams(temperature=1.0, seed=17)),
+    ]
+    eng, out = _serve(cfg, params, mixed, max_batch=2, max_len=32,
+                      spec=SpecConfig(k=2))
+    assert out[0] == solo[0]
+    # The sampled lane retired mid-run, after which greedy rounds speculate.
+    assert eng.stats()["spec_rounds"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Cancellation: allocator-state parity vs never-submitted
+
+
+def _alloc_state(eng):
+    a = eng.allocator
+    return (a.in_use(), a.available(), a.cached_pages())
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "deepseek-moe-16b"])
+@pytest.mark.parametrize("paged", [True, False])
+def test_cancel_mid_decode_reclaims_lane(arch, paged):
+    cfg = smoke_config(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    # Short prompts (< page_size): no full prompt pages get registered, so
+    # allocator parity below is exact across every counter.
+    victim = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 5).tolist(),
+                     max_new_tokens=40)
+    other_prompt = rng.integers(0, cfg.vocab, 7).tolist()
+
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, max_len=64, paged=paged))
+    eng.submit(victim)
+    eng.submit(Request(uid=1, prompt=list(other_prompt), max_new_tokens=6))
+    for _ in range(3):
+        eng.step()
+    assert 0 < len(victim.output) < 40  # genuinely mid-decode
+    assert eng.cancel(0)
+    assert victim.finish_reason == "cancelled"
+    eng.run()
+
+    ref = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, max_len=64, paged=paged))
+    ref.submit(Request(uid=1, prompt=list(other_prompt), max_new_tokens=6))
+    ref.run()
+
+    # The survivor's stream is untouched by the cancelled neighbour.
+    out = {r.uid: r.output for r in eng.done}
+    assert out[1] == ref.done[0].output
+    assert all(s.req is None for s in eng.slots)  # lane freed
+    if paged:
+        # Exactly the lane's pages came back: allocator state matches an
+        # engine that never saw the cancelled request.
+        assert _alloc_state(eng) == _alloc_state(ref)
+        assert eng.stats()["kv_pages_in_use"] == 0.0
+        # The cancelled lane's table row points at the trash page.
+        assert (np.asarray(eng.caches["table"]) == 0).all()
+    s = eng.stats()
+    assert s["cancelled"] == 1 and s["completed"] == 1
+
+
+def test_cancel_inside_generate_stream(dense_setup):
+    """cancel() between TokenEvents ends the stream: no further tokens are
+    produced, the request records "cancelled", and its pages come back."""
+    cfg, params = dense_setup
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
+    events = []
+    uid = None
+    for ev in eng.generate([1, 2, 3, 4], max_new_tokens=30):
+        events.append(ev)
+        uid = ev.uid
+        if ev.index == 2:
+            assert eng.cancel(uid)
+    assert len(events) == 3  # the stream stopped right at the cancel
+    cancelled = next(r for r in eng.done if r.uid == uid)
+    assert cancelled.finish_reason == "cancelled"
+    assert eng.stats()["kv_pages_in_use"] == 0.0
+    assert eng.stats()["cancelled"] == 1

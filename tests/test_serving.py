@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs import smoke_config
 from repro.models import transformer as T
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineConfig, Request, ServingEngine
 
 
 def _mk_requests(rng, vocab, lengths, max_new=5):
@@ -73,7 +73,7 @@ def test_engine_o1_prefill_calls(dense_setup):
     compile per pow2 bucket — the compile/trace counters are the evidence."""
     cfg, params = dense_setup
     rng = np.random.default_rng(0)
-    eng = ServingEngine(cfg, params, max_batch=3, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=3, max_len=64))
     reqs = _mk_requests(rng, cfg.vocab, [3, 9, 12, 4, 30], max_new=4)
     for r in reqs:
         eng.submit(r)
@@ -97,12 +97,12 @@ def test_mixed_length_batch_matches_solo(dense_setup):
 
     solo_outputs = []
     for p in prompts:
-        eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+        eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=64))
         eng.submit(Request(uid=0, prompt=p, max_new_tokens=6))
         done = eng.run()
         solo_outputs.append(done[0].output)
 
-    eng = ServingEngine(cfg, params, max_batch=3, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=3, max_len=64))
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
     done = {r.uid: r.output for r in eng.run()}
@@ -116,7 +116,7 @@ def test_continuous_batching_hotswap(dense_setup):
     """More requests than slots: freed slots admit from the queue mid-run."""
     cfg, params = dense_setup
     rng = np.random.default_rng(11)
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
     reqs = _mk_requests(rng, cfg.vocab, [4, 7, 5, 9, 6], max_new=3)
     for r in reqs:
         eng.submit(r)
@@ -132,7 +132,7 @@ def test_ssm_replay_fallback():
     cfg = smoke_config("mamba2-1.3b")
     params = T.init_params(cfg, jax.random.PRNGKey(1))
     rng = np.random.default_rng(1)
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=32)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=32))
     reqs = _mk_requests(rng, cfg.vocab, [4, 6], max_new=3)
     for r in reqs:
         eng.submit(r)
@@ -151,7 +151,7 @@ def test_engine_w8a8_serving(dense_setup):
     qparams = quantize_params(params, recipe)
     rng = np.random.default_rng(2)
     eng = ServingEngine(
-        cfg, qparams, max_batch=2, max_len=64, matmul_mode="w8a8"
+        cfg, qparams, EngineConfig(max_batch=2, max_len=64, matmul_mode="w8a8")
     )
     reqs = _mk_requests(rng, cfg.vocab, [5, 8], max_new=4)
     for r in reqs:
@@ -159,7 +159,7 @@ def test_engine_w8a8_serving(dense_setup):
     done = eng.run()
     assert len(done) == 2 and all(len(r.output) == 4 for r in done)
     # w8a8 must stay close to dequant serving: token agreement, not identity.
-    eng2 = ServingEngine(cfg, qparams, max_batch=2, max_len=64)
+    eng2 = ServingEngine(cfg, qparams, EngineConfig(max_batch=2, max_len=64))
     for i, r in enumerate(reqs):
         eng2.submit(Request(uid=i, prompt=r.prompt, max_new_tokens=4))
     done2 = {r.uid: r.output for r in eng2.run()}
@@ -171,7 +171,7 @@ def test_engine_w8a8_serving(dense_setup):
 
 def test_stats_schema(dense_setup):
     cfg, params = dense_setup
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=32)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=1, max_len=32))
     # Two same-bucket requests: the second prefill and the later decode
     # steps run warm, so the compile-excluded throughputs are nonzero.
     eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4))

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.configs import smoke_config
 from repro.models import transformer as T
-from repro.serving import PageAllocator, Request, ServingEngine, SpecConfig
+from repro.serving import (EngineConfig, PageAllocator, Request,
+                           ServingEngine, SpecConfig)
 from repro.serving.spec_decode import AdaptiveK, committed_tokens
 
 
@@ -44,8 +45,9 @@ def quant_setup(dense_setup):
 def _run(cfg, params, prompts, *, max_new=6, spec=None, paged=None,
          max_batch=3, max_len=64, matmul_mode="dequant", eos=None):
     eng = ServingEngine(
-        cfg, params, max_batch=max_batch, max_len=max_len, paged=paged,
-        matmul_mode=matmul_mode, spec=spec,
+        cfg, params,
+        EngineConfig(max_batch=max_batch, max_len=max_len, paged=paged,
+                     matmul_mode=matmul_mode, spec=spec),
     )
     for i, p in enumerate(prompts):
         eng.submit(Request(uid=i, prompt=list(p), max_new_tokens=max_new, eos_id=eos))
@@ -274,14 +276,16 @@ def test_spec_requires_attention_arch():
     cfg = smoke_config("mamba2-1.3b")
     params = T.init_params(cfg, jax.random.PRNGKey(1))
     with pytest.raises(ValueError):
-        ServingEngine(cfg, params, max_batch=1, max_len=32, spec_k=3)
+        ServingEngine(cfg, params,
+                      EngineConfig(max_batch=1, max_len=32, spec=SpecConfig(k=3)))
 
 
 def test_spec_submit_rejects_overlong_budget(dense_setup):
     """Spec engines require prompt + max_new_tokens <= max_len: committed
     positions must live in real cache slots for the exactness contract."""
     cfg, params = dense_setup
-    eng = ServingEngine(cfg, params, max_batch=1, max_len=32, spec_k=2)
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=1, max_len=32, spec=SpecConfig(k=2)))
     with pytest.raises(ValueError):
         eng.submit(Request(uid=0, prompt=list(range(20)), max_new_tokens=20))
 

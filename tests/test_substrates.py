@@ -15,7 +15,7 @@ from repro.configs import smoke_config
 from repro.data import CalibrationSampler, DataState, SyntheticLM, make_batch_iterator
 from repro.models import transformer as T
 from repro.runtime.health import HeartbeatMonitor, StepTimer
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineConfig, Request, ServingEngine
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -193,7 +193,7 @@ def test_compressed_psum_single_pod_error_feedback():
 def test_serving_engine_continuous_batching():
     cfg = smoke_config("deepseek-7b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, max_batch=2, max_len=64)
+    eng = ServingEngine(cfg, params, EngineConfig(max_batch=2, max_len=64))
     rng = np.random.default_rng(0)
     reqs = [
         Request(uid=i, prompt=rng.integers(0, cfg.vocab, 5).tolist(),
@@ -218,7 +218,7 @@ def test_serving_engine_quantized_params():
     cfg = smoke_config("qwen3-14b")
     params = T.init_params(cfg, jax.random.PRNGKey(1))
     qparams = quantize_params(params, QuantRecipe(w_bits=8, ocs_ratio=0.02))
-    eng = ServingEngine(cfg, qparams, max_batch=2, max_len=32)
+    eng = ServingEngine(cfg, qparams, EngineConfig(max_batch=2, max_len=32))
     eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=3))
     done = eng.run()
     assert len(done) == 1 and len(done[0].output) == 3
