@@ -8,18 +8,25 @@
 #                     module-flag surfaces (dedicated legacy tests opt in
 #                     via pytest.warns)
 #   make example-smoke  streaming-facade example end to end (EngineConfig,
-#                     generate/TokenEvent, SamplingParams, cancel)
+#                     generate/TokenEvent, SamplingParams, cancel), then
+#                     again with an injected NaN (nonfinite-guard smoke)
 #   make bench-smoke  serving throughput smoke (baseline + spec-decode arm)
-#                     + paged-attention microbench
+#                     + paged-attention microbench + overload arm
 #                     -> results/BENCH_serving.json + BENCH_serving_spec.json
 #                        + BENCH_paged_attention.json
+#                        + BENCH_serving_overload.json
 #   make bench-attn   paged-attention decode microbench (kernel vs gather
 #                     oracle) -> results/BENCH_paged_attention.json
+#   make bench-overload  oversubscribed serving arm (~50% pool, optimistic
+#                     admission: preemption bit-exactness vs the uncontended
+#                     oracle, deadline + shed sub-arms)
+#                     -> results/BENCH_serving_overload.json
 #   make bench        every paper table + serving (slow; trains subjects once)
 
 PY := PYTHONPATH=src python
 
-.PHONY: test test-fast test-strict example-smoke bench-smoke bench-attn bench
+.PHONY: test test-fast test-strict example-smoke bench-smoke bench-attn \
+	bench-overload bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -32,13 +39,18 @@ test-strict:
 
 example-smoke:
 	$(PY) examples/serve_quantized.py --spec
+	$(PY) examples/serve_quantized.py --inject-nan 3
 
 bench-smoke:
 	$(PY) -m benchmarks.serving_throughput --quick
 	$(PY) -m benchmarks.paged_attention_bench --quick
+	$(PY) -m benchmarks.serving_overload --quick
 
 bench-attn:
 	$(PY) -m benchmarks.paged_attention_bench
+
+bench-overload:
+	$(PY) -m benchmarks.serving_overload
 
 bench:
 	$(PY) -m benchmarks.run --quick

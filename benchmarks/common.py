@@ -298,7 +298,13 @@ def save_json(name: str, obj) -> None:
 # meta gains matmul_kernel / attn_kernel_cfg, and attn_kernel now speaks the
 # full KernelChoice vocabulary ("gather" for the legacy oracle path that v4
 # reported as "xla").
-BENCH_SCHEMA_VERSION = 5
+# v6: the overload-safety layer — engine stats gain the preempted / shed /
+# timed_out / errors / kernel_fallbacks counters and the watchdog
+# step_p50_ms / step_p95_ms / step_stalled, surfaced in BENCH_serving, and
+# the oversubscribed arm lands as BENCH_serving_overload.json (optimistic
+# admission at ~50% of worst-case page demand, preemption bit-exactness
+# asserted against the uncontended oracle).
+BENCH_SCHEMA_VERSION = 6
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:

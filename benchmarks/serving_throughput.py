@@ -304,6 +304,17 @@ def main(argv=None):
             "prefix_hit_pages": stats["prefix_hit_pages"],
             # decode-attention path accounting (schema v4)
             "attn_step_ms": stats["attn_step_ms"],
+            # overload counters + watchdog step-time percentiles (schema v6;
+            # all-zero on this uncontended arm — the oversubscribed numbers
+            # live in BENCH_serving_overload.json)
+            "preempted": stats["preempted"],
+            "shed": stats["shed"],
+            "timed_out": stats["timed_out"],
+            "errors": stats["errors"],
+            "kernel_fallbacks": stats["kernel_fallbacks"],
+            "step_p50_ms": stats["step_p50_ms"],
+            "step_p95_ms": stats["step_p95_ms"],
+            "step_stalled": stats["step_stalled"],
             **bp_metrics,
         },
         meta={

@@ -11,11 +11,17 @@ drives :class:`repro.serving.ServingEngine` through the typed serving API:
   are still decoding), greedy and sampled side by side;
 * ``engine.cancel(uid)`` — a long request is cancelled mid-decode and its
   pages are reclaimed on the spot;
+* ``--inject-nan STEP`` — the overload-safety demo: a NaN is injected into
+  the jitted step producing one request's output token ``STEP``; the
+  ``isfinite`` guard quarantines exactly that lane (``finish_reason=
+  "error"``) while its co-resident lanes' outputs stay bit-identical to a
+  clean run;
 * a hybrid (Hymba) engine and, with ``--spec``, the self-speculative
   engine, both through the same config surface.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
       PYTHONPATH=src python examples/serve_quantized.py --spec
+      PYTHONPATH=src python examples/serve_quantized.py --inject-nan 3
 """
 import argparse
 import time
@@ -56,6 +62,9 @@ def main():
     ap.add_argument("--spec", action="store_true",
                     help="also demo self-speculative decoding (dense arch)")
     ap.add_argument("--spec-k", type=int, default=3)
+    ap.add_argument("--inject-nan", type=int, default=0, metavar="STEP",
+                    help="demo the nonfinite guard: poison the step that "
+                         "produces output token STEP of one request (>= 1)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -109,6 +118,48 @@ def main():
     print(f"  ttft p50 {s['ttft_p50_s'] * 1e3:.0f} ms | "
           f"itl p50 {s['itl_p50_s'] * 1e3:.1f} ms | "
           f"attn kernel: {s['attn_kernel']}")
+
+    if args.inject_nan:
+        print(f"--- nonfinite guard (NaN injected at output step "
+              f"{args.inject_nan}) ---")
+        # Fresh engine, three co-resident lanes; clean run first = oracle.
+        fcfg, clean_eng = build_engine(args.arch, bits=args.bits)
+        frng = np.random.default_rng(42)
+        prompts = [frng.integers(0, fcfg.vocab, 5 + i).tolist()
+                   for i in range(3)]
+
+        def fresh_reqs():
+            return [Request(uid=i, prompt=list(p), max_new_tokens=10)
+                    for i, p in enumerate(prompts)]
+
+        clean = fresh_reqs()
+        for r in clean:
+            clean_eng.submit(r)
+        clean_eng.run()
+
+        _, fault_eng = build_engine(args.arch, bits=args.bits)
+        faulty = fresh_reqs()
+        for r in faulty:
+            fault_eng.submit(r)
+        fault_eng.inject_fault(1, args.inject_nan)
+        fault_eng.run()
+
+        errored = [r for r in faulty if r.finish_reason == "error"]
+        assert len(errored) == 1 and errored[0].uid == 1, (
+            "exactly the poisoned lane must be quarantined"
+        )
+        for r in faulty:
+            if r.uid != 1:
+                ref = next(c for c in clean if c.uid == r.uid)
+                assert r.output == ref.output, (
+                    f"co-resident lane {r.uid} diverged from the clean run"
+                )
+        fs = fault_eng.stats()
+        assert fs["errors"] == 1 and fs["kv_pages_in_use"] == 0
+        print(f"  lane uid=1 quarantined after {len(errored[0].output)} "
+              f"tokens (reason={errored[0].finish_reason}); "
+              f"co-resident lanes bit-identical to the clean run; "
+              f"errors counter: {fs['errors']:.0f}")
 
     print("--- hybrid (hymba) engine through the same config surface ---")
     hcfg, heng = build_engine("hymba-1.5b", bits=args.bits)

@@ -193,6 +193,17 @@ def main(argv=None):
             f"over {stats['spec_rounds']:.0f} rounds (adaptive k -> "
             f"{stats['spec_k']:.0f})"
         )
+    print(
+        f"[serve] overload: preempted {stats['preempted']:.0f} | shed "
+        f"{stats['shed']:.0f} | timed out {stats['timed_out']:.0f} | errors "
+        f"{stats['errors']:.0f} | kernel fallbacks "
+        f"{stats['kernel_fallbacks']:.0f}"
+    )
+    print(
+        f"[serve] watchdog: step p50 {stats['step_p50_ms']:.1f} ms / p95 "
+        f"{stats['step_p95_ms']:.1f} ms"
+        + (" | STALLED" if stats["step_stalled"] else "")
+    )
 
     if args.compare_float and not args.float_serve:
         freqs = _make_requests(args.n_requests, cfg.vocab,

@@ -60,6 +60,17 @@ class StepTimer:
         s = sorted(self.window)
         return s[len(s) // 2]
 
+    def percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of the rolling window, 0.0 when empty.
+
+        Nearest-rank over the sorted window — the serving watchdog surfaces
+        p50/p95 step times through ``ServingEngine.stats()``."""
+        if not self.window:
+            return 0.0
+        s = sorted(self.window)
+        idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+        return s[idx]
+
     @property
     def is_straggling(self) -> bool:
         return self._over >= self.patience

@@ -6,7 +6,14 @@ from .config import (  # noqa: F401
     add_engine_config_args,
     engine_config_from_args,
 )
-from .engine import EngineStats, Request, ServingEngine, TokenEvent  # noqa: F401
+from .engine import (  # noqa: F401
+    FINISH_REASONS,
+    EngineOverloaded,
+    EngineStats,
+    Request,
+    ServingEngine,
+    TokenEvent,
+)
 from .kv_cache import PageAllocator, pages_needed  # noqa: F401
 from .spec_decode import AdaptiveK, SpecConfig, SpecDecoder  # noqa: F401
 from . import config  # noqa: F401

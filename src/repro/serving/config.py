@@ -244,6 +244,38 @@ class EngineConfig:
             "store_true": True,
         },
     )
+    admission: str = dataclasses.field(
+        default="reserve",
+        metadata={
+            "help": "paged admission policy: reserve = worst-case pages up "
+            "front (never preempts); optimistic = admit on prompt pages + "
+            "headroom, preempt-and-recompute the youngest lane on exhaustion "
+            "(greedy output stays bit-identical)",
+            "choices": ["reserve", "optimistic"],
+        },
+    )
+    admission_headroom: int = dataclasses.field(
+        default=1,
+        metadata={
+            "help": "optimistic admission: decode pages granted beyond the "
+            "prompt at install time (>= 1 so the first decode token always "
+            "has a slot)",
+        },
+    )
+    max_queue: int = dataclasses.field(
+        default=0,
+        metadata={
+            "help": "bounded submit queue (0 = unbounded); a full queue "
+            "rejects with EngineOverloaded and finish_reason='shed'",
+        },
+    )
+    heartbeat_path: str = dataclasses.field(
+        default="",
+        metadata={
+            "help": "serving heartbeat file, written once per engine step "
+            "('' = off); external watchdogs read it for liveness",
+        },
+    )
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -264,6 +296,17 @@ class EngineConfig:
             raise ValueError(
                 f"n_pages must be >= 2 (page 0 is the trash page), got {self.n_pages}"
             )
+        if self.admission not in ("reserve", "optimistic"):
+            raise ValueError(
+                f"admission must be reserve|optimistic, got {self.admission!r}"
+            )
+        if self.admission_headroom < 1:
+            raise ValueError(
+                "admission_headroom must be >= 1 (the first decode token "
+                f"needs a page slot), got {self.admission_headroom}"
+            )
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
         if self.spec is not None and not isinstance(self.spec, SpecConfig):
             raise TypeError(f"spec must be a SpecConfig, got {type(self.spec)}")
         if not isinstance(self.kernels, KernelConfig):

@@ -41,11 +41,28 @@ float model in low precision. This engine is that provider's serving loop:
   non-greedy ``SamplingParams`` fall back to plain decode steps for the
   rounds they are active (greedy lanes keep their exact token streams —
   plain decode and spec-decode commit the same argmax chain);
-* **stats** — a typed :class:`EngineStats` (schema frozen at v5: adds
-  TTFT/ITL p50+p95 from the per-token event timestamps, ``cancelled``, and
-  the resolved ``matmul_kernel``/``attn_kernel`` in the shared
-  ``KernelChoice`` vocabulary); ``stats()`` keeps returning the flat dict
-  view.
+* **overload safety** (PR 6) — ``EngineConfig.admission`` selects between
+  *reserve* (worst-case pages up front, the PR-2 behavior) and *optimistic*
+  admission (prompt pages + headroom; pages grow per decode step, and on
+  pool exhaustion the **youngest lane is preempted**: its full pages are
+  registered in the prefix cache, its pages released, and the request
+  re-enters the queue head carrying its committed tokens — recompute reuses
+  the registered pages and replays the committed output through the decode
+  path, so greedy output is **bit-identical** to the uninterrupted run);
+  per-request ``deadline_s`` sheds queued/active requests past their
+  deadline (``finish_reason="timeout"``), ``EngineConfig.max_queue`` bounds
+  the queue with a typed :class:`EngineOverloaded` rejection
+  (``finish_reason="shed"``), ``isfinite`` guards folded into the jitted
+  decode/prefill steps quarantine numerically faulted lanes
+  (``finish_reason="error"``, with a fault-injection hook and an automatic
+  pallas->xla attention fallback after repeated faults), and a watchdog
+  (``runtime.health.StepTimer`` / ``HeartbeatMonitor``) surfaces step-time
+  p50/p95 and a stall flag;
+* **stats** — a typed :class:`EngineStats` (schema v6: v5 plus the overload
+  counters ``preempted`` / ``shed`` / ``timed_out`` / ``errors`` /
+  ``kernel_fallbacks`` and the watchdog ``step_p50_ms`` / ``step_p95_ms`` /
+  ``step_stalled``; ``completed`` now counts *successful* terminals only —
+  eos/length); ``stats()`` keeps returning the flat dict view.
 
 Trace counters (``prefill_traces`` / ``decode_traces`` bump only while jit
 is tracing) let benchmarks assert the compile story: a request must cost
@@ -67,12 +84,43 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import layers
 from repro.models import transformer as T
+from repro.runtime.health import HeartbeatMonitor, StepTimer
 from . import kv_cache as kvc
 from . import sampling as sampling_mod
 from . import spec_decode as spec_mod
 from .config import EngineConfig, KernelChoice, KernelConfig, SamplingParams
 
-__all__ = ["Request", "TokenEvent", "EngineStats", "ServingEngine"]
+__all__ = [
+    "Request",
+    "TokenEvent",
+    "EngineStats",
+    "EngineOverloaded",
+    "ServingEngine",
+    "FINISH_REASONS",
+]
+
+# The one documented finish_reason vocabulary (docs/serving.md §Overload
+# behavior). Every request that leaves the engine carries exactly one:
+#   eos       — emitted the request's eos_id
+#   length    — exhausted max_new_tokens
+#   cancelled — cancel(uid) mid-flight
+#   timeout   — deadline_s expired (queued or active)
+#   error     — nonfinite logits quarantined the lane
+#   shed      — rejected at submit (bounded queue full)
+FINISH_REASONS = ("eos", "length", "cancelled", "timeout", "error", "shed")
+
+# Terminal reasons that never booked a final token themselves: stream()
+# emits a synthetic finished=True TokenEvent so streaming callers can't
+# hang on a request that silently left the queue. "cancelled" is excluded
+# (the documented v5 contract: a cancel simply ends the stream).
+_SENTINEL_REASONS = ("timeout", "error", "shed")
+
+
+class EngineOverloaded(RuntimeError):
+    """Typed rejection: the bounded submit queue (EngineConfig.max_queue)
+    is full. The request was never queued; its ``finish_reason`` is
+    ``"shed"`` and ``t_done`` is set, so ``stream()``/``generate()`` yield
+    the single shed sentinel event instead of hanging."""
 
 _GREEDY = SamplingParams()
 _UNSET = object()  # legacy-kwarg sentinel: None is a meaningful value
@@ -85,13 +133,14 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     sampling: Optional[SamplingParams] = None  # None = greedy
+    deadline_s: Optional[float] = None  # seconds after submit; None = none
     # Filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
     t_tokens: List[float] = dataclasses.field(default_factory=list)
-    finish_reason: Optional[str] = None  # "eos" | "length" | "cancelled"
+    finish_reason: Optional[str] = None  # one of FINISH_REASONS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,19 +162,34 @@ class TokenEvent:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Typed serving counters (stats schema v5, frozen).
+    """Typed serving counters (stats schema v6, frozen).
 
     The dict view (:meth:`as_dict`, what ``ServingEngine.stats()`` returns)
     is the stable cross-PR schema consumed by benchmarks — append fields,
-    never rename. v5 additions over v4: ``cancelled``, ``ttft_p50_s`` /
-    ``ttft_p95_s`` / ``itl_p50_s`` / ``itl_p95_s`` (percentiles over the
-    per-token event stream), ``matmul_kernel`` / ``matmul_mode``, and
-    ``attn_kernel`` now speaks the full ``KernelChoice`` vocabulary
-    (``"gather"`` for the legacy oracle path that v4 reported as ``"xla"``).
+    never rename. v6 additions over v5 (the overload-safety layer):
+    ``preempted`` (lanes evicted under optimistic admission and requeued
+    for bit-exact recompute), ``shed`` (bounded-queue rejections),
+    ``timed_out`` (deadline expiries, queued or active), ``errors``
+    (nonfinite-logit quarantines), ``kernel_fallbacks`` (automatic
+    pallas->xla attention downgrades after repeated faults), and the
+    watchdog ``step_p50_ms`` / ``step_p95_ms`` / ``step_stalled``.
+    Semantics change: ``completed`` counts *successful* terminals only
+    (eos/length); v5 counted every non-cancelled terminal, but v5 had no
+    unsuccessful reasons besides ``cancelled``, so the two definitions
+    agree on every v5 stream. Mean/percentile latencies are booked over
+    successful terminals only.
     """
 
     completed: int = 0
     cancelled: int = 0
+    preempted: int = 0
+    shed: int = 0
+    timed_out: int = 0
+    errors: int = 0
+    kernel_fallbacks: int = 0
+    step_p50_ms: float = 0.0
+    step_p95_ms: float = 0.0
+    step_stalled: float = 0.0
     decode_steps: int = 0
     decoded_tokens: int = 0
     mean_latency_s: float = 0.0
@@ -179,6 +243,7 @@ class _Slot:
     req: Optional[Request] = None
     remaining: int = 0
     pages: List[int] = dataclasses.field(default_factory=list)
+    seq: int = 0  # install order: preemption always evicts the youngest
 
 
 def _percentile(values: Sequence[float], q: float) -> float:
@@ -307,6 +372,27 @@ class ServingEngine:
         # tests creating dozens of engines must not pay.
         self.attn_probe = config.attn_probe and self.paged
         self._attn_probe_fn: Optional[Callable] = None
+        # Overload safety (PR 6). Optimistic admission only means something
+        # on a paged engine (unpaged caches are fixed-slot: admission can
+        # never oversubscribe, so the mode silently degrades to reserve).
+        self.admission = config.admission if self.paged else "reserve"
+        self.preempted = 0
+        self.shed = 0
+        self.timed_out = 0
+        self.errors = 0
+        self.kernel_fallbacks = 0
+        self._install_seq = 0  # monotonic install stamp (victim selection)
+        self._fault_at: Dict[int, int] = {}  # uid -> output index to poison
+        self._fault_streak = 0  # consecutive quarantined requests (no
+        # healthy eos/length completion in between) on this kernel
+        # Serving watchdog: step-time percentiles + optional heartbeat file
+        # (the training-fleet observers from runtime.health, reused as-is).
+        self._step_timer = StepTimer(window=200)
+        self._heartbeat = (
+            HeartbeatMonitor(config.heartbeat_path)
+            if config.heartbeat_path
+            else None
+        )
         self.tokens = jnp.zeros((self.max_batch, 1), jnp.int32)
         self.steps = 0
         self.decoded_tokens = 0
@@ -338,6 +424,8 @@ class ServingEngine:
         # bounds recompiles) + the sampled flag, plus the prefix-hit page
         # count when paged.
         self._prefill_cache: Dict[Tuple, Callable] = {}
+        # Preemption-resume replay jits, keyed by token bucket (b=1).
+        self._replay_cache: Dict[int, Callable] = {}
 
     # ------------------------------------------------------------- internals
 
@@ -347,19 +435,25 @@ class ServingEngine:
         paged-attention dispatch, i.e. ``kernels.attn`` is pallas/xla)."""
         return self.paged and self.attn_kernel in ("pallas", "xla")
 
-    def _decode_impl(self, params, caches, token, samp, *, sampled: bool):
+    def _decode_impl(self, params, caches, token, samp, fault, *, sampled: bool):
         self.decode_traces += 1  # python side effect: runs only while tracing
         with layers.serving_mode(self.matmul_mode, kernel=self.matmul_kernel):
             logits, new_caches = T.decode_step(
                 params, token, caches, self.cfg, attn_kernel=self.attn_kernel
             )
+        # fault: [B] f32, 0.0 everywhere except lanes the injection hook
+        # poisons (NaN) — one fused add, free when all-zero. The finite
+        # flag is the nonfinite guard: the host quarantines a failed lane
+        # instead of streaming garbage (its "token" below is meaningless).
+        logits = logits + fault[:, None]
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
         if sampled:
             # Keys derive from (request seed, position): reproducible across
             # runs, batch compositions, and paged/unpaged engines.
             nxt = sampling_mod.sample_tokens(logits, samp, caches["pos"])
         else:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return nxt[:, None], new_caches
+        return nxt[:, None], finite, new_caches
 
     def _samp_device(self) -> Dict[str, jnp.ndarray]:
         if self._samp_cache is None:
@@ -407,11 +501,12 @@ class ServingEngine:
                         params, tokens, self.cfg, pools, page_ids,
                         length=length, prefix_ids=prefix_ids,
                     )
+                finite = jnp.all(jnp.isfinite(logits), axis=-1)
                 if sampled:
                     nxt = sampling_mod.sample_tokens(logits, samp, samp_pos)
                 else:
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                return nxt, new_pools
+                return nxt, finite, new_pools
 
         else:
 
@@ -424,11 +519,12 @@ class ServingEngine:
                         params, tokens, self.cfg, self.max_len,
                         length=length, cache_dtype=jnp.float32,
                     )
+                finite = jnp.all(jnp.isfinite(logits), axis=-1)
                 if sampled:
                     nxt = sampling_mod.sample_tokens(logits, samp, length - 1)
                 else:
                     nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                return nxt, scratch
+                return nxt, finite, scratch
 
         fn = jax.jit(impl)
         self._prefill_cache[key] = fn
@@ -444,13 +540,15 @@ class ServingEngine:
             self.prefill_tokens_warm += n_tokens
 
     def _run_prefill(self, prompt: np.ndarray, sp: SamplingParams):
-        """Prompt -> (first generated token, single-slot scratch caches).
+        """Prompt -> (first generated token, finite flag, scratch caches).
 
         Attention archs (unpaged engines): chunked prefill — the padded
         prompt runs in ONE jitted call per request. SSM/hybrid archs:
         decode-step replay (one jitted call per token; exactly consistent
         with the decode path — including the sampled first token, whose key
-        position ``n - 1`` matches the chunked path).
+        position ``n - 1`` matches the chunked path). ``finite`` is the
+        nonfinite guard on the first-token logits (the replay path checks
+        the final step only — an SSM NaN propagates through the state).
         """
         n = len(prompt)
         self._validate_prompt_len(n)  # backstop; submit() already rejected
@@ -460,7 +558,7 @@ class ServingEngine:
             bucket = self._prefill_bucket(n)
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :n] = prompt
-            nxt, scratch = self._prefill_fn((bucket, not sp.greedy))(
+            nxt, finite, scratch = self._prefill_fn((bucket, not sp.greedy))(
                 self.params, jnp.asarray(toks), jnp.asarray([n], jnp.int32),
                 self._samp_one(sp),
             )
@@ -470,10 +568,11 @@ class ServingEngine:
             scratch = T.init_cache(self.cfg, 1, self.max_len, dtype=jnp.float32)
             tok = jnp.asarray(prompt, jnp.int32)[None, :]
             samp1 = self._samp_one(sp)
-            nxt = None
+            zero_fault = jnp.zeros((1,), jnp.float32)
+            nxt = finite = None
             for i in range(tok.shape[1]):
-                nxt, scratch = self._decode(
-                    self.params, scratch, tok[:, i : i + 1], samp1,
+                nxt, finite, scratch = self._decode(
+                    self.params, scratch, tok[:, i : i + 1], samp1, zero_fault,
                     sampled=not sp.greedy,
                 )
                 self.prefill_calls += 1
@@ -481,19 +580,20 @@ class ServingEngine:
         elapsed = time.perf_counter() - t0
         traced = self.prefill_traces + self.decode_traces > traces0
         self._book_prefill(n, elapsed, traced)
-        return first, scratch
+        return first, bool(finite[0]), scratch
 
     def _run_prefill_paged(
         self, suffix: np.ndarray, hit_ids: List[int], new_ids: List[int],
         sp: SamplingParams, n_total: int,
-    ) -> int:
+    ) -> Tuple[int, bool]:
         """Suffix-only prefill, writing K/V straight into the page pool.
 
         ONE jitted call per request; prefix pages (``hit_ids``) are gathered
         read-only inside the call, so a full-prefix hit prefills only the
         suffix. ``n_total`` is the full prompt length — the sampled first
         token's key position (``n_total - 1``) must not depend on how much
-        prefix the cache happened to hit. Returns the first generated token.
+        prefix the cache happened to hit. Returns ``(first generated token,
+        finite flag)``.
         """
         m = len(suffix)  # >= 1: admission caps prefix hits at (n-1)//page_size
         bucket = self._prefill_bucket(m)
@@ -506,7 +606,9 @@ class ServingEngine:
         pools = [layer["attn"] for layer in self.caches["layers"]]
         traces0 = self.prefill_traces
         t0 = time.perf_counter()
-        nxt, new_pools = self._prefill_fn((bucket, len(hit_ids), not sp.greedy))(
+        nxt, finite, new_pools = self._prefill_fn(
+            (bucket, len(hit_ids), not sp.greedy)
+        )(
             self.params,
             jnp.asarray(toks),
             jnp.asarray([m], jnp.int32),
@@ -521,7 +623,67 @@ class ServingEngine:
         self.caches["layers"] = [{"attn": p} for p in new_pools]
         elapsed = time.perf_counter() - t0
         self._book_prefill(m, elapsed, self.prefill_traces > traces0)
-        return first
+        return first, bool(finite[0])
+
+    def _replay_fn(self, bucket: int) -> Callable:
+        """b=1 multi-token decode over the page pool: the preemption-resume
+        recompute path. Runs the committed output tokens through
+        ``decode_tokens`` — the *decode-path* numerics — so every K/V row it
+        writes is bit-identical to what the uninterrupted run wrote (the
+        same invariant the speculative verify step relies on). The logits
+        are discarded (DCE'd out of the trace): resume already knows every
+        committed token; only the cache rows matter."""
+        fn = self._replay_cache.get(bucket)
+        if fn is not None:
+            return fn
+
+        def impl(params, pools, table1, pos1, tokens):
+            self.decode_traces += 1  # python side effect: bumps only tracing
+            caches = {
+                "layers": [{"attn": p} for p in pools],
+                "table": table1,
+                "pos": pos1,
+            }
+            with layers.serving_mode(self.matmul_mode, kernel=self.matmul_kernel):
+                _, new_caches = T.decode_tokens(
+                    params, tokens, caches, self.cfg,
+                    attn_kernel=self.attn_kernel,
+                )
+            return [layer["attn"] for layer in new_caches["layers"]]
+
+        fn = jax.jit(impl)
+        self._replay_cache[bucket] = fn
+        return fn
+
+    def _run_replay(self, slot_idx: int, tokens: np.ndarray, start: int) -> None:
+        """Write decode-path K/V for positions ``start .. start+len(tokens)-1``
+        of lane ``slot_idx`` (whose table row must already be set). Padded
+        bucket tails write past the committed position — invisible to every
+        read and overwritten in place later, exactly like a rejected
+        speculative window."""
+        if len(tokens) == 0:
+            return
+        bucket = 8
+        while bucket < len(tokens):
+            bucket *= 2
+        bucket = min(bucket, self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, : len(tokens)] = tokens
+        table1 = self.caches["table"][slot_idx : slot_idx + 1]
+        pos1 = jnp.asarray([start], jnp.int32)
+        pools = [layer["attn"] for layer in self.caches["layers"]]
+        traces0 = self.decode_traces
+        t0 = time.perf_counter()
+        new_pools = self._replay_fn(bucket)(
+            self.params, pools, table1, pos1, jnp.asarray(toks)
+        )
+        jax.block_until_ready(new_pools)
+        elapsed = time.perf_counter() - t0
+        self.caches["layers"] = [{"attn": p} for p in new_pools]
+        if self.decode_traces > traces0:
+            self.decode_compile_s += elapsed
+        else:
+            self.decode_time_s += elapsed
 
     def _finish_first_token(self, req: Request, first: int) -> bool:
         """Book the prefill-produced token; True if the request is already
@@ -549,7 +711,12 @@ class ServingEngine:
         if self.paged:
             return self._install_paged(slot_idx, req)
         sp = req.sampling or _GREEDY
-        first, scratch = self._run_prefill(np.asarray(req.prompt, np.int64), sp)
+        first, finite, scratch = self._run_prefill(
+            np.asarray(req.prompt, np.int64), sp
+        )
+        if not finite:
+            self._quarantine(req)
+            return True
         if self._finish_first_token(req, first):
             return True
 
@@ -569,11 +736,29 @@ class ServingEngine:
         # other slots are untouched (mixed-length admission is exact).
         self.caches["pos"] = self.caches["pos"].at[slot_idx].set(scratch["pos"][0])
         self.tokens = self.tokens.at[slot_idx, 0].set(first)
-        self.slots[slot_idx] = _Slot(req=req, remaining=req.max_new_tokens - 1)
+        self.slots[slot_idx] = _Slot(
+            req=req, remaining=req.max_new_tokens - 1, seq=self._install_seq
+        )
+        self._install_seq += 1
         self._set_lane_sampling(slot_idx, sp)
         return True
 
+    def _need_install(self, n_committed: int, need_total: int) -> int:
+        """Pages granted at install time: the full worst-case reservation
+        under ``reserve`` admission, or just enough to hold the committed
+        context plus headroom under ``optimistic`` (later pages are grown
+        per decode step, preempting the youngest lane on exhaustion)."""
+        if self.admission != "optimistic":
+            return need_total
+        return min(
+            kvc.pages_needed(n_committed, self.page_size)
+            + self.config.admission_headroom,
+            need_total,
+        )
+
     def _install_paged(self, slot_idx: int, req: Request) -> bool:
+        if req.output:
+            return self._resume_paged(slot_idx, req)
         prompt = np.asarray(req.prompt, np.int64)
         n = len(prompt)
         self._validate_prompt_len(n)
@@ -582,15 +767,16 @@ class ServingEngine:
         need_total = min(
             kvc.pages_needed(n + req.max_new_tokens, ps), self.max_pages_per_seq
         )
+        need_install = self._need_install(n, need_total)
         # Cap prefix hits so the suffix keeps >= 1 token (the prefill must
         # still produce the first-token logits).
         max_hit = (n - 1) // ps
-        if self.allocator.available() < need_total - max_hit:
+        if self.allocator.available() < need_install - max_hit:
             return False  # can't fit even with a full prefix hit: fail fast
             # before the O(prompt) hash work (a queued request retries every
             # engine step while the pool drains)
         hit_ids, keys = self.allocator.match_prefix(prompt, max_hit)
-        need_new = need_total - len(hit_ids)
+        need_new = need_install - len(hit_ids)
         if self.allocator.available() < need_new:
             self.allocator.release(hit_ids)  # un-retain; stay queued
             return False
@@ -599,7 +785,13 @@ class ServingEngine:
         row_ids = hit_ids + new_ids
         n_hit = len(hit_ids) * ps
 
-        first = self._run_prefill_paged(prompt[n_hit:], hit_ids, new_ids, sp, n)
+        first, finite = self._run_prefill_paged(
+            prompt[n_hit:], hit_ids, new_ids, sp, n
+        )
+        if not finite:
+            self.allocator.release(row_ids)
+            self._quarantine(req)
+            return True
         # Publish the freshly written *full* prompt pages (decode never
         # touches them — it appends past the prompt — so sharing is safe).
         for j in range(len(hit_ids), n // ps):
@@ -615,8 +807,83 @@ class ServingEngine:
         self.caches["pos"] = self.caches["pos"].at[slot_idx].set(n)
         self.tokens = self.tokens.at[slot_idx, 0].set(first)
         self.slots[slot_idx] = _Slot(
-            req=req, remaining=req.max_new_tokens - 1, pages=row_ids
+            req=req, remaining=req.max_new_tokens - 1, pages=row_ids,
+            seq=self._install_seq,
         )
+        self._install_seq += 1
+        self._set_lane_sampling(slot_idx, sp)
+        return True
+
+    def _resume_paged(self, slot_idx: int, req: Request) -> bool:
+        """Re-install a preempted request (``req.output`` holds its committed
+        tokens) with bit-exact recompute:
+
+        * full pages of the committed context (prompt + output, registered
+          at preemption) come back as prefix hits — their rows are the
+          *original* bits, untouched;
+        * a prompt remainder past the hits re-runs the same suffix prefill
+          path as a fresh install;
+        * committed output tokens past the prompt replay through the decode
+          path (:meth:`_run_replay`) — decode-path K/V is bit-identical to
+          what the uninterrupted run wrote (the speculative-verify
+          invariant), so the continuation decodes over an identical cache
+          and the greedy stream is token-for-token the uninterrupted one.
+        """
+        prompt = np.asarray(req.prompt, np.int64)
+        n = len(prompt)
+        m = len(req.output)
+        sp = req.sampling or _GREEDY
+        ps = self.page_size
+        pos = n + m - 1  # committed position: K/V must exist below it
+        ctx = np.concatenate([prompt, np.asarray(req.output, np.int64)])
+        need_total = min(
+            kvc.pages_needed(n + req.max_new_tokens, ps), self.max_pages_per_seq
+        )
+        need_install = self._need_install(pos + 1, need_total)
+        max_hit = pos // ps  # every full committed page is reusable: resume
+        # needs no first-token logits (the committed tokens are known)
+        if self.allocator.available() < need_install - max_hit:
+            return False
+        hit_ids, keys = self.allocator.match_prefix(ctx[:pos], max_hit)
+        need_new = need_install - len(hit_ids)
+        if self.allocator.available() < need_new:
+            self.allocator.release(hit_ids)
+            return False
+        new_ids = self.allocator.alloc(need_new)
+        row_ids = hit_ids + new_ids
+        h = len(hit_ids) * ps  # committed tokens covered by hits
+
+        if h < n:
+            # Hits stopped inside the prompt: re-prefill the remainder the
+            # same way a fresh install would (the first token it produces is
+            # already committed — discard it; a nonfinite result quarantines
+            # exactly like a fresh prefill).
+            _, finite = self._run_prefill_paged(
+                prompt[h:], hit_ids, new_ids, sp, n
+            )
+            if not finite:
+                self.allocator.release(row_ids)
+                self._quarantine(req)
+                return True
+
+        # Table row first: the replay decodes through it.
+        row = np.full((self.max_pages_per_seq,), kvc.TRASH_PAGE, np.int32)
+        row[: len(row_ids)] = row_ids
+        self.caches["table"] = self.caches["table"].at[slot_idx].set(jnp.asarray(row))
+        start = max(h, n)
+        self._run_replay(slot_idx, ctx[start:pos], start)
+        # (Re-)publish the full committed pages this resume rewrote; pages
+        # still registered from preemption win (first-writer-wins no-op).
+        for j in range(len(hit_ids), pos // ps):
+            self.allocator.register(keys[j], row_ids[j])
+
+        self.caches["pos"] = self.caches["pos"].at[slot_idx].set(pos)
+        self.tokens = self.tokens.at[slot_idx, 0].set(int(req.output[-1]))
+        self.slots[slot_idx] = _Slot(
+            req=req, remaining=req.max_new_tokens - m, pages=row_ids,
+            seq=self._install_seq,
+        )
+        self._install_seq += 1
         self._set_lane_sampling(slot_idx, sp)
         return True
 
@@ -625,6 +892,8 @@ class ServingEngine:
         slot.req.t_done = time.perf_counter()
         if slot.req.finish_reason is None:
             slot.req.finish_reason = "length"
+        if slot.req.finish_reason in ("eos", "length"):
+            self._fault_streak = 0  # a healthy completion clears the streak
         self.done.append(slot.req)
         if self.paged:
             # Reclaim pages and point the lane at the trash page so its dead
@@ -640,6 +909,174 @@ class ServingEngine:
             self.caches["pos"] = self.caches["pos"].at[slot_idx].set(0)
         self.slots[slot_idx] = _Slot()
         self._set_lane_sampling(slot_idx, _GREEDY)
+
+    # --------------------------------------------------- overload machinery
+
+    def _preempt(self, slot_idx: int) -> None:
+        """Evict lane ``slot_idx`` under pool pressure and requeue its
+        request at the queue *head* for bit-exact recompute
+        (:meth:`_resume_paged`). Every full page of the committed context is
+        registered in the prefix cache first, so the released pages drop to
+        the LRU still hit-able — the resume usually re-allocates nothing but
+        the partial tail page."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        pos = len(req.prompt) + len(req.output) - 1
+        ctx = list(req.prompt) + req.output
+        keys = self.allocator.chain_keys(ctx, pos // self.page_size)
+        for j, key in enumerate(keys):
+            if j < len(slot.pages):
+                self.allocator.register(key, slot.pages[j])
+        self.allocator.truncate(slot.pages, 0)
+        self.caches["table"] = (
+            self.caches["table"].at[slot_idx].set(kvc.TRASH_PAGE)
+        )
+        self.caches["pos"] = self.caches["pos"].at[slot_idx].set(0)
+        self.slots[slot_idx] = _Slot()
+        self._set_lane_sampling(slot_idx, _GREEDY)
+        self.queue.appendleft(req)
+        self.preempted += 1
+
+    def _grow_lane(self, slot_idx: int, delta: int, touched: Dict) -> None:
+        """Grow lane ``slot_idx``'s page list to cover its next ``delta``
+        positions, preempting the youngest active lane (possibly itself)
+        whenever the pool comes up short. Terminates: each preemption frees
+        >= 1 page, the oldest lane is never a victim while others are
+        active, and a single lane's need never exceeds pool capacity
+        (submit() rejects those outright)."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        pos = len(req.prompt) + len(req.output) - 1
+        need = min(
+            kvc.pages_needed(pos + delta, self.page_size),
+            self.max_pages_per_seq,
+        )
+        while self.slots[slot_idx].req is req and len(slot.pages) < need:
+            short = need - len(slot.pages)
+            if self.allocator.available() < short:
+                victim = max(
+                    (i for i, s in enumerate(self.slots) if s.req is not None),
+                    key=lambda i: self.slots[i].seq,
+                )
+                self._preempt(victim)
+                continue
+            slot.pages.extend(self.allocator.alloc(short))
+            touched[slot_idx] = slot.pages
+
+    def _ensure_capacity(self, delta: int) -> None:
+        """Optimistic admission's growth phase, run before every decode /
+        speculation round: each active lane (oldest first — the oldest can
+        never be starved by younger arrivals) gets pages for its next
+        ``delta`` positions. Reserve admission is a no-op by construction
+        (install granted the worst case)."""
+        if not self.paged or self.admission != "optimistic":
+            return
+        touched: Dict[int, List[int]] = {}
+        order = sorted(
+            (i for i, s in enumerate(self.slots) if s.req is not None),
+            key=lambda i: self.slots[i].seq,
+        )
+        for i in order:
+            if self.slots[i].req is not None:  # not preempted by an elder
+                self._grow_lane(i, delta, touched)
+        for i, pages in touched.items():
+            if self.slots[i].req is None:
+                continue  # grew, then lost to an older lane's growth
+            row = np.full((self.max_pages_per_seq,), kvc.TRASH_PAGE, np.int32)
+            row[: len(pages)] = pages
+            self.caches["table"] = (
+                self.caches["table"].at[i].set(jnp.asarray(row))
+            )
+
+    def _quarantine(self, req: Request) -> None:
+        """Terminal-error a request whose logits went nonfinite (before it
+        ever took a lane — the active-lane path retires through
+        ``_retire`` with the reason pre-set)."""
+        req.finish_reason = "error"
+        req.t_done = time.perf_counter()
+        self.done.append(req)
+        self._note_fault(req)
+
+    def _note_fault(self, req: Request) -> None:
+        """Book one quarantined request. The streak counts consecutive
+        quarantines with no healthy completion in between (``_retire``
+        clears it on eos/length): three in a row on the fused pallas
+        attention path triggers the automatic XLA fallback."""
+        self.errors += 1
+        self._fault_at.pop(req.uid, None)
+        self._fault_streak += 1
+        if self._fault_streak >= 3 and self.attn_kernel == "pallas":
+            self._fallback_kernel()
+
+    def _fallback_kernel(self) -> None:
+        """Automatic degradation after repeated nonfinite faults on the
+        fused pallas attention path: re-trace everything on the XLA
+        formulation (bit-different but numerically robust) and keep
+        serving. Counted in ``stats()["kernel_fallbacks"]``."""
+        self.attn_kernel = "xla"
+        self.kernel_fallbacks += 1
+        self._fault_streak = 0
+        self._decode = jax.jit(self._decode_impl, static_argnames=("sampled",))
+        self._prefill_cache.clear()
+        self._replay_cache.clear()
+        self._attn_probe_fn = None
+        if self._spec is not None:
+            old = self._spec
+            self._spec = spec_mod.SpecDecoder(
+                self.cfg, self.config.spec, self.matmul_mode,
+                matmul_kernel=self.matmul_kernel, attn_kernel=self.attn_kernel,
+            )
+            self._spec.controller = old.controller
+            for attr in (
+                "rounds", "lane_rounds", "proposed", "accepted", "committed",
+                "draft_time_s", "verify_time_s", "compile_s", "draft_traces",
+                "verify_traces",
+            ):
+                setattr(self._spec, attr, getattr(old, attr))
+
+    def inject_fault(self, uid: int, at_output_index: int) -> None:
+        """Test hook: poison (NaN) the jitted step that would produce output
+        token ``at_output_index`` (>= 1; index 0 comes from prefill) of
+        request ``uid``. The fault flows through the same fused
+        ``isfinite`` guard as a real numerical fault, so tests exercise the
+        production quarantine path end to end."""
+        self._fault_at[uid] = at_output_index
+
+    def _fault_row(self, window: int = 1) -> np.ndarray:
+        """Per-lane injection row for the next decode/verify step: NaN for
+        lanes whose pending fault falls inside the step's output window
+        (``window`` tokens for a speculative round), 0.0 otherwise."""
+        fault = np.zeros((self.max_batch,), np.float32)
+        for i, slot in enumerate(self.slots):
+            r = slot.req
+            if r is None:
+                continue
+            at = self._fault_at.get(r.uid)
+            if at is not None and at < len(r.output) + window:
+                fault[i] = np.nan
+        return fault
+
+    def _shed_expired(self) -> None:
+        """Deadline policy, applied at the top of every step: queued
+        requests past ``deadline_s`` shed before taking a lane; active
+        lanes retire mid-decode keeping their partial output. Both end
+        ``finish_reason="timeout"``."""
+        now = time.perf_counter()
+
+        def expired(r: Request) -> bool:
+            return r.deadline_s is not None and now - r.t_submit > r.deadline_s
+
+        for r in [r for r in self.queue if expired(r)]:
+            self.queue.remove(r)
+            r.finish_reason = "timeout"
+            r.t_done = now
+            self.done.append(r)
+            self.timed_out += 1
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None and expired(slot.req):
+                slot.req.finish_reason = "timeout"
+                self._retire(i)
+                self.timed_out += 1
 
     # ------------------------------------------------------------------ API
 
@@ -686,6 +1123,17 @@ class ServingEngine:
         if isinstance(req.uid, int):  # generate()'s auto-uids stay unique
             self._auto_uid = max(self._auto_uid, req.uid + 1)
         req.t_submit = time.perf_counter()
+        if self.config.max_queue and len(self.queue) >= self.config.max_queue:
+            # Load shedding: reject-at-submit so overload turns into a fast
+            # typed error, not an unbounded queue. The request is terminal
+            # (finish_reason/t_done set) so stream() yields its sentinel.
+            req.finish_reason = "shed"
+            req.t_done = req.t_submit
+            self.shed += 1
+            raise EngineOverloaded(
+                f"queue full ({len(self.queue)}/{self.config.max_queue}): "
+                f"request {req.uid} shed"
+            )
         self.queue.append(req)
 
     def generate(
@@ -696,6 +1144,7 @@ class ServingEngine:
         max_new_tokens: int = 32,
         eos_id: Optional[int] = None,
         uid: Optional[int] = None,
+        deadline_s: Optional[float] = None,
     ) -> Iterator[TokenEvent]:
         """Submit one request and stream its tokens as :class:`TokenEvent` s.
 
@@ -707,14 +1156,22 @@ class ServingEngine:
         ``generate`` iterators (or a background ``run()``) is the intended
         multi-client shape. ``cancel(uid)`` mid-iteration ends the stream
         with ``finish_reason="cancelled"``.
+
+        A request the bounded queue sheds still streams: its one event is
+        the ``finished=True, finish_reason="shed"`` sentinel (callers that
+        want the typed :class:`EngineOverloaded` should ``submit()`` +
+        ``stream()`` themselves).
         """
         if uid is None:
             uid = self._auto_uid  # submit() bumps past it
         req = Request(
             uid=uid, prompt=list(prompt), max_new_tokens=max_new_tokens,
-            eos_id=eos_id, sampling=sampling,
+            eos_id=eos_id, sampling=sampling, deadline_s=deadline_s,
         )
-        self.submit(req)
+        try:
+            self.submit(req)
+        except EngineOverloaded:
+            pass  # terminal "shed": stream() yields the sentinel and ends
         return self.stream(req)
 
     def stream(self, req: Request) -> Iterator[TokenEvent]:
@@ -725,11 +1182,18 @@ class ServingEngine:
         the engine knew the outcome as it booked the token (eos, budget). A
         ``cancel()`` that lands *after* the last token was already yielded
         simply ends the stream — check ``req.finish_reason`` for the
-        verdict (a queue-cancelled request yields no events at all)."""
+        verdict (a queue-cancelled request yields no events at all).
+
+        Requests that end without booking a final token — shed, timed out,
+        or quarantined (``_SENTINEL_REASONS``) — get one synthetic
+        ``finished=True`` sentinel event (``token=-1``) so a streaming
+        caller can never hang on a request that silently left the queue."""
         seen = 0
+        sent_final = False
         while True:
             while seen < len(req.output):
                 last = req.t_done > 0.0 and seen == len(req.output) - 1
+                sent_final = sent_final or last
                 yield TokenEvent(
                     uid=req.uid,
                     token=req.output[seen],
@@ -740,8 +1204,18 @@ class ServingEngine:
                 )
                 seen += 1
             if req.t_done > 0.0:
+                if not sent_final and req.finish_reason in _SENTINEL_REASONS:
+                    yield TokenEvent(
+                        uid=req.uid, token=-1, index=len(req.output),
+                        t=req.t_done, finished=True,
+                        finish_reason=req.finish_reason,
+                    )
                 return  # finished (a queue-cancelled request yields nothing)
-            if not self.step() and not self.queue:
+            # Re-check t_done before giving up on a drained engine: the step
+            # above may itself have finished the request (deadline shed of
+            # the last queued request drains the engine AND terminals it —
+            # its sentinel must still go out).
+            if not self.step() and not self.queue and req.t_done == 0.0:
                 return  # engine drained without finishing the request
 
     def cancel(self, uid: int) -> bool:
@@ -788,6 +1262,14 @@ class ServingEngine:
         draft only decides how many of those tokens one target step yields.
         """
         dec = self._spec
+        # Optimistic growth BEFORE the position snapshots: a verify window
+        # writes up to k+1 positions past each lane's committed point, and a
+        # preemption during growth rewrites lane state the snapshots must
+        # already reflect (a stale snapshot would "rewind" a preempted lane
+        # back to life at round end).
+        self._ensure_capacity(dec.controller.k + 1)
+        if not any(s.req for s in self.slots):
+            return True  # growth preempted every lane; re-admit next step
         pos0 = np.asarray(self.caches["pos"])
         tok0 = np.asarray(self.tokens)[:, 0]
         warm0 = dec.draft_time_s + dec.verify_time_s
@@ -799,8 +1281,10 @@ class ServingEngine:
             dec.controller.k,
             max(0, max(s.remaining for s in self.slots if s.req) - 1),
         )
-        greedy, drafts, self.caches, k = dec.propose_and_verify(
-            self.params, self.caches, self.tokens, k_want
+        fault = self._fault_row(window=k_want + 1)
+        greedy, drafts, finite, self.caches, k = dec.propose_and_verify(
+            self.params, self.caches, self.tokens, k_want,
+            fault=jnp.asarray(fault),
         )
         self.steps += 1
         now = time.perf_counter()
@@ -808,9 +1292,19 @@ class ServingEngine:
         next_tok = tok0.copy()
         round_committed = round_acc = round_prop = 0
         to_retire = []
+        faulted: List[Request] = []
         for i, slot in enumerate(self.slots):
             if slot.req is None:
                 continue  # idle lanes drafted/verified into their trash rows
+            if not bool(finite[i]):
+                # Nonfinite verify logits: quarantine the lane, commit
+                # nothing (the whole window is suspect), leave its position
+                # at the round start. Co-resident lanes are unaffected —
+                # the guard is per lane.
+                slot.req.finish_reason = "error"
+                faulted.append(slot.req)
+                to_retire.append(i)
+                continue
             usable = min(k, slot.remaining - 1)  # drafts that could commit
             commit, n_acc = spec_mod.committed_tokens(drafts[i], greedy[i], k)
             used = 0
@@ -847,6 +1341,8 @@ class ServingEngine:
         self.tokens = jnp.asarray(next_tok, jnp.int32)[:, None]
         for i in to_retire:
             self._retire(i)
+        for r in faulted:
+            self._note_fault(r)  # after retirement: may rebuild the decoder
         # Mirror into the engine's warm decode counters so decode_tok_per_s
         # stays the end-to-end generation throughput under speculation.
         warm_delta = (dec.draft_time_s + dec.verify_time_s) - warm0
@@ -858,9 +1354,26 @@ class ServingEngine:
         return True
 
     def step(self):
-        """One engine iteration: admit from queue, decode one token for all
-        active slots (or run one speculation round), retire finished
-        requests."""
+        """One engine iteration: shed expired deadlines, admit from queue,
+        grow optimistic lanes (preempting on exhaustion), decode one token
+        for all active slots (or run one speculation round), retire finished
+        requests. Wrapped by the serving watchdog: every call is timed into
+        the step-time percentiles and heartbeats ``heartbeat_path``."""
+        self._step_timer.start()
+        try:
+            out = self._step_impl()
+        finally:
+            self._step_timer.stop()
+        if self._heartbeat is not None:
+            self._heartbeat.beat(
+                self.steps,
+                {"active": sum(1 for s in self.slots if s.req is not None),
+                 "queued": len(self.queue)},
+            )
+        return out
+
+    def _step_impl(self):
+        self._shed_expired()
         self._admit()
         if not any(s.req for s in self.slots):
             return False
@@ -872,18 +1385,24 @@ class ServingEngine:
         # sampled lanes retire.
         if self._spec is not None and not self._active_sampled():
             return self._spec_step()
+        # Optimistic growth: the next decode writes one position per lane.
+        self._ensure_capacity(1)
+        if not any(s.req for s in self.slots):
+            return True  # growth preempted every lane; re-admit next step
         n_active = sum(1 for s in self.slots if s.req)
         traces0 = self.decode_traces
         t0 = time.perf_counter()
         # Static per-round flag: greedy-only rounds skip the sampling branch
         # entirely (no sort/softmax over [B, V] per step). Both variants
         # compile at most once, so mixed workloads cannot retrace-thrash.
-        nxt, self.caches = self._decode(
+        nxt, finite, self.caches = self._decode(
             self.params, self.caches, self.tokens, self._samp_device(),
+            jnp.asarray(self._fault_row()),
             sampled=self._active_sampled(),
         )
         self.steps += 1
         nxt_np = np.asarray(nxt)  # sync point: decode step fully retired
+        finite_np = np.asarray(finite)
         elapsed = time.perf_counter() - t0
         now = time.perf_counter()
         if self.decode_traces > traces0:
@@ -891,8 +1410,17 @@ class ServingEngine:
         else:
             self.decode_time_s += elapsed
             self.decode_tokens_warm += n_active
+        faulted: List[Request] = []
         for i, slot in enumerate(self.slots):
             if slot.req is None:
+                continue
+            if not bool(finite_np[i]):
+                # Nonfinite logits: the lane's "token" is garbage — book
+                # nothing, quarantine the request, free the lane. Neighbour
+                # lanes' tokens are unaffected (the guard is per lane).
+                slot.req.finish_reason = "error"
+                faulted.append(slot.req)
+                self._retire(i)
                 continue
             tok = int(nxt_np[i, 0])
             slot.req.output.append(tok)
@@ -906,6 +1434,8 @@ class ServingEngine:
                 slot.req.finish_reason = "length"
                 self._retire(i)
         self.tokens = nxt
+        for r in faulted:
+            self._note_fault(r)
         return True
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -966,8 +1496,8 @@ class ServingEngine:
         return self.attn_kernel
 
     def engine_stats(self) -> EngineStats:
-        """The typed v5 stats record (``stats()`` is its flat dict view)."""
-        finished = [r for r in self.done if r.finish_reason != "cancelled"]
+        """The typed v6 stats record (``stats()`` is its flat dict view)."""
+        finished = [r for r in self.done if r.finish_reason in ("eos", "length")]
         lat = [
             r.t_done - r.t_submit for r in finished if r.t_done and r.t_submit
         ]
@@ -986,7 +1516,17 @@ class ServingEngine:
         alloc = self.allocator
         s = EngineStats(
             completed=len(finished),
-            cancelled=len(self.done) - len(finished),
+            cancelled=sum(
+                1 for r in self.done if r.finish_reason == "cancelled"
+            ),
+            preempted=self.preempted,
+            shed=self.shed,
+            timed_out=self.timed_out,
+            errors=self.errors,
+            kernel_fallbacks=self.kernel_fallbacks,
+            step_p50_ms=self._step_timer.percentile(50) * 1e3,
+            step_p95_ms=self._step_timer.percentile(95) * 1e3,
+            step_stalled=1.0 if self._step_timer.is_straggling else 0.0,
             decode_steps=self.steps,
             decoded_tokens=self.decoded_tokens,
             mean_latency_s=float(np.mean(lat)) if lat else 0.0,
@@ -1048,5 +1588,5 @@ class ServingEngine:
         return s
 
     def stats(self) -> Dict:
-        """The flat dict view of :meth:`engine_stats` (stats schema v5)."""
+        """The flat dict view of :meth:`engine_stats` (stats schema v6)."""
         return self.engine_stats().as_dict()

@@ -180,21 +180,27 @@ class SpecDecoder:
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             return nxt, new_caches
 
-        def verify_impl(params, caches, tokens):
+        def verify_impl(params, caches, tokens, fault):
             self.verify_traces += 1
             with layers.serving_mode(matmul_mode, kernel=matmul_kernel):
                 logits, new_caches = T.verify_step(
                     params, tokens, caches, cfg, attn_kernel=attn_kernel
                 )
+            # Nonfinite guard (engine fault injection enters through the
+            # same add): a lane whose verify logits contain NaN/Inf at any
+            # position is flagged — the engine commits nothing for it.
+            logits = logits + fault[:, None, None]
+            finite = jnp.all(jnp.isfinite(logits), axis=(1, 2))  # [B]
             greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # [B, Q]
-            return greedy, new_caches
+            return greedy, finite, new_caches
 
         self._draft = jax.jit(draft_impl)
         self._verify = jax.jit(verify_impl)  # one compile per distinct k
 
     # ------------------------------------------------------------------ round
 
-    def propose_and_verify(self, params, caches, tokens, k: Optional[int] = None):
+    def propose_and_verify(self, params, caches, tokens, k: Optional[int] = None,
+                           fault=None):
         """One speculation round over the whole decode batch.
 
         tokens: ``[B, 1]`` current per-lane tokens. Drafts ``k`` proposals
@@ -202,14 +208,19 @@ class SpecDecoder:
         engine clamps it to the largest remaining lane budget — drafting past
         every budget is pure waste), rewinds ``pos`` to the round start, then
         runs ONE target verify step over ``[B, k+1]``. ``k == 0`` degenerates
-        to a plain decode step through the verify jit. Returns ``(greedy
-        [B, k+1] np.int32, drafts [B, k] np.int32, caches, k)`` — caches hold
-        target-written K/V for every proposed position with ``pos`` advanced
-        past the window; the engine commits per lane and rewinds ``pos`` to
-        the committed positions.
+        to a plain decode step through the verify jit. ``fault`` is an
+        optional ``[B]`` float32 row added to every lane's verify logits
+        (zeros when ``None``) — the engine's fault-injection hook. Returns
+        ``(greedy [B, k+1] np.int32, drafts [B, k] np.int32, finite [B]
+        np.bool_, caches, k)`` — caches hold target-written K/V for every
+        proposed position with ``pos`` advanced past the window; the engine
+        commits per lane and rewinds ``pos`` to the committed positions,
+        committing nothing for a lane whose ``finite`` flag is False.
         """
         if k is None:
             k = self.controller.k
+        if fault is None:
+            fault = jnp.zeros((tokens.shape[0],), jnp.float32)
         pos0 = caches["pos"]
         traces0 = self.draft_traces + self.verify_traces
         t0 = time.perf_counter()
@@ -226,10 +237,11 @@ class SpecDecoder:
         # Rewind to the round start: verify re-scores (and re-writes, at
         # target precision) every drafted position.
         caches["pos"] = pos0
-        greedy, caches = self._verify(
-            params, caches, jnp.concatenate([tokens, draft_toks], axis=1)
+        greedy, finite, caches = self._verify(
+            params, caches, jnp.concatenate([tokens, draft_toks], axis=1), fault
         )
         np_greedy = np.asarray(greedy)  # sync: verify step fully retired
+        np_finite = np.asarray(finite)
         t2 = time.perf_counter()
         if self.draft_traces + self.verify_traces > traces0:
             self.compile_s += t2 - t0
@@ -237,7 +249,7 @@ class SpecDecoder:
             self.draft_time_s += t1 - t0
             self.verify_time_s += t2 - t1
         self.rounds += 1
-        return np_greedy, np_drafts, caches, k
+        return np_greedy, np_drafts, np_finite, caches, k
 
     def book_lane(self, n_accepted: int, n_committed: int, n_proposed: int) -> None:
         """Book one active lane's outcome for this round. ``n_proposed`` is

@@ -195,6 +195,9 @@ def test_stats_schema(dense_setup):
         # decode-attention path ("pallas"/"xla"; probed step time, 0.0
         # unless the engine was built with attn_probe=True)
         "attn_kernel", "attn_step_ms",
+        # overload safety + watchdog (stats schema v6)
+        "preempted", "shed", "timed_out", "errors", "kernel_fallbacks",
+        "step_p50_ms", "step_p95_ms", "step_stalled",
     ):
         assert key in s, key
     assert s["spec_enabled"] == 0.0
