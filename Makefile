@@ -10,9 +10,11 @@
 #   make example-smoke  streaming-facade example end to end (EngineConfig,
 #                     generate/TokenEvent, SamplingParams, cancel), then
 #                     again with an injected NaN (nonfinite-guard smoke)
-#   make bench-smoke  serving throughput smoke (baseline + spec-decode arm)
-#                     + paged-attention microbench + overload arm
+#   make bench-smoke  serving throughput smoke (baseline + spec-decode +
+#                     scheduler + compile-cache arms) + paged-attention
+#                     microbench + overload arm
 #                     -> results/BENCH_serving.json + BENCH_serving_spec.json
+#                        + BENCH_serving_sched.json
 #                        + BENCH_paged_attention.json
 #                        + BENCH_serving_overload.json
 #   make bench-attn   paged-attention decode microbench (kernel vs gather
@@ -21,12 +23,15 @@
 #                     admission: preemption bit-exactness vs the uncontended
 #                     oracle, deadline + shed sub-arms)
 #                     -> results/BENCH_serving_overload.json
+#   make bench-compare  regression gate: diff the fresh BENCH_serving.json
+#                     against the committed BENCH_baseline.json; fails on
+#                     >25% regression of itl_p50 / ttft_p50 / throughput
 #   make bench        every paper table + serving (slow; trains subjects once)
 
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-strict example-smoke bench-smoke bench-attn \
-	bench-overload bench
+	bench-overload bench-compare bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -51,6 +56,9 @@ bench-attn:
 
 bench-overload:
 	$(PY) -m benchmarks.serving_overload
+
+bench-compare:
+	$(PY) tools/compare_bench.py
 
 bench:
 	$(PY) -m benchmarks.run --quick

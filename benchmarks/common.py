@@ -304,7 +304,15 @@ def save_json(name: str, obj) -> None:
 # the oversubscribed arm lands as BENCH_serving_overload.json (optimistic
 # admission at ~50% of worst-case page demand, preemption bit-exactness
 # asserted against the uncontended oracle).
-BENCH_SCHEMA_VERSION = 6
+# v7: the continuous-batching step scheduler — engine stats gain
+# queue_wait_p50_s / queue_wait_p95_s and the sched_* counters (chunks,
+# budget-limited steps, aging promotions, peak step prefill tokens),
+# BENCH_serving adds compile_cache cold/warm prefill+decode compile seconds
+# (EngineConfig.compile_cache_dir), and the oversubscribed mixed-prompt
+# chunked-prefill arm lands as BENCH_serving_sched.json (token identity vs
+# the monolithic oracle, itl_p95 <= 2x itl_p50 tail bound, ttft_p95
+# improvement).
+BENCH_SCHEMA_VERSION = 7
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:

@@ -204,6 +204,19 @@ def main(argv=None):
         f"{stats['step_p95_ms']:.1f} ms"
         + (" | STALLED" if stats["step_stalled"] else "")
     )
+    print(
+        f"[serve] queue wait: p50 {stats['queue_wait_p50_s'] * 1e3:.0f} ms / "
+        f"p95 {stats['queue_wait_p95_s'] * 1e3:.0f} ms"
+    )
+    if stats.get("sched_prefill_budget"):
+        print(
+            f"[serve] scheduler: {stats['sched_policy']} | budget "
+            f"{stats['sched_prefill_budget']:.0f} tok/step | chunks "
+            f"{stats['sched_chunks']:.0f} | budget-limited steps "
+            f"{stats['sched_budget_limited_steps']:.0f} | aging promotions "
+            f"{stats['sched_aging_promotions']:.0f} | peak step prefill "
+            f"{stats['sched_peak_step_prefill_tokens']:.0f} tok"
+        )
 
     if args.compare_float and not args.float_serve:
         freqs = _make_requests(args.n_requests, cfg.vocab,

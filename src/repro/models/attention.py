@@ -173,7 +173,8 @@ def _window_static(qf, k, v, window, chunk, n_prefix):
     return jnp.concatenate(outs, axis=1)
 
 
-def _flash_over_kv(q, k, v, kind, q_pos, window, chunk, n_prefix, is_global=None):
+def _flash_over_kv(q, k, v, kind, q_pos, window, chunk, n_prefix, is_global=None,
+                   prefix_real=None):
     """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd] -> [B,Sq,H,hd]. f32 accumulators.
 
     ``q_pos``/key positions are *mask* positions over the concatenated
@@ -181,8 +182,13 @@ def _flash_over_kv(q, k, v, kind, q_pos, window, chunk, n_prefix, is_global=None
     prefix / meta tokens) are visible to every query. ``is_global`` (traced
     bool, optional) switches between full-causal and windowed masks at
     runtime — used when heterogeneous layers run under one lax.scan.
-    Pure-static sliding windows (is_global None, self-attention shapes)
-    route to :func:`_window_static` which skips invisible chunks outright.
+    ``prefix_real`` (traced scalar, optional): the prefix's *real* length
+    when the first ``n_prefix`` keys are a padded prefix — keys in
+    ``[prefix_real, n_prefix)`` are pad rows and masked out entirely (the
+    chunked-prefill scheduler pads prefix pages to pow2 buckets so chunk
+    calls share jit traces). Pure-static sliding windows (is_global None,
+    self-attention shapes) route to :func:`_window_static` which skips
+    invisible chunks outright.
     """
     b, sq, h, hd = q.shape
     sk, kv = k.shape[1], k.shape[2]
@@ -192,24 +198,29 @@ def _flash_over_kv(q, k, v, kind, q_pos, window, chunk, n_prefix, is_global=None
     # Keep operands in the compute dtype; accumulate in f32 inside the dots.
     qf = (q.astype(jnp.float32) * (hd ** -0.5)).astype(q.dtype)
     qf = qf.reshape(b, sq, kv, rep, hd)
-    if kind == "window" and is_global is None and sq == sk:
+    if kind == "window" and is_global is None and sq == sk and prefix_real is None:
         out = _window_static(qf, k, v, window, chunk, n_prefix)
         return out.reshape(b, sq, h, hd)
 
     def mask_for(k_pos):
         if kind == "full":
-            return jnp.zeros((sq, chunk), jnp.float32)
-        diff = q_pos[:, None] - k_pos[None, :]
-        causal = diff >= 0
-        if kind == "window":
-            win = causal & (diff < window)
-            if is_global is not None:
-                vis = jnp.where(is_global, causal, win)
-            else:
-                vis = win
+            vis = jnp.ones((sq, chunk), bool)
         else:
-            vis = causal
-        vis = vis | (k_pos[None, :] < n_prefix)  # prefix always visible
+            diff = q_pos[:, None] - k_pos[None, :]
+            causal = diff >= 0
+            if kind == "window":
+                win = causal & (diff < window)
+                if is_global is not None:
+                    vis = jnp.where(is_global, causal, win)
+                else:
+                    vis = win
+            else:
+                vis = causal
+            vis = vis | (k_pos[None, :] < n_prefix)  # prefix always visible
+        if prefix_real is not None:  # padded prefix: pad rows never visible
+            vis = vis & ~(
+                (k_pos[None, :] >= prefix_real) & (k_pos[None, :] < n_prefix)
+            )
         return jnp.where(vis, 0.0, NEG_INF)
 
     def body(carry, inp):
@@ -260,6 +271,7 @@ def attention(
     kv_prefix: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     is_global=None,
     n_prefix: int = 0,
+    prefix_len: Optional[jnp.ndarray] = None,
     return_kv: bool = False,
 ):
     """Full-sequence attention. x: [B, S, d]; positions: [B, S] (or [B,S,3]).
@@ -267,6 +279,8 @@ def attention(
     ``n_prefix`` marks the first N *sequence* tokens as always-visible
     (Hymba meta tokens flowing through the layers); ``kv_prefix`` is a
     separate learnable KV prefix concatenated on the key side only.
+    ``prefix_len`` (traced scalar): real length of a *padded* ``kv_prefix``
+    — rows past it are pad and masked invisible (chunked prefill).
     """
     b, s, _ = x.shape
     hd, h, kvh = cfg.hd, cfg.n_heads, cfg.n_kv_heads
@@ -315,7 +329,8 @@ def attention(
         vq = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
         q_pos = q_pos + pk.shape[1]
     out = _flash_over_kv(
-        q, kq, vq, kind, q_pos, window, cfg.attn_chunk, n_prefix, is_global
+        q, kq, vq, kind, q_pos, window, cfg.attn_chunk, n_prefix, is_global,
+        prefix_real=(prefix_len if kv_prefix is not None else None),
     )
     out = out.astype(x.dtype).reshape(b, s, h * hd)
     y = dense(params["wo"], out, name="attn_o")

@@ -138,7 +138,7 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
 
 
 def _block(cfg: ModelConfig, p, x, positions, layer_flag=None, *, return_kv=False,
-           kv_prefix=None):
+           kv_prefix=None, prefix_len=None):
     """One layer, full sequence.
 
     ``layer_flag``: hymba is-global switch — a static bool when layers run
@@ -149,13 +149,15 @@ def _block(cfg: ModelConfig, p, x, positions, layer_flag=None, *, return_kv=Fals
     ``kv_prefix`` (dense/moe only): cached K/V of an already-prefilled
     prompt prefix, concatenated on the key side — suffix-only prefill for
     the paged prefix cache (callers offset ``positions`` by the prefix len).
+    ``prefix_len`` (traced scalar, dense/moe only): real length of a padded
+    ``kv_prefix`` — pad rows are masked invisible (chunked prefill).
     """
     kind = "full" if not cfg.causal else "causal"
     if cfg.block in ("dense", "moe"):
         h = _norm(cfg, p["norm1"], x)
         a = attention(
             p["attn"], h, cfg, positions=positions, kind=kind,
-            return_kv=return_kv, kv_prefix=kv_prefix,
+            return_kv=return_kv, kv_prefix=kv_prefix, prefix_len=prefix_len,
         )
         kv = None
         if return_kv:
@@ -612,6 +614,105 @@ def prefill_with_cache(
     return logical(last, "batch", "vocab"), caches
 
 
+def prefill_chunk_with_cache(
+    params,
+    tokens: jnp.ndarray,
+    cfg: ModelConfig,
+    caches,
+    *,
+    start: jnp.ndarray,
+    length: jnp.ndarray,
+    prefix_pad: int,
+):
+    """One budgeted prefill chunk against an unpaged decode cache (b=1).
+
+    tokens: ``[1, S_bucket]`` — this chunk's prompt tokens, zero-padded to
+    the jit bucket; ``start`` (traced scalar): tokens already committed to
+    ``caches`` (the chunk's absolute offset); ``length``: ``[1]`` real chunk
+    length; ``prefix_pad`` (static): cache rows ``[0, prefix_pad)`` are
+    attended as the chunk's prefix, with rows past ``start`` masked
+    invisible and zero-selected — so every chunk whose committed prefix
+    rounds into the same pow2 bucket shares one jit trace (the unpaged twin
+    of :func:`prefill_into_pages` with padded ``prefix_ids``).
+
+    Returns (last-real-token logits ``[1, V]``, updated caches with ``pos``
+    advanced to ``start + length``). K/V rows land at absolute positions
+    ``[start, start + S_bucket)`` via a drop-mode scatter; bucket-pad rows
+    past the real length hold garbage that the next chunk (or decode)
+    overwrites before any masked read can see it — exactly the
+    :func:`prefill_with_cache` pad contract.
+    """
+    from .attention import _quant_rows
+
+    if cfg.block not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"chunked prefill: attention archs only, got {cfg.block}"
+        )
+    b, s = tokens.shape
+    if b != 1:
+        raise ValueError("chunked prefill is per-request (b=1 scratch cache)")
+    st = jnp.asarray(start, jnp.int32).reshape(())
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+
+    x = embed(params["embed"], tokens)
+    x = logical(x, "batch", "seq", "embed")
+    positions = _positions(cfg, b, s, offset=st)
+    idx = st + jnp.arange(s)
+
+    new_layers = []
+    for i in range(cfg.n_layers):
+        p = jax.tree.map(lambda a: a[i], params["layers"])
+        cache = caches["layers"][i]["attn"]
+        kv_prefix = None
+        if prefix_pad:
+            pk = jnp.swapaxes(cache["k"][:, :, :prefix_pad, :], 1, 2)
+            pv = jnp.swapaxes(cache["v"][:, :, :prefix_pad, :], 1, 2)
+            if cache["k"].dtype == jnp.int8:
+                ks = jnp.swapaxes(cache["k_scale"][:, :, :prefix_pad], 1, 2)
+                vs = jnp.swapaxes(cache["v_scale"][:, :, :prefix_pad], 1, 2)
+                pk = pk.astype(jnp.float32) * ks[..., None]
+                pv = pv.astype(jnp.float32) * vs[..., None]
+            # Rows past the commit point are stale (earlier bucket pads) —
+            # zero-select so the masked softmax sees finite scores.
+            row_ok = (jnp.arange(prefix_pad) < st)[None, :, None, None]
+            kv_prefix = (jnp.where(row_ok, pk, 0.0), jnp.where(row_ok, pv, 0.0))
+        # The exact forward body (_block) — chunked prefill cannot drift
+        # from forward/decode_step structure.
+        x, (k, v) = _block(cfg, p, x, positions, return_kv=True,
+                           kv_prefix=kv_prefix,
+                           prefix_len=(st if prefix_pad else None))
+        k_t = jnp.swapaxes(k, 1, 2)
+        v_t = jnp.swapaxes(v, 1, 2)
+        if cache["k"].dtype == jnp.int8:
+            k_q, k_s = _quant_rows(k_t)
+            v_q, v_s = _quant_rows(v_t)
+            new = {
+                "k": cache["k"].at[:, :, idx, :].set(k_q, mode="drop"),
+                "v": cache["v"].at[:, :, idx, :].set(v_q, mode="drop"),
+                "k_scale": cache["k_scale"].at[:, :, idx].set(k_s, mode="drop"),
+                "v_scale": cache["v_scale"].at[:, :, idx].set(v_s, mode="drop"),
+            }
+        else:
+            new = {
+                "k": cache["k"].at[:, :, idx, :].set(
+                    k_t.astype(cache["k"].dtype), mode="drop"
+                ),
+                "v": cache["v"].at[:, :, idx, :].set(
+                    v_t.astype(cache["v"].dtype), mode="drop"
+                ),
+            }
+        new_layers.append({"attn": new})
+
+    x = _norm(cfg, params["final_norm"], x)
+    last_h = jnp.take_along_axis(
+        x, (length - 1)[:, None, None].astype(jnp.int32), axis=1
+    )
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    last = dense(head, last_h, name="lm_head")[:, 0, :]
+    new_caches = {"layers": new_layers, "pos": st + length}
+    return logical(last, "batch", "vocab"), new_caches
+
+
 def prefill_into_pages(
     params,
     tokens: jnp.ndarray,
@@ -621,6 +722,7 @@ def prefill_into_pages(
     *,
     length: jnp.ndarray,
     prefix_ids: jnp.ndarray,
+    prefix_len: Optional[jnp.ndarray] = None,
 ):
     """Chunked prefill straight into the paged KV cache (one request).
 
@@ -633,6 +735,13 @@ def prefill_into_pages(
     ``kv_prefix`` key-side concat (every suffix query is causally after the
     whole prefix, so "always visible" is exact). ``pools``: list of per-layer
     page pools. Returns (last-token logits ``[1, V]``, updated pools).
+
+    ``prefix_len`` (``[1]`` traced, optional): the real prefix length when
+    ``prefix_ids`` is *padded* with trash pages to a pow2 page bucket — the
+    budgeted chunk scheduler pads so successive chunks of one prompt share
+    jit traces instead of compiling one trace per prefix size. Pad rows are
+    zero-selected after the gather and masked invisible in attention, so
+    they contribute exact zeros to the online softmax.
 
     Prefix reuse is what makes a repeated system prompt prefill once: the
     suffix forward is the only model compute this function runs.
@@ -648,18 +757,29 @@ def prefill_into_pages(
         raise ValueError("paged prefill is per-request (page_ids are per-seq)")
     n_hit = prefix_ids.shape[0] * pools[0]["k"].shape[2]
     length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    p_len = None
+    if prefix_len is not None and n_hit:
+        p_len = jnp.asarray(prefix_len, jnp.int32).reshape(())
 
     x = embed(params["embed"], tokens)
     x = logical(x, "batch", "seq", "embed")
-    positions = _positions(cfg, b, s, offset=n_hit)
+    positions = _positions(cfg, b, s, offset=(n_hit if p_len is None else p_len))
 
     new_pools = []
     for i in range(cfg.n_layers):
         p = jax.tree.map(lambda a: a[i], params["layers"])
         kv_prefix = _kvc.gather_prefix(pools[i], prefix_ids) if n_hit else None
+        if kv_prefix is not None and p_len is not None:
+            # Trash-page pad rows may hold arbitrary stale K/V (even NaN from
+            # a quarantined lane) — zero-select them so the masked softmax
+            # sees finite scores.
+            pk, pv = kv_prefix
+            row_ok = (jnp.arange(n_hit) < p_len)[None, :, None, None]
+            kv_prefix = (jnp.where(row_ok, pk, 0.0), jnp.where(row_ok, pv, 0.0))
         # The exact forward body (_block) — paged prefill cannot drift from
         # forward/decode_step structure.
-        x, (k, v) = _block(cfg, p, x, positions, return_kv=True, kv_prefix=kv_prefix)
+        x, (k, v) = _block(cfg, p, x, positions, return_kv=True,
+                           kv_prefix=kv_prefix, prefix_len=p_len)
         new_pools.append(_kvc.write_prompt_pages(pools[i], k, v, page_ids))
 
     x = _norm(cfg, params["final_norm"], x)

@@ -269,6 +269,45 @@ class EngineConfig:
             "rejects with EngineOverloaded and finish_reason='shed'",
         },
     )
+    sched_policy: str = dataclasses.field(
+        default="fifo",
+        metadata={
+            "help": "admission/chunk ordering: fifo = submit order; sjf = "
+            "shortest remaining prefill first (aged requests are promoted "
+            "ahead after sched_aging_steps engine steps in queue)",
+            "choices": ["fifo", "sjf"],
+        },
+    )
+    prefill_budget: int = dataclasses.field(
+        default=0,
+        metadata={
+            "help": "max prefill tokens per engine step (0 = legacy "
+            "monolithic prefill); > 0 chunks prompts so decode lanes never "
+            "wait behind a whole prompt",
+        },
+    )
+    chunk_size: int = dataclasses.field(
+        default=64,
+        metadata={
+            "help": "prefill chunk length in tokens (multiple of page_size "
+            "when paged; only used when prefill_budget > 0)",
+        },
+    )
+    sched_aging_steps: int = dataclasses.field(
+        default=64,
+        metadata={
+            "help": "anti-starvation bound: a queued request older than this "
+            "many engine steps is ordered ahead of policy order (sjf cannot "
+            "starve long prompts)",
+        },
+    )
+    compile_cache_dir: str = dataclasses.field(
+        default="",
+        metadata={
+            "help": "JAX persistent compilation cache directory ('' = off); "
+            "warm restarts skip the multi-second prefill/decode compiles",
+        },
+    )
     heartbeat_path: str = dataclasses.field(
         default="",
         metadata={
@@ -307,6 +346,36 @@ class EngineConfig:
             )
         if self.max_queue < 0:
             raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        if self.sched_policy not in ("fifo", "sjf"):
+            raise ValueError(
+                f"sched_policy must be fifo|sjf, got {self.sched_policy!r}"
+            )
+        if self.prefill_budget < 0:
+            raise ValueError(
+                f"prefill_budget must be >= 0, got {self.prefill_budget}"
+            )
+        if self.prefill_budget:
+            if self.chunk_size < 1:
+                raise ValueError(
+                    "chunk_size must be >= 1 when prefill_budget > 0, "
+                    f"got {self.chunk_size}"
+                )
+            if self.prefill_budget < self.chunk_size:
+                raise ValueError(
+                    "prefill_budget must be >= chunk_size (each step must "
+                    f"fit one chunk), got budget {self.prefill_budget} < "
+                    f"chunk {self.chunk_size}"
+                )
+            if self.paged is not False and self.chunk_size % self.page_size:
+                raise ValueError(
+                    "chunk_size must be a multiple of page_size for paged "
+                    f"engines, got chunk {self.chunk_size} / page "
+                    f"{self.page_size}"
+                )
+        if self.sched_aging_steps < 1:
+            raise ValueError(
+                f"sched_aging_steps must be >= 1, got {self.sched_aging_steps}"
+            )
         if self.spec is not None and not isinstance(self.spec, SpecConfig):
             raise TypeError(f"spec must be a SpecConfig, got {type(self.spec)}")
         if not isinstance(self.kernels, KernelConfig):

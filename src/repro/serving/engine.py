@@ -34,6 +34,18 @@ float model in low precision. This engine is that provider's serving loop:
 * **prefill** — *chunked*: the prompt suffix (zero-padded to a pow2 bucket)
   runs through one jitted call — O(1) jitted calls per request. SSM/hybrid
   blocks fall back to decode-step replay;
+* **step scheduler** (``EngineConfig.prefill_budget > 0``, PR 7) — prefill
+  is *budgeted*: prompts split into ``chunk_size``-token chunks fed through
+  the step loop, each step packing all live decode lanes plus at most
+  ``prefill_budget`` prefill tokens, so no decode token waits behind a
+  whole prompt (``serving.scheduler.StepScheduler`` owns the policy:
+  ``sched_policy`` fifo/sjf with a ``sched_aging_steps`` anti-starvation
+  bound). Mid-prefill lanes are invisible to decode (trash table row),
+  pause speculation rounds, and are first-class preemption victims (their
+  full prefilled pages are registered, so re-admission resumes from the
+  prefix cache). Interleaved greedy output is token-identical to the
+  uninterleaved (``prefill_budget=0``) oracle — paged + unpaged, dense +
+  MoE, spec on/off;
 * **self-speculative decoding** (``EngineConfig.spec``, dense/moe) — the
   quantized model drafts ``k`` greedy tokens per lane, the target verifies
   all ``k+1`` positions in one step (``serving.spec_decode``). Greedy
@@ -58,11 +70,10 @@ float model in low precision. This engine is that provider's serving loop:
   pallas->xla attention fallback after repeated faults), and a watchdog
   (``runtime.health.StepTimer`` / ``HeartbeatMonitor``) surfaces step-time
   p50/p95 and a stall flag;
-* **stats** — a typed :class:`EngineStats` (schema v6: v5 plus the overload
-  counters ``preempted`` / ``shed`` / ``timed_out`` / ``errors`` /
-  ``kernel_fallbacks`` and the watchdog ``step_p50_ms`` / ``step_p95_ms`` /
-  ``step_stalled``; ``completed`` now counts *successful* terminals only —
-  eos/length); ``stats()`` keeps returning the flat dict view.
+* **stats** — a typed :class:`EngineStats` (schema v7: v6 plus the
+  scheduler counters ``sched_*`` and the queue-wait percentiles
+  ``queue_wait_p50_s`` / ``queue_wait_p95_s``); ``stats()`` keeps
+  returning the flat dict view.
 
 Trace counters (``prefill_traces`` / ``decode_traces`` bump only while jit
 is tracing) let benchmarks assert the compile story: a request must cost
@@ -89,6 +100,7 @@ from . import kv_cache as kvc
 from . import sampling as sampling_mod
 from . import spec_decode as spec_mod
 from .config import EngineConfig, KernelChoice, KernelConfig, SamplingParams
+from .scheduler import StepScheduler
 
 __all__ = [
     "Request",
@@ -137,6 +149,7 @@ class Request:
     # Filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
+    t_admit: float = 0.0  # first admission into a lane (queue-wait stats)
     t_first_token: float = 0.0
     t_done: float = 0.0
     t_tokens: List[float] = dataclasses.field(default_factory=list)
@@ -162,22 +175,24 @@ class TokenEvent:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Typed serving counters (stats schema v6, frozen).
+    """Typed serving counters (stats schema v7, frozen).
 
     The dict view (:meth:`as_dict`, what ``ServingEngine.stats()`` returns)
     is the stable cross-PR schema consumed by benchmarks — append fields,
-    never rename. v6 additions over v5 (the overload-safety layer):
-    ``preempted`` (lanes evicted under optimistic admission and requeued
-    for bit-exact recompute), ``shed`` (bounded-queue rejections),
-    ``timed_out`` (deadline expiries, queued or active), ``errors``
-    (nonfinite-logit quarantines), ``kernel_fallbacks`` (automatic
-    pallas->xla attention downgrades after repeated faults), and the
-    watchdog ``step_p50_ms`` / ``step_p95_ms`` / ``step_stalled``.
-    Semantics change: ``completed`` counts *successful* terminals only
-    (eos/length); v5 counted every non-cancelled terminal, but v5 had no
-    unsuccessful reasons besides ``cancelled``, so the two definitions
-    agree on every v5 stream. Mean/percentile latencies are booked over
-    successful terminals only.
+    never rename. v7 additions over v6 (the continuous-batching scheduler):
+    ``queue_wait_p50_s`` / ``queue_wait_p95_s`` (submit -> first lane
+    admission, over every admitted terminal), ``sched_policy``,
+    ``sched_prefill_budget``, ``sched_chunks`` (budgeted prefill chunk
+    calls), ``sched_budget_limited_steps`` (steps where prefill work
+    remained but the token budget was exhausted),
+    ``sched_aging_promotions`` (requests promoted past sjf order by the
+    anti-starvation bound), and ``sched_peak_step_prefill_tokens`` (max
+    prefill tokens any single step ran — always <= the budget). v6 added
+    the overload counters ``preempted`` / ``shed`` / ``timed_out`` /
+    ``errors`` / ``kernel_fallbacks``, the watchdog ``step_p50_ms`` /
+    ``step_p95_ms`` / ``step_stalled``, and narrowed ``completed`` to
+    *successful* terminals only (eos/length). Mean/percentile latencies
+    are booked over successful terminals only.
     """
 
     completed: int = 0
@@ -233,6 +248,14 @@ class EngineStats:
     spec_draft_time_s: float = 0.0
     spec_verify_time_s: float = 0.0
     spec_compile_s: float = 0.0
+    queue_wait_p50_s: float = 0.0
+    queue_wait_p95_s: float = 0.0
+    sched_policy: str = "fifo"
+    sched_prefill_budget: float = 0.0
+    sched_chunks: float = 0.0
+    sched_budget_limited_steps: float = 0.0
+    sched_aging_promotions: float = 0.0
+    sched_peak_step_prefill_tokens: float = 0.0
 
     def as_dict(self) -> Dict:
         return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
@@ -244,10 +267,43 @@ class _Slot:
     remaining: int = 0
     pages: List[int] = dataclasses.field(default_factory=list)
     seq: int = 0  # install order: preemption always evicts the youngest
+    # Budgeted-prefill phase (EngineConfig.prefill_budget > 0): prompt
+    # tokens already prefilled, or -1 once the lane is decoding. Mid-prefill
+    # lanes are decode-invisible (trash table row, pos 0, greedy sampling).
+    prefill_pos: int = -1
+    keys: List[bytes] = dataclasses.field(default_factory=list)  # prompt
+    # chain keys (paged): full pages register as their chunk completes
+    scratch: Optional[Dict] = None  # unpaged chunking: b=1 prefill cache
+
+    @property
+    def prefilling(self) -> bool:
+        return self.req is not None and self.prefill_pos >= 0
 
 
 def _percentile(values: Sequence[float], q: float) -> float:
     return float(np.percentile(np.asarray(values, np.float64), q)) if values else 0.0
+
+
+def _enable_compile_cache(cache_dir: str) -> None:
+    """Point JAX's persistent compilation cache at ``cache_dir`` (process
+    global — compile caching is a process property, not an engine one; the
+    last engine built wins, which is harmless since entries are keyed by
+    computation). Thresholds drop to zero so even the small smoke-config
+    traces persist; best-effort — a jaxlib without the knobs serves cold.
+
+    The memoized cache handle must be dropped first: jax initializes the
+    persistent cache once, lazily, at the first compile — in a process
+    that already compiled something before this engine existed, a bare
+    ``jax.config.update`` is silently ignored."""
+    try:
+        from jax.experimental.compilation_cache import compilation_cache
+
+        compilation_cache.reset_cache()
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    except Exception:
+        pass
 
 
 def _fold_legacy_kwargs(config: Optional[EngineConfig], legacy: Dict) -> EngineConfig:
@@ -311,6 +367,8 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.config = config
+        if config.compile_cache_dir:
+            _enable_compile_cache(config.compile_cache_dir)
         self.max_batch = config.max_batch
         self.max_len = config.max_len
         self.matmul_mode = config.matmul_mode
@@ -382,6 +440,16 @@ class ServingEngine:
         self.errors = 0
         self.kernel_fallbacks = 0
         self._install_seq = 0  # monotonic install stamp (victim selection)
+        # Continuous-batching step scheduler (PR 7): admission ordering for
+        # every engine; budgeted chunked prefill when prefill_budget > 0.
+        self.chunked = config.prefill_budget > 0
+        self._sched = StepScheduler(
+            policy=config.sched_policy,
+            aging_steps=config.sched_aging_steps,
+            prefill_budget=config.prefill_budget,
+            chunk_size=config.chunk_size,
+        )
+        self._preempted_uids: set = set()  # resumes outrank policy order
         self._fault_at: Dict[int, int] = {}  # uid -> output index to poison
         self._fault_streak = 0  # consecutive quarantined requests (no
         # healthy eos/length completion in between) on this kernel
@@ -426,6 +494,10 @@ class ServingEngine:
         self._prefill_cache: Dict[Tuple, Callable] = {}
         # Preemption-resume replay jits, keyed by token bucket (b=1).
         self._replay_cache: Dict[int, Callable] = {}
+        # Budgeted chunk-prefill jits: (token bucket, prefix pad, sampled).
+        # The prefix pad is pow2-bucketed and the real prefix length traced,
+        # so successive chunks of one prompt share traces.
+        self._chunk_cache: Dict[Tuple, Callable] = {}
 
     # ------------------------------------------------------------- internals
 
@@ -530,8 +602,64 @@ class ServingEngine:
         self._prefill_cache[key] = fn
         return fn
 
-    def _book_prefill(self, n_tokens: int, elapsed: float, traced: bool):
-        self.prefill_requests += 1
+    def _prefill_chunk_fn(self, key) -> Callable:
+        """Budgeted-chunk prefill jit. key: (token bucket, prefix pad,
+        sampled) — the pad (pages when paged, cache rows when not) is the
+        pow2-rounded size of the already-prefilled prefix; the *real*
+        prefix length is traced, so every chunk whose prefix rounds into
+        the same bucket reuses one trace instead of compiling per prefix
+        size (the monolithic ``_prefill_fn`` keys on the exact hit count)."""
+        fn = self._chunk_cache.get(key)
+        if fn is not None:
+            return fn
+        sampled = key[-1]
+        if self.paged:
+
+            def impl(params, tokens, length, page_ids, prefix_ids, prefix_len,
+                     pools, samp, samp_pos):
+                self.prefill_traces += 1
+                with layers.serving_mode(
+                    self.matmul_mode, kernel=self.matmul_kernel
+                ):
+                    logits, new_pools = T.prefill_into_pages(
+                        params, tokens, self.cfg, pools, page_ids,
+                        length=length, prefix_ids=prefix_ids,
+                        prefix_len=prefix_len,
+                    )
+                finite = jnp.all(jnp.isfinite(logits), axis=-1)
+                if sampled:
+                    nxt = sampling_mod.sample_tokens(logits, samp, samp_pos)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, finite, new_pools
+
+        else:
+            prefix_pad = key[1]
+
+            def impl(params, tokens, length, start, scratch, samp, samp_pos):
+                self.prefill_traces += 1
+                with layers.serving_mode(
+                    self.matmul_mode, kernel=self.matmul_kernel
+                ):
+                    logits, new_scratch = T.prefill_chunk_with_cache(
+                        params, tokens, self.cfg, scratch,
+                        start=start, length=length, prefix_pad=prefix_pad,
+                    )
+                finite = jnp.all(jnp.isfinite(logits), axis=-1)
+                if sampled:
+                    nxt = sampling_mod.sample_tokens(logits, samp, samp_pos)
+                else:
+                    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return nxt, finite, new_scratch
+
+        fn = jax.jit(impl)
+        self._chunk_cache[key] = fn
+        return fn
+
+    def _book_prefill(self, n_tokens: int, elapsed: float, traced: bool,
+                      new_request: bool = True):
+        if new_request:
+            self.prefill_requests += 1
         self.prefill_tokens += n_tokens
         if traced:
             self.prefill_compile_s += elapsed  # first hit of a bucket/shape
@@ -708,6 +836,12 @@ class ServingEngine:
         """Admit ``req`` into lane ``slot_idx``. Returns False — leaving the
         request queued — only when the page pool can't hold it (backpressure);
         the lane stays free if the request finishes at its first token."""
+        if self.chunked and not req.output:
+            # Budgeted prefill: reserve resources only — the scheduler's
+            # chunk plan runs the prompt through the step loop. Requests
+            # carrying committed output (decode-phase preemptees) resume
+            # through the replay path below.
+            return self._install_chunked(slot_idx, req)
         if self.paged:
             return self._install_paged(slot_idx, req)
         sp = req.sampling or _GREEDY
@@ -719,10 +853,22 @@ class ServingEngine:
             return True
         if self._finish_first_token(req, first):
             return True
+        self._adopt_scratch(slot_idx, scratch)
+        self.tokens = self.tokens.at[slot_idx, 0].set(first)
+        self.slots[slot_idx] = _Slot(
+            req=req, remaining=req.max_new_tokens - 1, seq=self._install_seq
+        )
+        self._install_seq += 1
+        self._set_lane_sampling(slot_idx, sp)
+        return True
 
-        # Copy the scratch single-slot cache into row ``slot_idx`` of the
-        # engine caches (KV layouts differ per block type; tree_map handles
-        # every leaf uniformly on the batch axis 0, except scalars).
+    def _adopt_scratch(self, slot_idx: int, scratch) -> None:
+        """Copy a b=1 prefill scratch cache into row ``slot_idx`` of the
+        engine caches (KV layouts differ per block type; tree_map handles
+        every leaf uniformly on the batch axis 0, except scalars). The
+        per-slot position resumes exactly at the scratch position; other
+        slots are untouched (mixed-length admission is exact)."""
+
         def put(dst, src):
             if getattr(dst, "ndim", 0) == 0:
                 return dst
@@ -732,16 +878,7 @@ class ServingEngine:
         scr_layers = scratch["layers"]
         for li in range(len(eng_layers)):
             eng_layers[li] = jax.tree.map(put, eng_layers[li], scr_layers[li])
-        # Per-slot position: this slot resumes exactly at its prompt length;
-        # other slots are untouched (mixed-length admission is exact).
         self.caches["pos"] = self.caches["pos"].at[slot_idx].set(scratch["pos"][0])
-        self.tokens = self.tokens.at[slot_idx, 0].set(first)
-        self.slots[slot_idx] = _Slot(
-            req=req, remaining=req.max_new_tokens - 1, seq=self._install_seq
-        )
-        self._install_seq += 1
-        self._set_lane_sampling(slot_idx, sp)
-        return True
 
     def _need_install(self, n_committed: int, need_total: int) -> int:
         """Pages granted at install time: the full worst-case reservation
@@ -887,6 +1024,261 @@ class ServingEngine:
         self._set_lane_sampling(slot_idx, sp)
         return True
 
+    # ------------------------------------------------- chunked prefill (PR 7)
+
+    def _is_resume(self, req: Request) -> bool:
+        """True for requests re-queued by preemption: decode-phase victims
+        carry committed output; mid-prefill victims have no output yet, so
+        the engine remembers their uids explicitly."""
+        return bool(req.output) or req.uid in self._preempted_uids
+
+    def _install_chunked(self, slot_idx: int, req: Request) -> bool:
+        """Budgeted admission: reserve the lane (and, when paged, its page
+        worst case) *without running any prefill compute* — the scheduler's
+        per-step chunk plan (:meth:`_run_chunk_plan`) drains the prompt
+        through the engine step loop. The lane is decode-invisible until
+        its final chunk: trash table row, position 0, greedy sampling."""
+        prompt = np.asarray(req.prompt, np.int64)
+        n = len(prompt)
+        self._validate_prompt_len(n)
+        if self.paged:
+            ps = self.page_size
+            need_total = min(
+                kvc.pages_needed(n + req.max_new_tokens, ps),
+                self.max_pages_per_seq,
+            )
+            need_install = self._need_install(n, need_total)
+            max_hit = (n - 1) // ps  # the final chunk must keep >= 1 token
+            if self.allocator.available() < need_install - max_hit:
+                return False  # fail fast before the O(prompt) hash work
+            hit_ids, keys = self.allocator.match_prefix(prompt, max_hit)
+            need_new = need_install - len(hit_ids)
+            if self.allocator.available() < need_new:
+                self.allocator.release(hit_ids)  # un-retain; stay queued
+                return False
+            self.allocator.note_prefix_stats(len(hit_ids), n // ps)
+            row_ids = hit_ids + self.allocator.alloc(need_new)
+            self.slots[slot_idx] = _Slot(
+                req=req, remaining=req.max_new_tokens, pages=row_ids,
+                seq=self._install_seq, prefill_pos=len(hit_ids) * ps,
+                keys=keys,
+            )
+        else:
+            scratch = T.init_cache(self.cfg, 1, self.max_len, dtype=jnp.float32)
+            self.slots[slot_idx] = _Slot(
+                req=req, remaining=req.max_new_tokens, seq=self._install_seq,
+                prefill_pos=0, scratch=scratch,
+            )
+        self._install_seq += 1
+        self.prefill_requests += 1  # chunks book new_request=False
+        return True
+
+    def _run_chunk_plan(self) -> None:
+        """Run this step's prefill chunk grants (at most ``prefill_budget``
+        tokens total) over every mid-prefill lane."""
+        lanes = [
+            (i, len(s.req.prompt) - s.prefill_pos, s.seq)
+            for i, s in enumerate(self.slots)
+            if s.prefilling
+        ]
+        if not lanes:
+            return
+        for slot_idx, grant in self._sched.plan_chunks(lanes):
+            if not self.slots[slot_idx].prefilling:
+                continue  # quarantined by an earlier chunk this step
+            if self.paged:
+                self._run_chunk_paged(slot_idx, grant)
+            elif self.cfg.block in ("dense", "moe"):
+                self._run_chunk_unpaged(slot_idx, grant)
+            else:
+                self._run_chunk_replay(slot_idx, grant)
+
+    def _run_chunk_paged(self, slot_idx: int, grant: int) -> None:
+        """One chunk of lane ``slot_idx``'s prompt straight into its pages.
+
+        ``prefill_pos`` is page-aligned for every non-final chunk (install
+        starts at a page boundary; intermediate grants are whole chunks and
+        ``chunk_size % page_size == 0``), so the chunk's pages are exactly
+        ``pages[start/ps : ...]`` and its prefix is exactly ``pages[:start/ps]``
+        — padded to a pow2 page count with the real token length traced, so
+        chunks share jit traces across prefix sizes."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        prompt = np.asarray(req.prompt, np.int64)
+        n = len(prompt)
+        start = slot.prefill_pos
+        end = start + grant
+        final = end >= n
+        sp = req.sampling or _GREEDY
+        ps = self.page_size
+        bucket = self._prefill_bucket(grant)
+        nb = bucket // ps
+        p0 = start // ps
+        ids = np.full((nb,), kvc.TRASH_PAGE, np.int32)
+        have = slot.pages[p0 : p0 + nb]
+        ids[: len(have)] = have  # bucket pads past the need write to trash
+        pp = 0
+        if p0:
+            pp = 1
+            while pp < p0:
+                pp *= 2
+        pref = np.full((pp,), kvc.TRASH_PAGE, np.int32)
+        pref[:p0] = slot.pages[:p0]
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :grant] = prompt[start:end]
+        pools = [layer["attn"] for layer in self.caches["layers"]]
+        traces0 = self.prefill_traces
+        t0 = time.perf_counter()
+        nxt, finite, new_pools = self._prefill_chunk_fn(
+            (bucket, pp, not sp.greedy)
+        )(
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray([grant], jnp.int32),
+            jnp.asarray(ids),
+            jnp.asarray(pref),
+            jnp.asarray(start, jnp.int32),
+            pools,
+            self._samp_one(sp),
+            jnp.asarray([n - 1], jnp.int32),
+        )
+        self.prefill_calls += 1
+        finite = bool(finite[0])
+        self.caches["layers"] = [{"attn": p} for p in new_pools]
+        elapsed = time.perf_counter() - t0
+        self._book_prefill(
+            grant, elapsed, self.prefill_traces > traces0, new_request=False
+        )
+        if not finite:
+            self.allocator.release(slot.pages)
+            self.slots[slot_idx] = _Slot()
+            self._quarantine(req)
+            return
+        # Publish the full prompt pages this chunk completed — preemption
+        # of a half-prefilled lane then resumes from the prefix cache.
+        for j in range(p0, min(end, n) // ps):
+            self.allocator.register(slot.keys[j], slot.pages[j])
+        slot.prefill_pos = end
+        if not final:
+            return
+        first = int(nxt[0])
+        if self._finish_first_token(req, first):
+            self.allocator.release(slot.pages)  # registered stay hit-able
+            self.slots[slot_idx] = _Slot()
+            return
+        row = np.full((self.max_pages_per_seq,), kvc.TRASH_PAGE, np.int32)
+        row[: len(slot.pages)] = slot.pages
+        self.caches["table"] = (
+            self.caches["table"].at[slot_idx].set(jnp.asarray(row))
+        )
+        self.caches["pos"] = self.caches["pos"].at[slot_idx].set(n)
+        self.tokens = self.tokens.at[slot_idx, 0].set(first)
+        slot.remaining = req.max_new_tokens - 1
+        slot.prefill_pos = -1
+        slot.keys = []
+        self._set_lane_sampling(slot_idx, sp)
+
+    def _run_chunk_unpaged(self, slot_idx: int, grant: int) -> None:
+        """Chunk into the lane's b=1 scratch cache (attention archs); the
+        finished scratch is adopted into the engine caches at finalize —
+        the chunked twin of the monolithic unpaged install."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        prompt = np.asarray(req.prompt, np.int64)
+        n = len(prompt)
+        start = slot.prefill_pos
+        end = start + grant
+        sp = req.sampling or _GREEDY
+        bucket = self._prefill_bucket(grant)
+        prefix_pad = 0
+        if start:
+            prefix_pad = 8
+            while prefix_pad < start:
+                prefix_pad *= 2
+            prefix_pad = min(prefix_pad, self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :grant] = prompt[start:end]
+        traces0 = self.prefill_traces
+        t0 = time.perf_counter()
+        nxt, finite, slot.scratch = self._prefill_chunk_fn(
+            (bucket, prefix_pad, not sp.greedy)
+        )(
+            self.params,
+            jnp.asarray(toks),
+            jnp.asarray([grant], jnp.int32),
+            jnp.asarray(start, jnp.int32),
+            slot.scratch,
+            self._samp_one(sp),
+            jnp.asarray([n - 1], jnp.int32),
+        )
+        self.prefill_calls += 1
+        elapsed = time.perf_counter() - t0
+        self._book_prefill(
+            grant, elapsed, self.prefill_traces > traces0, new_request=False
+        )
+        if end >= n:
+            self._finalize_unpaged(slot_idx, int(nxt[0]), bool(finite[0]))
+        else:
+            if not bool(finite[0]):
+                self.slots[slot_idx] = _Slot()
+                self._quarantine(req)
+                return
+            slot.prefill_pos = end
+
+    def _run_chunk_replay(self, slot_idx: int, grant: int) -> None:
+        """SSM/hybrid chunk: the monolithic path replays the prompt through
+        the decode step one token at a time, so a chunk is just a bounded
+        run of the same loop on the lane's scratch — identical calls in
+        identical order, only interleaved with decode steps."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        prompt = np.asarray(req.prompt, np.int64)
+        n = len(prompt)
+        start = slot.prefill_pos
+        end = start + grant
+        sp = req.sampling or _GREEDY
+        samp1 = self._samp_one(sp)
+        zero_fault = jnp.zeros((1,), jnp.float32)
+        tok = jnp.asarray(prompt[start:end], jnp.int32)[None, :]
+        traces0 = self.prefill_traces + self.decode_traces
+        t0 = time.perf_counter()
+        nxt = finite = None
+        for i in range(grant):
+            nxt, finite, slot.scratch = self._decode(
+                self.params, slot.scratch, tok[:, i : i + 1], samp1,
+                zero_fault, sampled=not sp.greedy,
+            )
+            self.prefill_calls += 1
+        elapsed = time.perf_counter() - t0
+        traced = self.prefill_traces + self.decode_traces > traces0
+        self._book_prefill(grant, elapsed, traced, new_request=False)
+        if end >= n:
+            # The monolithic replay checks the final step only (an SSM NaN
+            # propagates through the state) — keep that contract.
+            self._finalize_unpaged(slot_idx, int(nxt[0, 0]), bool(finite[0]))
+        else:
+            slot.prefill_pos = end
+
+    def _finalize_unpaged(self, slot_idx: int, first: int, finite: bool) -> None:
+        """Last chunk done: adopt the scratch into the engine caches and
+        flip the lane to decode phase (or finish/quarantine without ever
+        occupying a decode lane — same contract as monolithic install)."""
+        slot = self.slots[slot_idx]
+        req = slot.req
+        if not finite:
+            self.slots[slot_idx] = _Slot()
+            self._quarantine(req)
+            return
+        if self._finish_first_token(req, first):
+            self.slots[slot_idx] = _Slot()
+            return
+        self._adopt_scratch(slot_idx, slot.scratch)
+        self.tokens = self.tokens.at[slot_idx, 0].set(first)
+        slot.scratch = None
+        slot.remaining = req.max_new_tokens - 1
+        slot.prefill_pos = -1
+        self._set_lane_sampling(slot_idx, req.sampling or _GREEDY)
+
     def _retire(self, slot_idx: int) -> None:
         slot = self.slots[slot_idx]
         slot.req.t_done = time.perf_counter()
@@ -921,6 +1313,18 @@ class ServingEngine:
         the partial tail page."""
         slot = self.slots[slot_idx]
         req = slot.req
+        if slot.prefilling:
+            # Half-prefilled victim: every completed full prompt page was
+            # already registered by its chunk, so the release keeps them
+            # hit-able and the resume re-prefills only what the chunks
+            # hadn't finished. The lane never joined decode — its table
+            # row is still trash, its position still 0.
+            self.allocator.truncate(slot.pages, 0)
+            self.slots[slot_idx] = _Slot()
+            self._preempted_uids.add(req.uid)
+            self.queue.appendleft(req)
+            self.preempted += 1
+            return
         pos = len(req.prompt) + len(req.output) - 1
         ctx = list(req.prompt) + req.output
         keys = self.allocator.chain_keys(ctx, pos // self.page_size)
@@ -934,6 +1338,7 @@ class ServingEngine:
         self.caches["pos"] = self.caches["pos"].at[slot_idx].set(0)
         self.slots[slot_idx] = _Slot()
         self._set_lane_sampling(slot_idx, _GREEDY)
+        self._preempted_uids.add(req.uid)
         self.queue.appendleft(req)
         self.preempted += 1
 
@@ -972,12 +1377,19 @@ class ServingEngine:
         if not self.paged or self.admission != "optimistic":
             return
         touched: Dict[int, List[int]] = {}
+        # Mid-prefill lanes don't grow: install reserved their full prompt
+        # plus headroom, and they write no decode positions yet. They stay
+        # preemption *victims* (youngest-first) in _grow_lane, though.
         order = sorted(
-            (i for i, s in enumerate(self.slots) if s.req is not None),
+            (
+                i for i, s in enumerate(self.slots)
+                if s.req is not None and not s.prefilling
+            ),
             key=lambda i: self.slots[i].seq,
         )
         for i in order:
-            if self.slots[i].req is not None:  # not preempted by an elder
+            s = self.slots[i]
+            if s.req is not None and not s.prefilling:  # not since preempted
                 self._grow_lane(i, delta, touched)
         for i, pages in touched.items():
             if self.slots[i].req is None:
@@ -1019,6 +1431,7 @@ class ServingEngine:
         self._decode = jax.jit(self._decode_impl, static_argnames=("sampled",))
         self._prefill_cache.clear()
         self._replay_cache.clear()
+        self._chunk_cache.clear()
         self._attn_probe_fn = None
         if self._spec is not None:
             old = self._spec
@@ -1049,7 +1462,7 @@ class ServingEngine:
         fault = np.zeros((self.max_batch,), np.float32)
         for i, slot in enumerate(self.slots):
             r = slot.req
-            if r is None:
+            if r is None or slot.prefilling:
                 continue
             at = self._fault_at.get(r.uid)
             if at is not None and at < len(r.output) + window:
@@ -1242,15 +1655,30 @@ class ServingEngine:
         return False
 
     def _admit(self):
-        """FIFO admission: stop at the first request that doesn't fit (no
-        head-of-line bypass — page exhaustion queues, it never crashes)."""
-        while self.queue:
-            free = next((i for i, s in enumerate(self.slots) if s.req is None), None)
+        """Admission in scheduler order — resumes first, then requests past
+        the aging bound, then policy order (``fifo`` reproduces the legacy
+        submit-order admission exactly). Stops at the first request that
+        doesn't fit: no head-of-line bypass — page exhaustion queues, it
+        never crashes, and a short late arrival can't drain the pool out
+        from under the blocked head."""
+        if not self.queue:
+            return
+        ordered = self._sched.order_queue(
+            list(self.queue), self.steps, self._is_resume
+        )
+        for req in ordered:
+            free = next(
+                (i for i, s in enumerate(self.slots) if s.req is None), None
+            )
             if free is None:
                 break
-            if not self._install(free, self.queue[0]):
+            if not self._install(free, req):
                 break  # pool full: wait for pages to be reclaimed
-            self.queue.popleft()
+            self.queue.remove(req)
+            self._sched.note_admitted(req.uid)
+            self._preempted_uids.discard(req.uid)
+            if not req.t_admit:
+                req.t_admit = time.perf_counter()
 
     def _spec_step(self):
         """One speculative engine iteration: draft k tokens per lane, verify
@@ -1375,21 +1803,34 @@ class ServingEngine:
     def _step_impl(self):
         self._shed_expired()
         self._admit()
+        if self.chunked:
+            # Budgeted prefill work first: decode lanes then step below in
+            # the same iteration — one chunk's worth of prefill latency is
+            # the most any decode token waits (vs a whole prompt before).
+            self._run_chunk_plan()
         if not any(s.req for s in self.slots):
             return False
+        if not any(s.req is not None and not s.prefilling for s in self.slots):
+            return True  # prefill-only step: chunks ran, nothing decodes yet
         # Speculation requires every active lane greedy (the draft/verify
         # accept rule is an argmax-chain comparison); rounds with a sampled
         # lane fall back to plain decode — greedy lanes still emit their
         # exact argmax tokens (the spec output-identity contract), sampled
         # lanes get the ordinary sampled step. Spec rounds resume once the
-        # sampled lanes retire.
-        if self._spec is not None and not self._active_sampled():
+        # sampled lanes retire — and pause while any lane is mid-prefill
+        # (a speculative window would draft through its trash row; plain
+        # decode skips it per lane instead).
+        if (
+            self._spec is not None
+            and not self._active_sampled()
+            and not any(s.prefilling for s in self.slots)
+        ):
             return self._spec_step()
         # Optimistic growth: the next decode writes one position per lane.
         self._ensure_capacity(1)
-        if not any(s.req for s in self.slots):
+        if not any(s.req is not None and not s.prefilling for s in self.slots):
             return True  # growth preempted every lane; re-admit next step
-        n_active = sum(1 for s in self.slots if s.req)
+        n_active = sum(1 for s in self.slots if s.req and not s.prefilling)
         traces0 = self.decode_traces
         t0 = time.perf_counter()
         # Static per-round flag: greedy-only rounds skip the sampling branch
@@ -1412,8 +1853,8 @@ class ServingEngine:
             self.decode_tokens_warm += n_active
         faulted: List[Request] = []
         for i, slot in enumerate(self.slots):
-            if slot.req is None:
-                continue
+            if slot.req is None or slot.prefilling:
+                continue  # mid-prefill lanes decode into their trash rows
             if not bool(finite_np[i]):
                 # Nonfinite logits: the lane's "token" is garbage — book
                 # nothing, quarantine the request, free the lane. Neighbour
@@ -1496,7 +1937,7 @@ class ServingEngine:
         return self.attn_kernel
 
     def engine_stats(self) -> EngineStats:
-        """The typed v6 stats record (``stats()`` is its flat dict view)."""
+        """The typed v7 stats record (``stats()`` is its flat dict view)."""
         finished = [r for r in self.done if r.finish_reason in ("eos", "length")]
         lat = [
             r.t_done - r.t_submit for r in finished if r.t_done and r.t_submit
@@ -1505,6 +1946,13 @@ class ServingEngine:
             r.t_first_token - r.t_submit
             for r in self.done
             if r.t_first_token and r.t_submit
+        ]
+        # Queue wait: submit -> first admission (preemption re-admissions
+        # don't re-stamp — the metric is time to first service).
+        qwait = [
+            r.t_admit - r.t_submit
+            for r in self.done
+            if r.t_admit and r.t_submit
         ]
         # Inter-token latencies from the per-token event stamps — the same
         # numbers a generate() client observes between TokenEvents.
@@ -1581,6 +2029,14 @@ class ServingEngine:
             matmul_mode=self.matmul_mode,
             attn_step_ms=self._attn_step_ms(),
             spec_enabled=1.0 if self._spec is not None else 0.0,
+            queue_wait_p50_s=_percentile(qwait, 50),
+            queue_wait_p95_s=_percentile(qwait, 95),
+            sched_policy=self.config.sched_policy,
+            sched_prefill_budget=float(self.config.prefill_budget),
+            sched_chunks=float(self._sched.chunks),
+            sched_budget_limited_steps=float(self._sched.budget_limited_steps),
+            sched_aging_promotions=float(self._sched.aging_promotions),
+            sched_peak_step_prefill_tokens=float(self._sched.peak_step_tokens),
         )
         if self._spec is not None:
             for k, v in self._spec.stats().items():
@@ -1588,5 +2044,5 @@ class ServingEngine:
         return s
 
     def stats(self) -> Dict:
-        """The flat dict view of :meth:`engine_stats` (stats schema v6)."""
+        """The flat dict view of :meth:`engine_stats` (stats schema v7)."""
         return self.engine_stats().as_dict()

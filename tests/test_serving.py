@@ -198,6 +198,10 @@ def test_stats_schema(dense_setup):
         # overload safety + watchdog (stats schema v6)
         "preempted", "shed", "timed_out", "errors", "kernel_fallbacks",
         "step_p50_ms", "step_p95_ms", "step_stalled",
+        # step scheduler + queue-wait percentiles (stats schema v7)
+        "queue_wait_p50_s", "queue_wait_p95_s", "sched_policy",
+        "sched_prefill_budget", "sched_chunks", "sched_budget_limited_steps",
+        "sched_aging_promotions", "sched_peak_step_prefill_tokens",
     ):
         assert key in s, key
     assert s["spec_enabled"] == 0.0

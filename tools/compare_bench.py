@@ -1,0 +1,155 @@
+"""Bench regression gate: diff a BENCH_serving run against the committed
+baseline and fail on real regressions.
+
+    PYTHONPATH=src python tools/compare_bench.py [--current PATH]
+        [--baseline PATH] [--threshold 0.25] [--update-baseline]
+
+The repo's BENCH_* artifacts existed only as CI uploads until PR 7 — every
+PR produced numbers, nothing compared them. This tool is the trajectory
+gate: ``make bench-compare`` (and the CI step after ``make bench-smoke``)
+diffs the fresh ``benchmarks/results/BENCH_serving.json`` against the
+committed ``benchmarks/results/BENCH_baseline.json`` and exits nonzero when
+any *guarded* metric regressed by more than ``--threshold`` (default 25%):
+
+* ``itl_p50_s``   — lower is better (median inter-token latency)
+* ``ttft_p50_s``  — lower is better (median time to first token)
+* ``decode_tok_per_s`` / ``prefill_tok_per_s`` — higher is better
+
+Every other shared numeric metric is printed informationally (schema drift
+is visible, not fatal — the BENCH schema is append-only). Runs are gated
+only against a baseline with the same workload meta (arch / n_requests /
+max_new / max_batch / max_len / quick / matmul_mode) — the committed
+baseline is a ``--quick`` smoke run, matching what CI produces; a full
+``make bench`` run against it prints a skip instead of noise. The
+threshold is
+deliberately loose: CPU CI timing jitters run-to-run, and the gate exists
+to catch order-of-magnitude pathologies (the pre-PR-7 ``itl_p95`` was
+~1000x ``itl_p50``), not 5% noise. Refresh the baseline after an accepted
+perf change with ``--update-baseline``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+_RESULTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "results",
+)
+
+# metric -> direction: +1 = higher is better, -1 = lower is better
+GUARDED = {
+    "itl_p50_s": -1,
+    "ttft_p50_s": -1,
+    "decode_tok_per_s": +1,
+    "prefill_tok_per_s": +1,
+}
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        d = json.load(f)
+    if "metrics" not in d:
+        raise SystemExit(f"{path}: not a BENCH json (no 'metrics' key)")
+    return d
+
+
+def regression(baseline: float, current: float, direction: int) -> float:
+    """Fractional regression of ``current`` vs ``baseline`` (positive =
+    worse), respecting the metric's direction. Zero/absent baselines gate
+    nothing (a cold metric can't regress)."""
+    if baseline <= 0:
+        return 0.0
+    if direction > 0:  # higher is better: regression = relative shortfall
+        return (baseline - current) / baseline
+    return (current - baseline) / baseline  # lower is better
+
+
+# meta keys that shape the workload: numbers are only comparable between
+# runs that agree on all of them (CI always compares --quick vs --quick)
+_WORKLOAD_KEYS = (
+    "arch", "n_requests", "max_new", "max_batch", "max_len", "quick",
+    "matmul_mode",
+)
+
+
+def compare(base: dict, cur: dict, threshold: float) -> int:
+    bmeta, cmeta = base.get("meta", {}), cur.get("meta", {})
+    mismatch = [
+        k for k in _WORKLOAD_KEYS
+        if k in bmeta and k in cmeta and bmeta[k] != cmeta[k]
+    ]
+    if mismatch:
+        print(
+            "SKIP: baseline and current ran different workloads ("
+            + ", ".join(
+                f"{k}: {bmeta[k]} vs {cmeta[k]}" for k in mismatch
+            )
+            + ") — latency/throughput not comparable, nothing gated"
+        )
+        return 0
+    bm, cm = base["metrics"], cur["metrics"]
+    failures = []
+    print(f"{'metric':<34} {'baseline':>12} {'current':>12} {'delta':>8}")
+    for name, direction in GUARDED.items():
+        if name not in bm or name not in cm:
+            print(f"{name:<34} {'-':>12} {'-':>12} {'n/a':>8}")
+            continue
+        reg = regression(float(bm[name]), float(cm[name]), direction)
+        flag = ""
+        if reg > threshold:
+            failures.append((name, reg))
+            flag = "  << REGRESSION"
+        print(
+            f"{name:<34} {bm[name]:>12.4f} {cm[name]:>12.4f} "
+            f"{-reg * 100:>+7.1f}%{flag}"
+        )
+    shared = sorted(
+        k for k in bm.keys() & cm.keys()
+        if k not in GUARDED and isinstance(bm[k], (int, float))
+        and isinstance(cm[k], (int, float))
+    )
+    for name in shared:
+        print(f"{name:<34} {bm[name]:>12.4f} {cm[name]:>12.4f}")
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} metric(s) regressed past "
+            f"{threshold:.0%}: "
+            + ", ".join(f"{n} ({r:+.0%})" for n, r in failures)
+        )
+        return 1
+    print(f"\nOK: no guarded metric regressed past {threshold:.0%}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--current", default=os.path.join(_RESULTS, "BENCH_serving.json")
+    )
+    ap.add_argument(
+        "--baseline", default=os.path.join(_RESULTS, "BENCH_baseline.json")
+    )
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional regression (0.25 = 25%%)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy --current over --baseline and exit")
+    args = ap.parse_args(argv)
+
+    if args.update_baseline:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated from {args.current}")
+        return 0
+    if not os.path.exists(args.baseline):
+        raise SystemExit(
+            f"{args.baseline}: missing — commit one with --update-baseline"
+        )
+    base, cur = _load(args.baseline), _load(args.current)
+    return compare(base, cur, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
