@@ -312,7 +312,13 @@ def save_json(name: str, obj) -> None:
 # chunked-prefill arm lands as BENCH_serving_sched.json (token identity vs
 # the monolithic oracle, itl_p95 <= 2x itl_p50 tail bound, ttft_p95
 # improvement).
-BENCH_SCHEMA_VERSION = 7
+# v8: the serving observability layer — engine stats gain trace_* and
+# drift_* (span ring + quant-drift monitor), BENCH_serving adds the
+# obs_overhead_* fractions from the tracing+metrics-on rerun (gated
+# absolutely at 5% by tools/compare_bench.py), and the obs arm exports
+# results/TRACE_serving.json (Chrome trace) + METRICS_serving.prom
+# (Prometheus text) + METRICS_serving.jsonl (registry snapshots).
+BENCH_SCHEMA_VERSION = 8
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:

@@ -40,6 +40,7 @@ from repro.configs import smoke_config
 from repro.core.apply import quantize_params
 from repro.core.recipe import QuantRecipe
 from repro.models import transformer as T
+from repro.obs.log import add_log_level_arg, get_logger, setup_logging
 from repro.serving import (
     EngineConfig,
     EngineOverloaded,
@@ -49,6 +50,8 @@ from repro.serving import (
 )
 
 from .common import save_bench_json
+
+log = get_logger("bench.overload")
 
 
 def _mk_requests(rng, vocab, lengths, max_new, deadline_s=None):
@@ -99,7 +102,9 @@ def main(argv=None):
                     help="skip PTQ, serve the float tree")
     ap.add_argument("--ocs-ratio", type=float, default=0.02)
     ap.add_argument("--seed", type=int, default=0)
+    add_log_level_arg(ap)
     args = ap.parse_args(argv)
+    setup_logging(args.log_level)
 
     n_req = args.n_requests or (6 if args.quick else 12)
     # max_new must outgrow the optimistic install grant (prompt pages +
@@ -117,7 +122,8 @@ def main(argv=None):
         )
         t0 = time.perf_counter()
         params = quantize_params(params, recipe)
-        print(f"[ptq] OCS+int8 in {time.perf_counter() - t0:.1f}s")
+        get_logger("bench.ptq").info(
+            "OCS+int8 in %.1fs", time.perf_counter() - t0)
 
     rng = np.random.default_rng(args.seed + 1)
     max_batch, max_len, page_size = 4, 128, 8
@@ -135,9 +141,10 @@ def main(argv=None):
         for n in lengths
     )
     n_pages = max(worst + 2, (max_batch * worst) // 2) + 1
-    print(
-        f"[bench] arch={cfg.name} requests={n_req} lengths={lengths} "
-        f"pool={n_pages - 1} pages (~50% of worst-case {max_batch * worst})"
+    log.info(
+        "arch=%s requests=%d lengths=%s pool=%d pages (~50%% of "
+        "worst-case %d)", cfg.name, n_req, lengths, n_pages - 1,
+        max_batch * worst,
     )
 
     oracle_conf = EngineConfig(max_batch=max_batch, max_len=max_len,
@@ -165,11 +172,11 @@ def main(argv=None):
             f"request {r.uid}: preempted-and-recomputed output diverged "
             "from the uncontended oracle"
         )
-    print(
-        f"[check] oversubscribed: {int(s['completed'])} completed, "
-        f"{int(s['preempted'])} preemptions, outputs oracle-exact; "
-        f"recompute cost {s['decode_steps']} steps "
-        f"(oracle {oracle_stats['decode_steps']})"
+    log.info(
+        "[check] oversubscribed: %d completed, %d preemptions, outputs "
+        "oracle-exact; recompute cost %s steps (oracle %s)",
+        int(s["completed"]), int(s["preempted"]), s["decode_steps"],
+        oracle_stats["decode_steps"],
     )
 
     # --- arm 2: deadlines under the same contention ---------------------
@@ -186,9 +193,9 @@ def main(argv=None):
             assert r.output == oracle_out[r.uid], r.uid
         else:
             assert r.finish_reason == "timeout", (r.uid, r.finish_reason)
-    print(
-        f"[check] deadline: {int(dl_stats['timed_out'])} timed out, "
-        f"{int(dl_stats['completed'])} completed oracle-exact"
+    log.info(
+        "[check] deadline: %d timed out, %d completed oracle-exact",
+        int(dl_stats["timed_out"]), int(dl_stats["completed"]),
     )
 
     # --- arm 3: bounded queue sheds the burst ---------------------------
@@ -202,16 +209,16 @@ def main(argv=None):
             assert r.output == []  # never took a lane
         else:
             assert r.output == oracle_out[r.uid], r.uid
-    print(
-        f"[check] shed: {int(shed_stats['shed'])} rejected typed, "
-        f"{int(shed_stats['completed'])} admitted all completed"
+    log.info(
+        "[check] shed: %d rejected typed, %d admitted all completed",
+        int(shed_stats["shed"]), int(shed_stats["completed"]),
     )
 
-    print(
-        f"[bench] contended decode {s['decode_tok_per_s']:.1f} tok/s "
-        f"(oracle {oracle_stats['decode_tok_per_s']:.1f}) | "
-        f"step p50/p95 {s['step_p50_ms']:.1f}/{s['step_p95_ms']:.1f} ms | "
-        f"wall {s['wall_s']:.1f}s"
+    log.info(
+        "contended decode %.1f tok/s (oracle %.1f) | step p50/p95 "
+        "%.1f/%.1f ms | wall %.1fs", s["decode_tok_per_s"],
+        oracle_stats["decode_tok_per_s"], s["step_p50_ms"],
+        s["step_p95_ms"], s["wall_s"],
     )
     path = save_bench_json(
         "serving_overload",
@@ -261,7 +268,7 @@ def main(argv=None):
             "quick": bool(args.quick),
         },
     )
-    print(f"[bench] wrote {path}")
+    log.info("wrote %s", path)
     return s
 
 

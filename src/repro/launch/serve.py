@@ -15,11 +15,19 @@ the config surface: adding a field to ``EngineConfig`` adds the flag here.
 ``--compare-float`` serves the same requests with the float weights and
 reports the token-level agreement — the serving-side analogue of the
 paper's accuracy tables.
+
+Observability (PR 8): ``--trace-out`` exports the engine's span ring as a
+Perfetto-loadable Chrome trace (requires ``--trace``), ``--metrics-out``
+writes a Prometheus text exposition after the run, and ``--metrics-jsonl``
+streams periodic registry snapshots (one JSON line every
+``--metrics-every`` engine steps) while the engine drains. Progress goes
+through :mod:`repro.obs.log` (``--log-level``).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 import warnings
 
@@ -32,6 +40,7 @@ from repro.configs import get_config, list_archs, smoke_config
 from repro.core.apply import quantize_params
 from repro.core.recipe import QuantRecipe
 from repro.models import transformer as T
+from repro.obs.log import add_log_level_arg, get_logger, setup_logging
 from repro.optim import adamw_init
 from repro.serving import (
     EngineConfig,
@@ -42,6 +51,8 @@ from repro.serving import (
     add_engine_config_args,
     engine_config_from_args,
 )
+
+log = get_logger("launch.serve")
 
 # Legacy --paged-attn vocabulary -> the shared KernelChoice vocabulary.
 _PAGED_ATTN_ALIAS = {"auto": "auto", "on": "pallas", "off": "gather"}
@@ -73,6 +84,16 @@ def build_parser():
                     help="DEPRECATED alias for --attn-kernel "
                          "(on = pallas, off = gather)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="",
+                    help="export the span ring as Chrome trace JSON "
+                         "(requires --trace)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write Prometheus text exposition after the run")
+    ap.add_argument("--metrics-jsonl", default="",
+                    help="stream periodic registry snapshots (JSONL)")
+    ap.add_argument("--metrics-every", type=int, default=50,
+                    help="engine steps between --metrics-jsonl snapshots")
+    add_log_level_arg(ap)
     # Engine flags, generated from the EngineConfig fields themselves.
     add_engine_config_args(ap, defaults=EngineConfig(max_batch=4, max_len=128))
     return ap
@@ -114,21 +135,46 @@ def _make_requests(n, vocab, rng, max_new, sampling=None):
     return reqs
 
 
-def serve_once(cfg, params, reqs, ecfg: EngineConfig):
+def serve_once(cfg, params, reqs, ecfg: EngineConfig, *,
+               metrics_jsonl: str = "", metrics_every: int = 50):
     eng = ServingEngine(cfg, params, ecfg)
     for r in reqs:
         eng.submit(r)
     t0 = time.time()
-    done = eng.run()
+    if metrics_jsonl:
+        # Drive step-by-step so registry snapshots stream while serving
+        # (eng.run() is the same loop without the snapshot hook).
+        eng.start_profile()
+        try:
+            with open(metrics_jsonl, "w") as f:
+                for _ in range(10_000):
+                    busy = eng.step()
+                    if eng.steps % max(metrics_every, 1) == 0:
+                        f.write(json.dumps(
+                            {"step": eng.steps, "time": time.time(),
+                             "metrics": eng.metrics_snapshot()}) + "\n")
+                    if not busy and not eng.queue:
+                        break
+                f.write(json.dumps(
+                    {"step": eng.steps, "time": time.time(),
+                     "metrics": eng.metrics_snapshot()}) + "\n")
+        finally:
+            eng.stop_profile()
+        done = eng.done
+    else:
+        done = eng.run()
     wall = time.time() - t0
     s = eng.stats()
     s["wall_s"] = round(wall, 2)
     s["tokens_per_s"] = round(s["decoded_tokens"] / max(wall, 1e-9), 1)
-    return done, s
+    return done, s, eng
 
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    setup_logging(args.log_level)
+    if args.trace_out and not args.trace:
+        raise SystemExit("serve.py: --trace-out requires --trace")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.kv_bits:
         cfg = dataclasses.replace(cfg, kv_bits=args.kv_bits)
@@ -139,7 +185,7 @@ def main(argv=None):
         ckpt = CheckpointManager(args.ckpt_dir, async_write=False)
         (params, _opt), meta = ckpt.restore((params, adamw_init(params)))
         params = jax.tree.map(jnp.asarray, params)
-        print(f"[serve] restored {meta.get('arch')} step {ckpt.latest_step()}")
+        log.info("restored %s step %s", meta.get("arch"), ckpt.latest_step())
 
     if not args.float_serve:
         recipe = QuantRecipe(
@@ -148,8 +194,9 @@ def main(argv=None):
         )
         t0 = time.time()
         qparams = quantize_params(params, recipe)
-        print(f"[ptq] quantized in {time.time() - t0:.1f}s "
-              f"(w{args.bits}, ocs r={args.ocs_ratio}, clip={args.clip})")
+        get_logger("launch.ptq").info(
+            "quantized in %.1fs (w%d, ocs r=%s, clip=%s)",
+            time.time() - t0, args.bits, args.ocs_ratio, args.clip)
     else:
         qparams = params
 
@@ -171,59 +218,90 @@ def main(argv=None):
         )
     reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new,
                           sampling=sampling)
-    done, stats = serve_once(cfg, qparams, reqs, ecfg)
-    print(f"[serve] {stats}")
-    print(
-        f"[serve] latency: ttft p50 {stats['ttft_p50_s'] * 1e3:.0f} ms / "
-        f"p95 {stats['ttft_p95_s'] * 1e3:.0f} ms | itl p50 "
-        f"{stats['itl_p50_s'] * 1e3:.1f} ms / p95 "
-        f"{stats['itl_p95_s'] * 1e3:.1f} ms"
+    done, stats, eng = serve_once(
+        cfg, qparams, reqs, ecfg,
+        metrics_jsonl=args.metrics_jsonl, metrics_every=args.metrics_every,
+    )
+    log.info("%s", stats)
+    log.info(
+        "latency: ttft p50 %.0f ms / p95 %.0f ms | itl p50 %.1f ms / "
+        "p95 %.1f ms",
+        stats["ttft_p50_s"] * 1e3, stats["ttft_p95_s"] * 1e3,
+        stats["itl_p50_s"] * 1e3, stats["itl_p95_s"] * 1e3,
     )
     if stats.get("kv_page_size"):
-        print(
-            f"[serve] paged attention: kernel={stats['attn_kernel']} "
-            f"(cfg {ecfg.kernels.attn.value}), probed attn step "
-            f"{stats['attn_step_ms']:.2f} ms/layer"
+        log.info(
+            "paged attention: kernel=%s (cfg %s), probed attn step "
+            "%.2f ms/layer",
+            stats["attn_kernel"], ecfg.kernels.attn.value,
+            stats["attn_step_ms"],
         )
     if ecfg.spec is not None:
-        print(
-            f"[serve] spec-decode: acceptance "
-            f"{stats['spec_acceptance_rate']:.1%}, "
-            f"{stats['spec_tokens_per_target_step']:.2f} tokens/target-step "
-            f"over {stats['spec_rounds']:.0f} rounds (adaptive k -> "
-            f"{stats['spec_k']:.0f})"
+        log.info(
+            "spec-decode: acceptance %.1f%%, %.2f tokens/target-step over "
+            "%.0f rounds (adaptive k -> %.0f)",
+            stats["spec_acceptance_rate"] * 100.0,
+            stats["spec_tokens_per_target_step"], stats["spec_rounds"],
+            stats["spec_k"],
         )
-    print(
-        f"[serve] overload: preempted {stats['preempted']:.0f} | shed "
-        f"{stats['shed']:.0f} | timed out {stats['timed_out']:.0f} | errors "
-        f"{stats['errors']:.0f} | kernel fallbacks "
-        f"{stats['kernel_fallbacks']:.0f}"
+    log.info(
+        "overload: preempted %.0f | shed %.0f | timed out %.0f | errors "
+        "%.0f | kernel fallbacks %.0f",
+        stats["preempted"], stats["shed"], stats["timed_out"],
+        stats["errors"], stats["kernel_fallbacks"],
     )
-    print(
-        f"[serve] watchdog: step p50 {stats['step_p50_ms']:.1f} ms / p95 "
-        f"{stats['step_p95_ms']:.1f} ms"
-        + (" | STALLED" if stats["step_stalled"] else "")
+    log.info(
+        "watchdog: step p50 %.1f ms / p95 %.1f ms%s",
+        stats["step_p50_ms"], stats["step_p95_ms"],
+        " | STALLED" if stats["step_stalled"] else "",
     )
-    print(
-        f"[serve] queue wait: p50 {stats['queue_wait_p50_s'] * 1e3:.0f} ms / "
-        f"p95 {stats['queue_wait_p95_s'] * 1e3:.0f} ms"
+    log.info(
+        "queue wait: p50 %.0f ms / p95 %.0f ms",
+        stats["queue_wait_p50_s"] * 1e3, stats["queue_wait_p95_s"] * 1e3,
     )
     if stats.get("sched_prefill_budget"):
-        print(
-            f"[serve] scheduler: {stats['sched_policy']} | budget "
-            f"{stats['sched_prefill_budget']:.0f} tok/step | chunks "
-            f"{stats['sched_chunks']:.0f} | budget-limited steps "
-            f"{stats['sched_budget_limited_steps']:.0f} | aging promotions "
-            f"{stats['sched_aging_promotions']:.0f} | peak step prefill "
-            f"{stats['sched_peak_step_prefill_tokens']:.0f} tok"
+        log.info(
+            "scheduler: %s | budget %.0f tok/step | chunks %.0f | "
+            "budget-limited steps %.0f | aging promotions %.0f | "
+            "peak step prefill %.0f tok",
+            stats["sched_policy"], stats["sched_prefill_budget"],
+            stats["sched_chunks"], stats["sched_budget_limited_steps"],
+            stats["sched_aging_promotions"],
+            stats["sched_peak_step_prefill_tokens"],
         )
+    if stats.get("drift_enabled"):
+        log.info(
+            "quant drift: %.0f samples over %.0f sites | flagged %.0f | "
+            "max live/calib ratio %.2f",
+            stats["drift_samples"], stats["drift_sites"],
+            stats["drift_flagged_sites"], stats["drift_max_ratio"],
+        )
+        for site, info in sorted(eng.drift_report().items()):
+            if info["ratio"] > 1.0:
+                log.warning(
+                    "drift site %s: live rate %.2e vs calib %.2e "
+                    "(ratio %.1f, clip %.3g)", site, info["live_rate"],
+                    info["calib_rate"], info["ratio"], info["clip"],
+                )
+    if args.trace_out:
+        eng.trace.export(args.trace_out)
+        log.info(
+            "trace: %d events (%d dropped) -> %s",
+            len(eng.trace), eng.trace.dropped, args.trace_out,
+        )
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(eng.metrics_text())
+        log.info("metrics: Prometheus exposition -> %s", args.metrics_out)
+    if args.metrics_jsonl:
+        log.info("metrics: JSONL snapshots -> %s", args.metrics_jsonl)
 
     if args.compare_float and not args.float_serve:
         freqs = _make_requests(args.n_requests, cfg.vocab,
                                np.random.default_rng(args.seed), args.max_new,
                                sampling=sampling)
-        fdone, fstats = serve_once(cfg, params, freqs,
-                                   ecfg.replace(matmul_mode="dequant", spec=None))
+        fdone, _, _ = serve_once(cfg, params, freqs,
+                                 ecfg.replace(matmul_mode="dequant", spec=None))
         by_uid = {r.uid: r.output for r in fdone}
         agree = total = 0
         for r in done:
@@ -231,8 +309,8 @@ def main(argv=None):
             for a, b in zip(r.output, ref):
                 agree += int(a == b)
                 total += 1
-        print(f"[serve] int8-vs-float token agreement: {agree}/{total} "
-              f"({100.0 * agree / max(total, 1):.1f}%)")
+        log.info("int8-vs-float token agreement: %d/%d (%.1f%%)",
+                 agree, total, 100.0 * agree / max(total, 1))
     return stats
 
 

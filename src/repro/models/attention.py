@@ -481,10 +481,11 @@ def attention_decode(
             # as the off-TPU/VMEM fallback; "xla" pins that loop outright).
             from repro.kernels import ops as kops
 
-            out, new_cache = kops.paged_attention(
-                cache, table, pos, q, k, v,
-                force=None if kernel == "pallas" else "ref",
-            )
+            with jax.named_scope(f"paged_attention_{kernel}"):
+                out, new_cache = kops.paged_attention(
+                    cache, table, pos, q, k, v,
+                    force=None if kernel == "pallas" else "ref",
+                )
             new_cache = _kvc._shard_pool(new_cache)
             out = out.astype(x.dtype).reshape(b, qn, h * hd)
             return dense(params["wo"], out, name="attn_o"), new_cache

@@ -1,0 +1,49 @@
+"""Per-component loggers for launchers and benches.
+
+The launchers used to report progress with bare ``print("[serve] ...")``
+calls — unlevelled, unfilterable, and interleaved with machine-readable
+bench output. Components now log through ``logging`` with per-component
+names under the ``repro`` root (``repro.serve``, ``repro.bench.serving``,
+...), configured once via :func:`setup_logging` from a ``--log-level``
+flag. Anything that must stay machine-parseable on stdout (bench JSON,
+generated-text payloads) keeps using ``print``.
+"""
+from __future__ import annotations
+
+import logging
+
+__all__ = ["add_log_level_arg", "get_logger", "setup_logging"]
+
+_FORMAT = "%(levelname)s %(name)s: %(message)s"
+
+
+def get_logger(component: str) -> logging.Logger:
+    """Logger named ``repro.<component>`` (idempotent)."""
+    name = component if component.startswith("repro") else f"repro.{component}"
+    return logging.getLogger(name)
+
+
+def setup_logging(level: str = "INFO") -> None:
+    """Configure the ``repro`` logger tree to emit to stderr at ``level``.
+
+    Only touches the ``repro`` root logger (no ``basicConfig``), so library
+    users embedding the engine keep full control of the global logging
+    config. Calling twice replaces the handler rather than duplicating it.
+    """
+    root = logging.getLogger("repro")
+    for h in list(root.handlers):
+        root.removeHandler(h)
+    handler = logging.StreamHandler()
+    handler.setFormatter(logging.Formatter(_FORMAT))
+    root.addHandler(handler)
+    root.setLevel(getattr(logging, level.upper(), logging.INFO))
+    root.propagate = False
+
+
+def add_log_level_arg(ap) -> None:
+    """Attach the shared ``--log-level`` flag to an argparse parser."""
+    ap.add_argument(
+        "--log-level", default="INFO",
+        choices=("DEBUG", "INFO", "WARNING", "ERROR"),
+        help="logging verbosity for repro.* components (default INFO)",
+    )

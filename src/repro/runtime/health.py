@@ -77,25 +77,48 @@ class StepTimer:
 
 
 class HeartbeatMonitor:
-    """File-based liveness: writer side (train loop) + watchdog side."""
+    """File-based liveness: writer side (train loop) + watchdog side.
 
-    def __init__(self, path: str, host_id: int = 0, timeout: float = 300.0):
+    ``min_interval`` throttles the writer: a serving engine beating every
+    step can run thousands of steps per second, and an atomic tmp-write +
+    ``os.replace`` per step is pure filesystem churn a liveness watchdog
+    (polling at seconds granularity) can never observe. Beats landing
+    within ``min_interval`` seconds of the last *written* beat are skipped;
+    ``force=True`` bypasses the throttle (the final beat of a drain, so the
+    file always ends at the true last step). The default ``0.0`` keeps the
+    legacy write-every-beat behavior.
+    """
+
+    def __init__(self, path: str, host_id: int = 0, timeout: float = 300.0,
+                 min_interval: float = 0.0):
         self.path = path
         self.host_id = host_id
         self.timeout = timeout
+        self.min_interval = min_interval
+        self.beats = 0  # beat() calls
+        self.writes = 0  # beats that reached the file
+        self._last_write = 0.0  # time.time() of the last write; 0 = never
         os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
 
-    def beat(self, step: int, extra: Optional[Dict] = None):
+    def beat(self, step: int, extra: Optional[Dict] = None,
+             force: bool = False):
+        self.beats += 1
+        now = time.time()
+        if (not force and self.min_interval > 0.0
+                and now - self._last_write < self.min_interval):
+            return
         rec = {
             "host": self.host_id,
             "step": int(step),
-            "time": time.time(),
+            "time": now,
             **(extra or {}),
         }
         tmp = f"{self.path}.tmp"
         with open(tmp, "w") as f:
             json.dump(rec, f)
         os.replace(tmp, self.path)
+        self.writes += 1
+        self._last_write = now
 
     def read(self) -> Optional[Dict]:
         try:

@@ -315,6 +315,54 @@ class EngineConfig:
             "('' = off); external watchdogs read it for liveness",
         },
     )
+    heartbeat_interval_s: float = dataclasses.field(
+        default=0.0,
+        metadata={
+            "help": "min seconds between heartbeat file writes (0 = every "
+            "step); throttles the per-step atomic file replace on fast loops",
+        },
+    )
+    trace: bool = dataclasses.field(
+        default=False,
+        metadata={
+            "help": "record typed span events (admit / prefill_chunk / "
+            "decode_step / spec / preempt / shed / ...) into a bounded "
+            "host-side ring buffer; export Chrome trace JSON via "
+            "ServingEngine.trace",
+            "store_true": True,
+        },
+    )
+    trace_capacity: int = dataclasses.field(
+        default=8192,
+        metadata={
+            "help": "span-event ring capacity; the oldest events drop once "
+            "full (bounded memory no matter how long the engine runs)",
+        },
+    )
+    profile_dir: str = dataclasses.field(
+        default="",
+        metadata={
+            "help": "jax.profiler trace output directory ('' = off); run() "
+            "wraps the serving loop in a profiler window, with named_scope "
+            "labels on the prefill/decode/verify/attention dispatches",
+        },
+    )
+    drift_every: int = dataclasses.field(
+        default=0,
+        metadata={
+            "help": "sample quantization-drift telemetry every N engine "
+            "steps (0 = off): each sample runs one eager tapped forward "
+            "over the live decode batch and books per-site activation "
+            "saturation against the calibrated clip grid",
+        },
+    )
+    drift_threshold: float = dataclasses.field(
+        default=4.0,
+        metadata={
+            "help": "drift flag: live outlier mass above this multiple of "
+            "the calibrated outlier mass marks a site as drifted (> 1)",
+        },
+    )
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -375,6 +423,24 @@ class EngineConfig:
         if self.sched_aging_steps < 1:
             raise ValueError(
                 f"sched_aging_steps must be >= 1, got {self.sched_aging_steps}"
+            )
+        if self.heartbeat_interval_s < 0:
+            raise ValueError(
+                "heartbeat_interval_s must be >= 0, got "
+                f"{self.heartbeat_interval_s}"
+            )
+        if self.trace_capacity < 1:
+            raise ValueError(
+                f"trace_capacity must be >= 1, got {self.trace_capacity}"
+            )
+        if self.drift_every < 0:
+            raise ValueError(
+                f"drift_every must be >= 0, got {self.drift_every}"
+            )
+        if self.drift_threshold <= 1.0:
+            raise ValueError(
+                "drift_threshold must be > 1 (a site at its calibrated "
+                f"outlier mass is not drifted), got {self.drift_threshold}"
             )
         if self.spec is not None and not isinstance(self.spec, SpecConfig):
             raise TypeError(f"spec must be a SpecConfig, got {type(self.spec)}")

@@ -70,10 +70,25 @@ float model in low precision. This engine is that provider's serving loop:
   pallas->xla attention fallback after repeated faults), and a watchdog
   (``runtime.health.StepTimer`` / ``HeartbeatMonitor``) surfaces step-time
   p50/p95 and a stall flag;
-* **stats** — a typed :class:`EngineStats` (schema v7: v6 plus the
-  scheduler counters ``sched_*`` and the queue-wait percentiles
-  ``queue_wait_p50_s`` / ``queue_wait_p95_s``); ``stats()`` keeps
-  returning the flat dict view.
+* **observability** (PR 8) — a per-engine :class:`~repro.obs.metrics.
+  MetricsRegistry` owns every counter/histogram the engine books (the
+  legacy counter attributes are registry-backed properties, so the hot
+  path is unchanged); ``EngineConfig.trace`` turns on a bounded
+  :class:`~repro.obs.trace.TraceRing` of typed span events (admit /
+  prefill_chunk / decode_step / spec rounds / preempt / shed / ... —
+  exportable as Perfetto-loadable Chrome trace JSON);
+  ``EngineConfig.drift_every`` samples a
+  :class:`~repro.obs.drift.QuantDriftMonitor` eager forward every N steps,
+  tracking live activation saturation against the calibrated OCS/clip
+  grid; ``EngineConfig.profile_dir`` wraps :meth:`ServingEngine.run` in a
+  ``jax.profiler`` trace window (``jax.named_scope`` labels the jitted
+  prefill/decode/verify dispatches);
+* **stats** — a typed :class:`EngineStats` (schema v8: v7 plus the
+  tracing/drift telemetry fields), *derived from the metrics registry* —
+  percentiles come from registry histograms, counts from registry
+  counters; ``stats()`` keeps returning the flat dict view and
+  :meth:`ServingEngine.metrics_text` renders the same registry as
+  Prometheus text exposition.
 
 Trace counters (``prefill_traces`` / ``decode_traces`` bump only while jit
 is tracing) let benchmarks assert the compile story: a request must cost
@@ -95,6 +110,10 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn_mod
 from repro.models import layers
 from repro.models import transformer as T
+from repro.obs.drift import QuantDriftMonitor, clips_from_params
+from repro.obs.log import get_logger
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import TraceRing
 from repro.runtime.health import HeartbeatMonitor, StepTimer
 from . import kv_cache as kvc
 from . import sampling as sampling_mod
@@ -110,6 +129,8 @@ __all__ = [
     "ServingEngine",
     "FINISH_REASONS",
 ]
+
+_LOG = get_logger("serving.engine")
 
 # The one documented finish_reason vocabulary (docs/serving.md §Overload
 # behavior). Every request that leaves the engine carries exactly one:
@@ -175,24 +196,27 @@ class TokenEvent:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Typed serving counters (stats schema v7, frozen).
+    """Typed serving counters (stats schema v8, frozen).
 
     The dict view (:meth:`as_dict`, what ``ServingEngine.stats()`` returns)
     is the stable cross-PR schema consumed by benchmarks — append fields,
-    never rename. v7 additions over v6 (the continuous-batching scheduler):
-    ``queue_wait_p50_s`` / ``queue_wait_p95_s`` (submit -> first lane
-    admission, over every admitted terminal), ``sched_policy``,
-    ``sched_prefill_budget``, ``sched_chunks`` (budgeted prefill chunk
-    calls), ``sched_budget_limited_steps`` (steps where prefill work
-    remained but the token budget was exhausted),
-    ``sched_aging_promotions`` (requests promoted past sjf order by the
-    anti-starvation bound), and ``sched_peak_step_prefill_tokens`` (max
-    prefill tokens any single step ran — always <= the budget). v6 added
-    the overload counters ``preempted`` / ``shed`` / ``timed_out`` /
-    ``errors`` / ``kernel_fallbacks``, the watchdog ``step_p50_ms`` /
-    ``step_p95_ms`` / ``step_stalled``, and narrowed ``completed`` to
-    *successful* terminals only (eos/length). Mean/percentile latencies
-    are booked over successful terminals only.
+    never rename. v8 additions over v7 (the observability layer —
+    docs/serving.md §Observability has the migration table): the span-ring
+    telemetry ``trace_enabled`` / ``trace_events`` / ``trace_dropped`` and
+    the quant-drift telemetry ``drift_enabled`` / ``drift_samples`` /
+    ``drift_sites`` / ``drift_flagged_sites`` / ``drift_max_ratio``. v8
+    also re-derives every numeric field from the engine's metrics
+    registry: latency percentiles come from bounded-reservoir registry
+    histograms booked live at the event sites (nearest-rank, matching
+    ``runtime.health.StepTimer``) instead of an O(done) post-hoc
+    ``np.percentile`` scan — same numbers for runs shorter than the
+    reservoir window (4096 observations). v7 added the scheduler counters
+    (``sched_*``) and ``queue_wait_p50_s`` / ``queue_wait_p95_s`` (submit
+    -> first lane admission). v6 added the overload counters ``preempted``
+    / ``shed`` / ``timed_out`` / ``errors`` / ``kernel_fallbacks``, the
+    watchdog ``step_p50_ms`` / ``step_p95_ms`` / ``step_stalled``, and
+    narrowed ``completed`` to *successful* terminals only (eos/length).
+    Mean/percentile latencies are booked over successful terminals only.
     """
 
     completed: int = 0
@@ -256,6 +280,14 @@ class EngineStats:
     sched_budget_limited_steps: float = 0.0
     sched_aging_promotions: float = 0.0
     sched_peak_step_prefill_tokens: float = 0.0
+    trace_enabled: float = 0.0
+    trace_events: float = 0.0
+    trace_dropped: float = 0.0
+    drift_enabled: float = 0.0
+    drift_samples: float = 0.0
+    drift_sites: float = 0.0
+    drift_flagged_sites: float = 0.0
+    drift_max_ratio: float = 0.0
 
     def as_dict(self) -> Dict:
         return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
@@ -278,10 +310,6 @@ class _Slot:
     @property
     def prefilling(self) -> bool:
         return self.req is not None and self.prefill_pos >= 0
-
-
-def _percentile(values: Sequence[float], q: float) -> float:
-    return float(np.percentile(np.asarray(values, np.float64), q)) if values else 0.0
 
 
 def _enable_compile_cache(cache_dir: str) -> None:
@@ -333,6 +361,54 @@ def _fold_legacy_kwargs(config: Optional[EngineConfig], legacy: Dict) -> EngineC
     return config.replace(**present)
 
 
+# Legacy counter attribute -> (registry metric name, integer-valued, help).
+# Each attribute is installed as a ServingEngine property over a registered
+# Counter (see _install_counter_properties), so the ad-hoc `self.steps += 1`
+# bookkeeping all over the engine *is* the metric update and the stats-v8
+# view derives from the registry instead of shadow state.
+_COUNTER_METRICS = {
+    "steps": ("engine_steps_total", True, "engine step iterations"),
+    "decoded_tokens": ("engine_decoded_tokens_total", True,
+                       "decode tokens booked into request outputs"),
+    "completed": ("engine_completed_total", True,
+                  "successful terminals (eos/length)"),
+    "cancelled": ("engine_cancelled_total", True,
+                  "requests cancelled mid-flight"),
+    "preempted": ("engine_preempted_total", True,
+                  "lanes preempted under page-pool pressure"),
+    "shed": ("engine_shed_total", True,
+             "requests rejected at submit (bounded queue full)"),
+    "timed_out": ("engine_timed_out_total", True,
+                  "requests shed past their deadline_s"),
+    "errors": ("engine_errors_total", True,
+               "requests quarantined on nonfinite logits"),
+    "kernel_fallbacks": ("engine_kernel_fallbacks_total", True,
+                         "automatic pallas -> xla attention demotions"),
+    "prefill_calls": ("engine_prefill_calls_total", True,
+                      "jitted calls spent on prefill"),
+    "prefill_requests": ("engine_prefill_requests_total", True,
+                         "requests that entered prefill"),
+    "prefill_tokens": ("engine_prefill_tokens_total", True,
+                       "prompt tokens run through prefill compute"),
+    "prefill_tokens_warm": ("engine_prefill_tokens_warm_total", True,
+                            "prefill tokens in warm (non-tracing) calls"),
+    "prefill_traces": ("engine_prefill_traces_total", True,
+                       "distinct prefill jit compilations"),
+    "decode_traces": ("engine_decode_traces_total", True,
+                      "distinct decode jit compilations"),
+    "decode_tokens_warm": ("engine_decode_tokens_warm_total", True,
+                           "decode tokens in warm (non-tracing) steps"),
+    "prefill_time_s": ("engine_prefill_warm_seconds_total", False,
+                       "warm prefill wall time"),
+    "prefill_compile_s": ("engine_prefill_compile_seconds_total", False,
+                          "prefill wall time spent tracing/compiling"),
+    "decode_time_s": ("engine_decode_warm_seconds_total", False,
+                      "warm decode wall time"),
+    "decode_compile_s": ("engine_decode_compile_seconds_total", False,
+                         "decode wall time spent tracing/compiling"),
+}
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -367,6 +443,51 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.config = config
+        # Observability (PR 8, docs/serving.md §Observability). The metrics
+        # registry always exists — every legacy counter attribute below is a
+        # registry-backed property (see _COUNTER_METRICS), so booking costs
+        # one float add whether anyone is scraping or not. Span tracing and
+        # drift sampling are opt-in (EngineConfig.trace / drift_every).
+        self.metrics = MetricsRegistry()
+        self._metric_counters = {
+            attr: self.metrics.counter(name, help_)
+            for attr, (name, _integer, help_) in _COUNTER_METRICS.items()
+        }
+        self._hist_ttft = self.metrics.histogram(
+            "request_ttft_seconds", "submit -> first booked token"
+        )
+        self._hist_itl = self.metrics.histogram(
+            "request_itl_seconds", "gap between consecutive booked tokens"
+        )
+        self._hist_qwait = self.metrics.histogram(
+            "request_queue_wait_seconds", "submit -> first lane admission"
+        )
+        self._hist_latency = self.metrics.histogram(
+            "request_latency_seconds",
+            "submit -> done over successful terminals (eos/length)",
+        )
+        self._hist_step = self.metrics.histogram(
+            "engine_step_seconds", "one step() call, productive or not"
+        )
+        self.trace: Optional[TraceRing] = (
+            TraceRing(config.trace_capacity) if config.trace else None
+        )
+        # Quant-drift monitor: clips come from the params tree's calibrated
+        # activation grids where present; other sites self-calibrate from
+        # early traffic. Sampling happens in step(), outside the watchdog
+        # timer; the first sampling failure disables the monitor for good
+        # (telemetry must never take the serving loop down).
+        self._drift: Optional[QuantDriftMonitor] = (
+            QuantDriftMonitor(
+                clips=clips_from_params(params),
+                factor=config.drift_threshold,
+            )
+            if config.drift_every > 0
+            else None
+        )
+        self._drift_broken = False
+        self._drift_last_step = -1
+        self._profiling = False
         if config.compile_cache_dir:
             _enable_compile_cache(config.compile_cache_dir)
         self.max_batch = config.max_batch
@@ -425,6 +546,8 @@ class ServingEngine:
             if config.spec is not None
             else None
         )
+        if self._spec is not None:
+            self._spec.trace = self.trace  # draft/verify spans, engine lane
         # Per-step attention-time probe (stats()["attn_step_ms"]): off by
         # default — it costs one extra jit compile per engine, which tier-1
         # tests creating dozens of engines must not pay.
@@ -434,6 +557,8 @@ class ServingEngine:
         # on a paged engine (unpaged caches are fixed-slot: admission can
         # never oversubscribe, so the mode silently degrades to reserve).
         self.admission = config.admission if self.paged else "reserve"
+        self.completed = 0
+        self.cancelled = 0
         self.preempted = 0
         self.shed = 0
         self.timed_out = 0
@@ -449,6 +574,7 @@ class ServingEngine:
             prefill_budget=config.prefill_budget,
             chunk_size=config.chunk_size,
         )
+        self._sched.trace = self.trace  # budget-limited / promotion instants
         self._preempted_uids: set = set()  # resumes outrank policy order
         self._fault_at: Dict[int, int] = {}  # uid -> output index to poison
         self._fault_streak = 0  # consecutive quarantined requests (no
@@ -457,7 +583,10 @@ class ServingEngine:
         # (the training-fleet observers from runtime.health, reused as-is).
         self._step_timer = StepTimer(window=200)
         self._heartbeat = (
-            HeartbeatMonitor(config.heartbeat_path)
+            HeartbeatMonitor(
+                config.heartbeat_path,
+                min_interval=config.heartbeat_interval_s,
+            )
             if config.heartbeat_path
             else None
         )
@@ -509,7 +638,9 @@ class ServingEngine:
 
     def _decode_impl(self, params, caches, token, samp, fault, *, sampled: bool):
         self.decode_traces += 1  # python side effect: runs only while tracing
-        with layers.serving_mode(self.matmul_mode, kernel=self.matmul_kernel):
+        with jax.named_scope("serving_decode_step"), layers.serving_mode(
+            self.matmul_mode, kernel=self.matmul_kernel
+        ):
             logits, new_caches = T.decode_step(
                 params, token, caches, self.cfg, attn_kernel=self.attn_kernel
             )
@@ -566,7 +697,7 @@ class ServingEngine:
             def impl(params, tokens, length, page_ids, prefix_ids, pools,
                      samp, samp_pos):
                 self.prefill_traces += 1
-                with layers.serving_mode(
+                with jax.named_scope("serving_prefill"), layers.serving_mode(
                     self.matmul_mode, kernel=self.matmul_kernel
                 ):
                     logits, new_pools = T.prefill_into_pages(
@@ -584,7 +715,7 @@ class ServingEngine:
 
             def impl(params, tokens, length, samp):
                 self.prefill_traces += 1
-                with layers.serving_mode(
+                with jax.named_scope("serving_prefill"), layers.serving_mode(
                     self.matmul_mode, kernel=self.matmul_kernel
                 ):
                     logits, scratch = T.prefill_with_cache(
@@ -618,7 +749,9 @@ class ServingEngine:
             def impl(params, tokens, length, page_ids, prefix_ids, prefix_len,
                      pools, samp, samp_pos):
                 self.prefill_traces += 1
-                with layers.serving_mode(
+                with jax.named_scope(
+                    "serving_prefill_chunk"
+                ), layers.serving_mode(
                     self.matmul_mode, kernel=self.matmul_kernel
                 ):
                     logits, new_pools = T.prefill_into_pages(
@@ -638,7 +771,9 @@ class ServingEngine:
 
             def impl(params, tokens, length, start, scratch, samp, samp_pos):
                 self.prefill_traces += 1
-                with layers.serving_mode(
+                with jax.named_scope(
+                    "serving_prefill_chunk"
+                ), layers.serving_mode(
                     self.matmul_mode, kernel=self.matmul_kernel
                 ):
                     logits, new_scratch = T.prefill_chunk_with_cache(
@@ -667,7 +802,8 @@ class ServingEngine:
             self.prefill_time_s += elapsed
             self.prefill_tokens_warm += n_tokens
 
-    def _run_prefill(self, prompt: np.ndarray, sp: SamplingParams):
+    def _run_prefill(self, prompt: np.ndarray, sp: SamplingParams,
+                     uid: int = -1):
         """Prompt -> (first generated token, finite flag, scratch caches).
 
         Attention archs (unpaged engines): chunked prefill — the padded
@@ -708,11 +844,14 @@ class ServingEngine:
         elapsed = time.perf_counter() - t0
         traced = self.prefill_traces + self.decode_traces > traces0
         self._book_prefill(n, elapsed, traced)
+        if self.trace is not None:
+            self.trace.emit("prefill", track=uid, ts=t0, dur=elapsed,
+                            step=self.steps, tokens=n, traced=traced)
         return first, bool(finite[0]), scratch
 
     def _run_prefill_paged(
         self, suffix: np.ndarray, hit_ids: List[int], new_ids: List[int],
-        sp: SamplingParams, n_total: int,
+        sp: SamplingParams, n_total: int, uid: int = -1,
     ) -> Tuple[int, bool]:
         """Suffix-only prefill, writing K/V straight into the page pool.
 
@@ -750,7 +889,11 @@ class ServingEngine:
         first = int(nxt[0])
         self.caches["layers"] = [{"attn": p} for p in new_pools]
         elapsed = time.perf_counter() - t0
-        self._book_prefill(m, elapsed, self.prefill_traces > traces0)
+        traced = self.prefill_traces > traces0
+        self._book_prefill(m, elapsed, traced)
+        if self.trace is not None:
+            self.trace.emit("prefill", track=uid, ts=t0, dur=elapsed,
+                            step=self.steps, tokens=m, traced=traced)
         return first, bool(finite[0])
 
     def _replay_fn(self, bucket: int) -> Callable:
@@ -772,7 +915,9 @@ class ServingEngine:
                 "table": table1,
                 "pos": pos1,
             }
-            with layers.serving_mode(self.matmul_mode, kernel=self.matmul_kernel):
+            with jax.named_scope("serving_replay"), layers.serving_mode(
+                self.matmul_mode, kernel=self.matmul_kernel
+            ):
                 _, new_caches = T.decode_tokens(
                     params, tokens, caches, self.cfg,
                     attn_kernel=self.attn_kernel,
@@ -822,6 +967,9 @@ class ServingEngine:
         req.t_first_token = now
         req.output.append(first)
         req.t_tokens.append(now)
+        self._hist_ttft.observe(now - req.t_submit)
+        if self.trace is not None:
+            self.trace.emit("first_token", track=req.uid, step=self.steps)
         if req.eos_id is not None and first == req.eos_id:
             req.finish_reason = "eos"
         elif req.max_new_tokens <= 1:
@@ -830,7 +978,24 @@ class ServingEngine:
             return False
         req.t_done = time.perf_counter()
         self.done.append(req)
+        self._book_terminal(req)
         return True
+
+    def _book_terminal(self, req: Request) -> None:
+        """Registry/trace booking for one terminal request — called exactly
+        once wherever a request leaves the engine with ``t_done`` stamped
+        (shed-at-submit excepted: those never entered and emit their own
+        ``shed`` instant). Successful terminals book the end-to-end latency
+        histogram; every terminal emits a ``retire`` span instant."""
+        if req.finish_reason in ("eos", "length"):
+            self.completed += 1
+            if req.t_done and req.t_submit:
+                self._hist_latency.observe(req.t_done - req.t_submit)
+        elif req.finish_reason == "cancelled":
+            self.cancelled += 1
+        if self.trace is not None:
+            self.trace.emit("retire", track=req.uid, step=self.steps,
+                            finish_reason=req.finish_reason)
 
     def _install(self, slot_idx: int, req: Request) -> bool:
         """Admit ``req`` into lane ``slot_idx``. Returns False — leaving the
@@ -846,7 +1011,7 @@ class ServingEngine:
             return self._install_paged(slot_idx, req)
         sp = req.sampling or _GREEDY
         first, finite, scratch = self._run_prefill(
-            np.asarray(req.prompt, np.int64), sp
+            np.asarray(req.prompt, np.int64), sp, uid=req.uid
         )
         if not finite:
             self._quarantine(req)
@@ -918,12 +1083,16 @@ class ServingEngine:
             self.allocator.release(hit_ids)  # un-retain; stay queued
             return False
         self.allocator.note_prefix_stats(len(hit_ids), n // ps)
+        if self.trace is not None:
+            self.trace.emit("prefix_hit" if hit_ids else "prefix_miss",
+                            track=req.uid, step=self.steps,
+                            pages=len(hit_ids))
         new_ids = self.allocator.alloc(need_new)
         row_ids = hit_ids + new_ids
         n_hit = len(hit_ids) * ps
 
         first, finite = self._run_prefill_paged(
-            prompt[n_hit:], hit_ids, new_ids, sp, n
+            prompt[n_hit:], hit_ids, new_ids, sp, n, uid=req.uid
         )
         if not finite:
             self.allocator.release(row_ids)
@@ -989,6 +1158,10 @@ class ServingEngine:
         new_ids = self.allocator.alloc(need_new)
         row_ids = hit_ids + new_ids
         h = len(hit_ids) * ps  # committed tokens covered by hits
+        if self.trace is not None:
+            self.trace.emit("prefix_hit" if hit_ids else "prefix_miss",
+                            track=req.uid, step=self.steps,
+                            pages=len(hit_ids))
 
         if h < n:
             # Hits stopped inside the prompt: re-prefill the remainder the
@@ -996,7 +1169,7 @@ class ServingEngine:
             # already committed — discard it; a nonfinite result quarantines
             # exactly like a fresh prefill).
             _, finite = self._run_prefill_paged(
-                prompt[h:], hit_ids, new_ids, sp, n
+                prompt[h:], hit_ids, new_ids, sp, n, uid=req.uid
             )
             if not finite:
                 self.allocator.release(row_ids)
@@ -1057,6 +1230,10 @@ class ServingEngine:
                 self.allocator.release(hit_ids)  # un-retain; stay queued
                 return False
             self.allocator.note_prefix_stats(len(hit_ids), n // ps)
+            if self.trace is not None:
+                self.trace.emit("prefix_hit" if hit_ids else "prefix_miss",
+                                track=req.uid, step=self.steps,
+                                pages=len(hit_ids))
             row_ids = hit_ids + self.allocator.alloc(need_new)
             self.slots[slot_idx] = _Slot(
                 req=req, remaining=req.max_new_tokens, pages=row_ids,
@@ -1149,6 +1326,10 @@ class ServingEngine:
         self._book_prefill(
             grant, elapsed, self.prefill_traces > traces0, new_request=False
         )
+        if self.trace is not None:
+            self.trace.emit("prefill_chunk", track=req.uid, ts=t0,
+                            dur=elapsed, step=self.steps, start=start,
+                            grant=grant, final=final)
         if not finite:
             self.allocator.release(slot.pages)
             self.slots[slot_idx] = _Slot()
@@ -1216,6 +1397,10 @@ class ServingEngine:
         self._book_prefill(
             grant, elapsed, self.prefill_traces > traces0, new_request=False
         )
+        if self.trace is not None:
+            self.trace.emit("prefill_chunk", track=req.uid, ts=t0,
+                            dur=elapsed, step=self.steps, start=start,
+                            grant=grant, final=end >= n)
         if end >= n:
             self._finalize_unpaged(slot_idx, int(nxt[0]), bool(finite[0]))
         else:
@@ -1252,6 +1437,10 @@ class ServingEngine:
         elapsed = time.perf_counter() - t0
         traced = self.prefill_traces + self.decode_traces > traces0
         self._book_prefill(grant, elapsed, traced, new_request=False)
+        if self.trace is not None:
+            self.trace.emit("prefill_chunk", track=req.uid, ts=t0,
+                            dur=elapsed, step=self.steps, start=start,
+                            grant=grant, final=end >= n)
         if end >= n:
             # The monolithic replay checks the final step only (an SSM NaN
             # propagates through the state) — keep that contract.
@@ -1287,6 +1476,7 @@ class ServingEngine:
         if slot.req.finish_reason in ("eos", "length"):
             self._fault_streak = 0  # a healthy completion clears the streak
         self.done.append(slot.req)
+        self._book_terminal(slot.req)
         if self.paged:
             # Reclaim pages and point the lane at the trash page so its dead
             # writes can never land in a page the allocator hands out again.
@@ -1324,6 +1514,9 @@ class ServingEngine:
             self._preempted_uids.add(req.uid)
             self.queue.appendleft(req)
             self.preempted += 1
+            if self.trace is not None:
+                self.trace.emit("preempt", track=req.uid, step=self.steps,
+                                prefilling=True)
             return
         pos = len(req.prompt) + len(req.output) - 1
         ctx = list(req.prompt) + req.output
@@ -1341,6 +1534,9 @@ class ServingEngine:
         self._preempted_uids.add(req.uid)
         self.queue.appendleft(req)
         self.preempted += 1
+        if self.trace is not None:
+            self.trace.emit("preempt", track=req.uid, step=self.steps,
+                            prefilling=False, committed=len(req.output))
 
     def _grow_lane(self, slot_idx: int, delta: int, touched: Dict) -> None:
         """Grow lane ``slot_idx``'s page list to cover its next ``delta``
@@ -1407,6 +1603,7 @@ class ServingEngine:
         req.finish_reason = "error"
         req.t_done = time.perf_counter()
         self.done.append(req)
+        self._book_terminal(req)
         self._note_fault(req)
 
     def _note_fault(self, req: Request) -> None:
@@ -1417,6 +1614,9 @@ class ServingEngine:
         self.errors += 1
         self._fault_at.pop(req.uid, None)
         self._fault_streak += 1
+        if self.trace is not None:
+            self.trace.emit("quarantine", track=req.uid, step=self.steps,
+                            streak=self._fault_streak)
         if self._fault_streak >= 3 and self.attn_kernel == "pallas":
             self._fallback_kernel()
 
@@ -1428,6 +1628,8 @@ class ServingEngine:
         self.attn_kernel = "xla"
         self.kernel_fallbacks += 1
         self._fault_streak = 0
+        if self.trace is not None:
+            self.trace.emit("kernel_fallback", step=self.steps, kernel="xla")
         self._decode = jax.jit(self._decode_impl, static_argnames=("sampled",))
         self._prefill_cache.clear()
         self._replay_cache.clear()
@@ -1440,10 +1642,11 @@ class ServingEngine:
                 matmul_kernel=self.matmul_kernel, attn_kernel=self.attn_kernel,
             )
             self._spec.controller = old.controller
+            self._spec.trace = self.trace
             for attr in (
                 "rounds", "lane_rounds", "proposed", "accepted", "committed",
                 "draft_time_s", "verify_time_s", "compile_s", "draft_traces",
-                "verify_traces",
+                "verify_traces", "trace_step",
             ):
                 setattr(self._spec, attr, getattr(old, attr))
 
@@ -1484,7 +1687,11 @@ class ServingEngine:
             r.finish_reason = "timeout"
             r.t_done = now
             self.done.append(r)
+            self._book_terminal(r)
             self.timed_out += 1
+            if self.trace is not None:
+                self.trace.emit("shed", track=r.uid, step=self.steps,
+                                where="queue_deadline")
         for i, slot in enumerate(self.slots):
             if slot.req is not None and expired(slot.req):
                 slot.req.finish_reason = "timeout"
@@ -1543,6 +1750,9 @@ class ServingEngine:
             req.finish_reason = "shed"
             req.t_done = req.t_submit
             self.shed += 1
+            if self.trace is not None:
+                self.trace.emit("shed", track=req.uid, step=self.steps,
+                                where="queue_full")
             raise EngineOverloaded(
                 f"queue full ({len(self.queue)}/{self.config.max_queue}): "
                 f"request {req.uid} shed"
@@ -1646,6 +1856,7 @@ class ServingEngine:
                 r.finish_reason = "cancelled"
                 r.t_done = time.perf_counter()
                 self.done.append(r)
+                self._book_terminal(r)
                 return True
         for i, slot in enumerate(self.slots):
             if slot.req is not None and slot.req.uid == uid:
@@ -1672,13 +1883,27 @@ class ServingEngine:
             )
             if free is None:
                 break
+            # Capture before _install: monolithic prefill books the first
+            # token into req.output, which would make every fresh admission
+            # look like a resume after the fact.
+            resumed = self._is_resume(req)
+            t_install = time.perf_counter()
             if not self._install(free, req):
                 break  # pool full: wait for pages to be reclaimed
             self.queue.remove(req)
             self._sched.note_admitted(req.uid)
+            if self.trace is not None:
+                # ts = pre-install instant, so the admit sorts ahead of the
+                # prefill span _install just emitted.
+                self.trace.emit(
+                    "resume" if resumed else "admit",
+                    track=req.uid, step=self.steps, ts=t_install,
+                    queued_s=t_install - req.t_submit,
+                )
             self._preempted_uids.discard(req.uid)
             if not req.t_admit:
                 req.t_admit = time.perf_counter()
+                self._hist_qwait.observe(req.t_admit - req.t_submit)
 
     def _spec_step(self):
         """One speculative engine iteration: draft k tokens per lane, verify
@@ -1710,6 +1935,7 @@ class ServingEngine:
             max(0, max(s.remaining for s in self.slots if s.req) - 1),
         )
         fault = self._fault_row(window=k_want + 1)
+        dec.trace_step = self.steps  # spec spans land on the engine lane
         greedy, drafts, finite, self.caches, k = dec.propose_and_verify(
             self.params, self.caches, self.tokens, k_want,
             fault=jnp.asarray(fault),
@@ -1738,6 +1964,8 @@ class ServingEngine:
             used = 0
             done = False
             for t in commit:
+                if slot.req.t_tokens:  # in-round gaps book as 0.0
+                    self._hist_itl.observe(now - slot.req.t_tokens[-1])
                 slot.req.output.append(int(t))
                 slot.req.t_tokens.append(now)
                 self.decoded_tokens += 1
@@ -1786,19 +2014,70 @@ class ServingEngine:
         grow optimistic lanes (preempting on exhaustion), decode one token
         for all active slots (or run one speculation round), retire finished
         requests. Wrapped by the serving watchdog: every call is timed into
-        the step-time percentiles and heartbeats ``heartbeat_path``."""
+        the step-time percentiles (and the ``engine_step_seconds``
+        histogram) and heartbeats ``heartbeat_path`` (throttled by
+        ``heartbeat_interval_s``; the drain's final beat always lands).
+        With tracing on, the whole iteration lands as a ``step`` span on
+        the engine lane; with ``drift_every`` set, every Nth productive
+        step samples the quant-drift monitor *after* the timed window."""
+        t0 = time.perf_counter()
         self._step_timer.start()
         try:
             out = self._step_impl()
         finally:
-            self._step_timer.stop()
+            self._hist_step.observe(self._step_timer.stop())
+        if self.trace is not None:
+            self.trace.emit(
+                "step", ts=t0, dur=time.perf_counter() - t0, step=self.steps,
+                active=sum(1 for s in self.slots if s.req is not None),
+                queued=len(self.queue),
+            )
         if self._heartbeat is not None:
             self._heartbeat.beat(
                 self.steps,
                 {"active": sum(1 for s in self.slots if s.req is not None),
                  "queued": len(self.queue)},
+                force=not out and not self.queue,
             )
+        if (
+            self._drift is not None
+            and out
+            and self.steps != self._drift_last_step
+            and self.steps % self.config.drift_every == 0
+        ):
+            self._drift_last_step = self.steps
+            self._drift_sample()
         return out
+
+    def _drift_sample(self) -> None:
+        """One monitoring forward: re-run the live decode batch *eagerly*
+        (no jit) so the ``core.tap`` sites in ``models.layers.dense`` fire
+        — ``tap.tag`` is a structural no-op under jit but fires on concrete
+        arrays — feeding the drift monitor. Logits and cache writes are
+        discarded (the update is functional), so serving state is
+        untouched; the cost is one eager forward every ``drift_every``
+        steps, entirely outside the watchdog-timed window. The first
+        sampling failure disables the monitor for the engine's lifetime:
+        telemetry must never take the serving loop down."""
+        if self._drift_broken:
+            return
+        if not any(
+            s.req is not None and not s.prefilling for s in self.slots
+        ):
+            return  # nothing decoding: the batch rows are all garbage
+
+        def forward():
+            with layers.serving_mode(self.matmul_mode, kernel="xla"):
+                T.decode_step(
+                    self.params, self.tokens, self.caches, self.cfg,
+                    attn_kernel="gather" if self.paged else self.attn_kernel,
+                )
+
+        try:
+            self._drift.sample(forward)
+        except Exception as e:  # pragma: no cover - defensive
+            self._drift_broken = True
+            _LOG.warning("quant-drift monitor disabled: %s", e)
 
     def _step_impl(self):
         self._shed_expired()
@@ -1851,6 +2130,11 @@ class ServingEngine:
         else:
             self.decode_time_s += elapsed
             self.decode_tokens_warm += n_active
+        if self.trace is not None:
+            self.trace.emit(
+                "decode_step", ts=t0, dur=elapsed, step=self.steps,
+                lanes=n_active, traced=self.decode_traces > traces0,
+            )
         faulted: List[Request] = []
         for i, slot in enumerate(self.slots):
             if slot.req is None or slot.prefilling:
@@ -1864,6 +2148,8 @@ class ServingEngine:
                 self._retire(i)
                 continue
             tok = int(nxt_np[i, 0])
+            if slot.req.t_tokens:
+                self._hist_itl.observe(now - slot.req.t_tokens[-1])
             slot.req.output.append(tok)
             slot.req.t_tokens.append(now)
             self.decoded_tokens += 1
@@ -1880,11 +2166,41 @@ class ServingEngine:
         return True
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive until queue and slots drain (or the step budget ends)."""
-        for _ in range(max_steps):
-            if not self.step() and not self.queue:
-                break
+        """Drive until queue and slots drain (or the step budget ends).
+        ``EngineConfig.profile_dir`` wraps the whole drive in a
+        ``jax.profiler`` trace window (the ``jax.named_scope`` labels on
+        the prefill/decode/verify dispatches show up there)."""
+        self.start_profile()
+        try:
+            for _ in range(max_steps):
+                if not self.step() and not self.queue:
+                    break
+        finally:
+            self.stop_profile()
         return self.done
+
+    def start_profile(self) -> None:
+        """Open a ``jax.profiler`` trace window writing to
+        ``EngineConfig.profile_dir``; no-op when unset or already open.
+        Best-effort: a jaxlib without profiler support must never take the
+        serving loop down."""
+        if not self.config.profile_dir or self._profiling:
+            return
+        try:
+            jax.profiler.start_trace(self.config.profile_dir)
+            self._profiling = True
+        except Exception as e:  # pragma: no cover - backend-dependent
+            _LOG.warning("jax profiler trace not started: %s", e)
+
+    def stop_profile(self) -> None:
+        """Close the profiler window opened by :meth:`start_profile`."""
+        if not self._profiling:
+            return
+        self._profiling = False
+        try:
+            jax.profiler.stop_trace()
+        except Exception as e:  # pragma: no cover - backend-dependent
+            _LOG.warning("jax profiler trace not stopped: %s", e)
 
     def _attn_step_ms(self) -> float:
         """Probe the decode-attention hot path: best-of-3 warm wall time (ms)
@@ -1936,53 +2252,128 @@ class ServingEngine:
             return "xla"
         return self.attn_kernel
 
-    def engine_stats(self) -> EngineStats:
-        """The typed v7 stats record (``stats()`` is its flat dict view)."""
-        finished = [r for r in self.done if r.finish_reason in ("eos", "length")]
-        lat = [
-            r.t_done - r.t_submit for r in finished if r.t_done and r.t_submit
-        ]
-        ttft = [
-            r.t_first_token - r.t_submit
-            for r in self.done
-            if r.t_first_token and r.t_submit
-        ]
-        # Queue wait: submit -> first admission (preemption re-admissions
-        # don't re-stamp — the metric is time to first service).
-        qwait = [
-            r.t_admit - r.t_submit
-            for r in self.done
-            if r.t_admit and r.t_submit
-        ]
-        # Inter-token latencies from the per-token event stamps — the same
-        # numbers a generate() client observes between TokenEvents.
-        itl: List[float] = []
-        for r in self.done:
-            itl.extend(
-                b - a for a, b in zip(r.t_tokens[:-1], r.t_tokens[1:])
-            )
+    def _refresh_gauges(self) -> None:
+        """Mirror point-in-time engine state into registry gauges, so the
+        Prometheus exposition, the JSONL snapshots, and the v8 stats view
+        all read one source. Counters/histograms book live at their event
+        sites; everything that is a *reading* of live structures (pool
+        occupancy, queue depth, rolling step percentiles, scheduler
+        counters owned by the scheduler object) refreshes here, at scrape
+        time."""
+        m = self.metrics
         alloc = self.allocator
+        m.gauge("engine_queue_depth", "requests waiting for a lane").set(
+            len(self.queue)
+        )
+        m.gauge("engine_active_lanes", "lanes holding a request").set(
+            sum(1 for s in self.slots if s.req is not None)
+        )
+        m.gauge("engine_step_p50_ms", "rolling step-time p50").set(
+            self._step_timer.percentile(50) * 1e3
+        )
+        m.gauge("engine_step_p95_ms", "rolling step-time p95").set(
+            self._step_timer.percentile(95) * 1e3
+        )
+        m.gauge("engine_step_stalled", "watchdog straggler flag").set(
+            1.0 if self._step_timer.is_straggling else 0.0
+        )
+        m.gauge("kv_pages_capacity", "page-pool capacity").set(
+            float(alloc.capacity) if alloc else 0.0
+        )
+        m.gauge("kv_pages_in_use", "pages currently owned by lanes").set(
+            float(alloc.in_use()) if alloc else 0.0
+        )
+        m.gauge("kv_pages_cached", "prefix-cache pages (reclaimable)").set(
+            float(alloc.cached_pages()) if alloc else 0.0
+        )
+        m.gauge("kv_pages_peak", "peak pages in use").set(
+            float(alloc.peak_in_use) if alloc else 0.0
+        )
+        m.gauge("kv_pool_occupancy", "in-use fraction of the pool").set(
+            alloc.in_use() / alloc.capacity if alloc else 0.0
+        )
+        m.gauge("kv_pool_peak_occupancy", "peak in-use fraction").set(
+            alloc.peak_in_use / alloc.capacity if alloc else 0.0
+        )
+        m.gauge("prefix_hit_rate", "prefix-cache page hit rate").set(
+            alloc.hit_rate() if alloc else 0.0
+        )
+        m.gauge("prefix_hit_pages", "prefix-cache pages reused").set(
+            float(alloc.prefix_hit_pages) if alloc else 0.0
+        )
+        m.gauge("sched_chunks", "prefill chunk calls planned").set(
+            float(self._sched.chunks)
+        )
+        m.gauge("sched_budget_limited_steps",
+                "steps where the prefill budget bound").set(
+            float(self._sched.budget_limited_steps)
+        )
+        m.gauge("sched_aging_promotions",
+                "requests promoted by the aging bound").set(
+            float(self._sched.aging_promotions)
+        )
+        m.gauge("sched_peak_step_prefill_tokens",
+                "max prefill tokens in one step").set(
+            float(self._sched.peak_step_tokens)
+        )
+        if self._spec is not None:
+            m.gauge("spec_acceptance_rate",
+                    "draft-token acceptance rate (EMA source)").set(
+                self._spec.acceptance_rate()
+            )
+        if self.trace is not None:
+            m.gauge("trace_events", "span events currently in the ring").set(
+                float(len(self.trace))
+            )
+            m.gauge("trace_dropped",
+                    "span events aged out of the bounded ring").set(
+                float(self.trace.dropped)
+            )
+        if self._drift is not None:
+            self._drift.publish(m)
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the engine registry (gauges
+        refreshed first)."""
+        self._refresh_gauges()
+        return self.metrics.prometheus_text()
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-safe nested registry snapshot (one JSONL line per call)."""
+        self._refresh_gauges()
+        return self.metrics.snapshot()
+
+    def drift_report(self) -> dict:
+        """Per-site drift diagnostics ({} when ``drift_every`` is off)."""
+        return self._drift.report() if self._drift is not None else {}
+
+    def engine_stats(self) -> EngineStats:
+        """The typed v8 stats record (``stats()`` is its flat dict view),
+        derived from the metrics registry: counts read registry counters
+        (through the legacy attribute facade), percentiles read the
+        bounded-reservoir registry histograms booked live at the event
+        sites, point-in-time readings go through :meth:`_refresh_gauges`."""
+        self._refresh_gauges()
+        gv = lambda name: self.metrics.gauge(name).value  # noqa: E731
         s = EngineStats(
-            completed=len(finished),
-            cancelled=sum(
-                1 for r in self.done if r.finish_reason == "cancelled"
-            ),
+            completed=self.completed,
+            cancelled=self.cancelled,
             preempted=self.preempted,
             shed=self.shed,
             timed_out=self.timed_out,
             errors=self.errors,
             kernel_fallbacks=self.kernel_fallbacks,
-            step_p50_ms=self._step_timer.percentile(50) * 1e3,
-            step_p95_ms=self._step_timer.percentile(95) * 1e3,
-            step_stalled=1.0 if self._step_timer.is_straggling else 0.0,
+            step_p50_ms=gv("engine_step_p50_ms"),
+            step_p95_ms=gv("engine_step_p95_ms"),
+            step_stalled=gv("engine_step_stalled"),
             decode_steps=self.steps,
             decoded_tokens=self.decoded_tokens,
-            mean_latency_s=float(np.mean(lat)) if lat else 0.0,
-            mean_ttft_s=float(np.mean(ttft)) if ttft else 0.0,
-            ttft_p50_s=_percentile(ttft, 50),
-            ttft_p95_s=_percentile(ttft, 95),
-            itl_p50_s=_percentile(itl, 50),
-            itl_p95_s=_percentile(itl, 95),
+            mean_latency_s=self._hist_latency.mean,
+            mean_ttft_s=self._hist_ttft.mean,
+            ttft_p50_s=self._hist_ttft.percentile(50),
+            ttft_p95_s=self._hist_ttft.percentile(95),
+            itl_p50_s=self._hist_itl.percentile(50),
+            itl_p95_s=self._hist_itl.percentile(95),
             prefill_tokens=self.prefill_tokens,
             prefill_time_s=self.prefill_time_s,
             prefill_compile_s=self.prefill_compile_s,
@@ -2012,37 +2403,71 @@ class ServingEngine:
             decode_traces=self.decode_traces,
             # Page-pool accounting (zeros when unpaged, keeping the schema flat).
             kv_page_size=float(self.page_size) if self.paged else 0.0,
-            kv_pages_capacity=float(alloc.capacity) if alloc else 0.0,
-            kv_pages_in_use=float(alloc.in_use()) if alloc else 0.0,
-            kv_pages_cached=float(alloc.cached_pages()) if alloc else 0.0,
-            kv_pages_peak=float(alloc.peak_in_use) if alloc else 0.0,
-            kv_pool_occupancy=(
-                alloc.in_use() / alloc.capacity if alloc else 0.0
-            ),
-            kv_pool_peak_occupancy=(
-                alloc.peak_in_use / alloc.capacity if alloc else 0.0
-            ),
-            prefix_hit_rate=alloc.hit_rate() if alloc else 0.0,
-            prefix_hit_pages=float(alloc.prefix_hit_pages) if alloc else 0.0,
+            kv_pages_capacity=gv("kv_pages_capacity"),
+            kv_pages_in_use=gv("kv_pages_in_use"),
+            kv_pages_cached=gv("kv_pages_cached"),
+            kv_pages_peak=gv("kv_pages_peak"),
+            kv_pool_occupancy=gv("kv_pool_occupancy"),
+            kv_pool_peak_occupancy=gv("kv_pool_peak_occupancy"),
+            prefix_hit_rate=gv("prefix_hit_rate"),
+            prefix_hit_pages=gv("prefix_hit_pages"),
             attn_kernel=self._attn_kernel_stat(),
             matmul_kernel=self.matmul_kernel,
             matmul_mode=self.matmul_mode,
             attn_step_ms=self._attn_step_ms(),
             spec_enabled=1.0 if self._spec is not None else 0.0,
-            queue_wait_p50_s=_percentile(qwait, 50),
-            queue_wait_p95_s=_percentile(qwait, 95),
+            queue_wait_p50_s=self._hist_qwait.percentile(50),
+            queue_wait_p95_s=self._hist_qwait.percentile(95),
             sched_policy=self.config.sched_policy,
             sched_prefill_budget=float(self.config.prefill_budget),
-            sched_chunks=float(self._sched.chunks),
-            sched_budget_limited_steps=float(self._sched.budget_limited_steps),
-            sched_aging_promotions=float(self._sched.aging_promotions),
-            sched_peak_step_prefill_tokens=float(self._sched.peak_step_tokens),
+            sched_chunks=gv("sched_chunks"),
+            sched_budget_limited_steps=gv("sched_budget_limited_steps"),
+            sched_aging_promotions=gv("sched_aging_promotions"),
+            sched_peak_step_prefill_tokens=gv("sched_peak_step_prefill_tokens"),
+            trace_enabled=1.0 if self.trace is not None else 0.0,
+            trace_events=(
+                float(len(self.trace)) if self.trace is not None else 0.0
+            ),
+            trace_dropped=(
+                float(self.trace.dropped) if self.trace is not None else 0.0
+            ),
+            drift_enabled=1.0 if self._drift is not None else 0.0,
         )
         if self._spec is not None:
             for k, v in self._spec.stats().items():
                 setattr(s, k, v)
+        if self._drift is not None:
+            for k, v in self._drift.stats().items():
+                setattr(s, k, float(v))
         return s
 
     def stats(self) -> Dict:
-        """The flat dict view of :meth:`engine_stats` (stats schema v7)."""
+        """The flat dict view of :meth:`engine_stats` (stats schema v8)."""
         return self.engine_stats().as_dict()
+
+
+def _install_counter_properties() -> None:
+    """Install the legacy counter attributes as registry-backed properties.
+
+    ``eng.steps`` reads ``Counter.value`` (as int for integer-valued
+    counters); ``eng.steps += 1`` goes get -> add -> set through
+    ``Counter.set_`` (which refuses to move a counter backwards, so the
+    facade keeps Prometheus counter semantics). ``__init__``'s ``= 0``
+    assignments hit the same setter before anything has incremented.
+    """
+
+    def make(attr: str, integer: bool):
+        def fget(self):
+            v = self._metric_counters[attr].value
+            return int(v) if integer else v
+
+        def fset(self, v):
+            self._metric_counters[attr].set_(float(v))
+
+        return property(fget, fset)
+
+    for attr, (_name, integer, _help) in _COUNTER_METRICS.items():
+        setattr(ServingEngine, attr, make(attr, integer))
+
+
+_install_counter_properties()

@@ -73,6 +73,9 @@ class StepScheduler:
         self.peak_step_tokens = 0
         self._first_seen: dict = {}  # uid -> engine step first observed queued
         self._promoted: set = set()  # uids already counted as aging promotions
+        # Optional TraceRing attached by the engine (PR 8). Kept as a plain
+        # attribute so the scheduler stays buildable without the obs stack.
+        self.trace = None
 
     # -- admission ordering -------------------------------------------------
 
@@ -102,6 +105,11 @@ class StepScheduler:
                 ):
                     self._promoted.add(r.uid)
                     self.aging_promotions += 1
+                    if self.trace is not None:
+                        self.trace.emit(
+                            "sched_promote", track=r.uid, step=step,
+                            waited=step - self._first_seen[r.uid],
+                        )
 
         def key(i: int):
             r = queue[i]
@@ -144,6 +152,12 @@ class StepScheduler:
                 break
         if limited:
             self.budget_limited_steps += 1
+            if self.trace is not None:
+                self.trace.emit(
+                    "sched_budget_limited",
+                    budget=self.prefill_budget,
+                    planned=self.prefill_budget - left,
+                )
         self.chunks += len(plan)
         used = self.prefill_budget - left
         if used > self.peak_step_tokens:

@@ -164,6 +164,11 @@ class SpecDecoder:
         self.compile_s = 0.0  # draft+verify calls that triggered a trace
         self.draft_traces = 0
         self.verify_traces = 0
+        # Span tracing (PR 8): the engine attaches its TraceRing (or None)
+        # and stamps trace_step before each round, so draft/verify spans
+        # land on the engine lane with the right step index.
+        self.trace = None
+        self.trace_step = 0
 
         # Draft and verify trace the same kernel selection as the engine's
         # plain decode (``attn_kernel`` / ``matmul_kernel`` from the
@@ -172,7 +177,9 @@ class SpecDecoder:
         # the two must go through one attention implementation.
         def draft_impl(params, caches, token):
             self.draft_traces += 1  # python side effect: bumps only tracing
-            with layers.serving_mode(spec.draft_mode, kernel=matmul_kernel):
+            with jax.named_scope("spec_draft"), layers.serving_mode(
+                spec.draft_mode, kernel=matmul_kernel
+            ):
                 logits, new_caches = T.decode_step(
                     params, token, caches, cfg, layers_limit=spec.draft_layers,
                     attn_kernel=attn_kernel,
@@ -182,7 +189,9 @@ class SpecDecoder:
 
         def verify_impl(params, caches, tokens, fault):
             self.verify_traces += 1
-            with layers.serving_mode(matmul_mode, kernel=matmul_kernel):
+            with jax.named_scope("spec_verify"), layers.serving_mode(
+                matmul_mode, kernel=matmul_kernel
+            ):
                 logits, new_caches = T.verify_step(
                     params, tokens, caches, cfg, attn_kernel=attn_kernel
                 )
@@ -249,6 +258,12 @@ class SpecDecoder:
             self.draft_time_s += t1 - t0
             self.verify_time_s += t2 - t1
         self.rounds += 1
+        if self.trace is not None:
+            self.trace.emit("spec_draft", ts=t0, dur=t1 - t0,
+                            step=self.trace_step, k=k)
+            self.trace.emit("spec_verify", ts=t1, dur=t2 - t1,
+                            step=self.trace_step,
+                            lanes=int(tokens.shape[0]))
         return np_greedy, np_drafts, np_finite, caches, k
 
     def book_lane(self, n_accepted: int, n_committed: int, n_proposed: int) -> None:

@@ -162,6 +162,43 @@ def test_heartbeat_roundtrip(tmp_path):
     assert hb.stale_hosts([str(tmp_path / "hb.json")]) == [7]
 
 
+def test_heartbeat_stale_hosts_unreadable(tmp_path):
+    """Missing/corrupt/field-less heartbeat files report host -1 (presumed
+    dead) rather than raising — the watchdog must survive torn writes."""
+    hb = HeartbeatMonitor(str(tmp_path / "hb.json"), timeout=60.0)
+    missing = str(tmp_path / "never-written.json")
+    corrupt = str(tmp_path / "corrupt.json")
+    with open(corrupt, "w") as f:
+        f.write("{not json")
+    no_field = str(tmp_path / "nofield.json")
+    with open(no_field, "w") as f:
+        f.write('{"host": 3}')  # no "time" key
+    hb.beat(1)
+    assert hb.stale_hosts([missing, corrupt, no_field, hb.path]) == [-1, -1, -1]
+
+
+def test_heartbeat_throttle(tmp_path):
+    """min_interval suppresses writes landing inside the window; force=True
+    bypasses it so a drain's final beat always reaches the file."""
+    hb = HeartbeatMonitor(str(tmp_path / "hb.json"), min_interval=60.0)
+    for step in range(5):
+        hb.beat(step)
+    assert hb.beats == 5 and hb.writes == 1
+    assert hb.read()["step"] == 0  # only the first beat landed
+    hb.beat(99, force=True)
+    assert hb.writes == 2
+    assert hb.read()["step"] == 99
+
+
+def test_heartbeat_no_throttle_by_default(tmp_path):
+    """min_interval=0.0 keeps the legacy write-every-beat behavior."""
+    hb = HeartbeatMonitor(str(tmp_path / "hb.json"))
+    for step in range(5):
+        hb.beat(step)
+    assert hb.writes == 5
+    assert hb.read()["step"] == 4
+
+
 # ---------------------------------------------------------------------------
 # gradient compression (error feedback)
 

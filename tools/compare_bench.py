@@ -2,30 +2,39 @@
 baseline and fail on real regressions.
 
     PYTHONPATH=src python tools/compare_bench.py [--current PATH]
-        [--baseline PATH] [--threshold 0.25] [--update-baseline]
+        [--baseline PATH] [--threshold 0.25] [--tail-threshold 1.0]
+        [--update-baseline]
 
 The repo's BENCH_* artifacts existed only as CI uploads until PR 7 — every
 PR produced numbers, nothing compared them. This tool is the trajectory
 gate: ``make bench-compare`` (and the CI step after ``make bench-smoke``)
 diffs the fresh ``benchmarks/results/BENCH_serving.json`` against the
 committed ``benchmarks/results/BENCH_baseline.json`` and exits nonzero when
-any *guarded* metric regressed by more than ``--threshold`` (default 25%):
+any *guarded* metric regressed by more than its threshold:
 
 * ``itl_p50_s``   — lower is better (median inter-token latency)
 * ``ttft_p50_s``  — lower is better (median time to first token)
 * ``decode_tok_per_s`` / ``prefill_tok_per_s`` — higher is better
+* ``itl_p95_s`` / ``ttft_p95_s`` — lower is better, gated at the looser
+  ``--tail-threshold`` (default 100%): a p95 over a handful of smoke
+  requests is one noisy sample, but the pre-PR-7 pathology (p95 ~1000x
+  p50) must still trip it;
+* ``obs_overhead_*_frac`` — gated **absolutely** on the current run: the
+  tracing+metrics arm may cost at most ``--obs-threshold`` (default 5%)
+  of the untraced arm's warm throughput/latency, regardless of what the
+  baseline recorded. This is the PR-8 observability contract, not a
+  trend diff.
 
 Every other shared numeric metric is printed informationally (schema drift
 is visible, not fatal — the BENCH schema is append-only). Runs are gated
 only against a baseline with the same workload meta (arch / n_requests /
 max_new / max_batch / max_len / quick / matmul_mode) — the committed
 baseline is a ``--quick`` smoke run, matching what CI produces; a full
-``make bench`` run against it prints a skip instead of noise. The
-threshold is
-deliberately loose: CPU CI timing jitters run-to-run, and the gate exists
-to catch order-of-magnitude pathologies (the pre-PR-7 ``itl_p95`` was
-~1000x ``itl_p50``), not 5% noise. Refresh the baseline after an accepted
-perf change with ``--update-baseline``.
+``make bench`` run against it prints a skip instead of noise. The relative
+thresholds are deliberately loose: CPU CI timing jitters run-to-run, and
+the gate exists to catch order-of-magnitude pathologies, not 5% noise.
+Refresh the baseline after an accepted perf change with
+``--update-baseline``.
 """
 from __future__ import annotations
 
@@ -47,6 +56,21 @@ GUARDED = {
     "decode_tok_per_s": +1,
     "prefill_tok_per_s": +1,
 }
+
+# latency tails: same directionality, but gated at the looser
+# --tail-threshold (a smoke p95 is a single noisy order statistic)
+TAIL_GUARDED = {
+    "itl_p95_s": -1,
+    "ttft_p95_s": -1,
+}
+
+# absolute ceilings on the *current* run (fraction of baseline-arm perf
+# the obs arm may cost); the committed baseline's values are informational
+OBS_GUARDED = (
+    "obs_overhead_decode_frac",
+    "obs_overhead_prefill_frac",
+    "obs_overhead_itl_p50_frac",
+)
 
 
 def _load(path: str) -> dict:
@@ -76,7 +100,8 @@ _WORKLOAD_KEYS = (
 )
 
 
-def compare(base: dict, cur: dict, threshold: float) -> int:
+def compare(base: dict, cur: dict, threshold: float,
+            tail_threshold: float = 1.0, obs_threshold: float = 0.05) -> int:
     bmeta, cmeta = base.get("meta", {}), cur.get("meta", {})
     mismatch = [
         k for k in _WORKLOAD_KEYS
@@ -94,34 +119,49 @@ def compare(base: dict, cur: dict, threshold: float) -> int:
     bm, cm = base["metrics"], cur["metrics"]
     failures = []
     print(f"{'metric':<34} {'baseline':>12} {'current':>12} {'delta':>8}")
-    for name, direction in GUARDED.items():
-        if name not in bm or name not in cm:
+    for gate, guarded in ((threshold, GUARDED), (tail_threshold, TAIL_GUARDED)):
+        for name, direction in guarded.items():
+            if name not in bm or name not in cm:
+                print(f"{name:<34} {'-':>12} {'-':>12} {'n/a':>8}")
+                continue
+            reg = regression(float(bm[name]), float(cm[name]), direction)
+            flag = ""
+            if reg > gate:
+                failures.append((name, reg, gate))
+                flag = "  << REGRESSION"
+            print(
+                f"{name:<34} {bm[name]:>12.4f} {cm[name]:>12.4f} "
+                f"{-reg * 100:>+7.1f}%{flag}"
+            )
+    for name in OBS_GUARDED:
+        if name not in cm:
             print(f"{name:<34} {'-':>12} {'-':>12} {'n/a':>8}")
             continue
-        reg = regression(float(bm[name]), float(cm[name]), direction)
+        val = float(cm[name])
+        bval = f"{bm[name]:>12.4f}" if name in bm else f"{'-':>12}"
         flag = ""
-        if reg > threshold:
-            failures.append((name, reg))
-            flag = "  << REGRESSION"
-        print(
-            f"{name:<34} {bm[name]:>12.4f} {cm[name]:>12.4f} "
-            f"{-reg * 100:>+7.1f}%{flag}"
-        )
+        if val > obs_threshold:
+            failures.append((name, val, obs_threshold))
+            flag = "  << OVER BUDGET"
+        print(f"{name:<34} {bval} {val:>12.4f} {'(abs)':>8}{flag}")
+    skip = set(GUARDED) | set(TAIL_GUARDED) | set(OBS_GUARDED)
     shared = sorted(
         k for k in bm.keys() & cm.keys()
-        if k not in GUARDED and isinstance(bm[k], (int, float))
+        if k not in skip and isinstance(bm[k], (int, float))
         and isinstance(cm[k], (int, float))
     )
     for name in shared:
         print(f"{name:<34} {bm[name]:>12.4f} {cm[name]:>12.4f}")
     if failures:
         print(
-            f"\nFAIL: {len(failures)} metric(s) regressed past "
-            f"{threshold:.0%}: "
-            + ", ".join(f"{n} ({r:+.0%})" for n, r in failures)
+            f"\nFAIL: {len(failures)} metric(s) past their gate: "
+            + ", ".join(f"{n} ({r:+.0%} > {g:.0%})" for n, r, g in failures)
         )
         return 1
-    print(f"\nOK: no guarded metric regressed past {threshold:.0%}")
+    print(
+        f"\nOK: no guarded metric regressed past {threshold:.0%} "
+        f"(tails {tail_threshold:.0%}, obs overhead {obs_threshold:.0%} abs)"
+    )
     return 0
 
 
@@ -135,6 +175,12 @@ def main(argv=None) -> int:
     )
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max tolerated fractional regression (0.25 = 25%%)")
+    ap.add_argument("--tail-threshold", type=float, default=1.0,
+                    help="looser gate for the p95 latency tails "
+                         "(1.0 = 100%% — one noisy smoke sample)")
+    ap.add_argument("--obs-threshold", type=float, default=0.05,
+                    help="absolute ceiling on the obs_overhead_* fractions "
+                         "of the current run (0.05 = 5%%)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="copy --current over --baseline and exit")
     args = ap.parse_args(argv)
@@ -148,7 +194,8 @@ def main(argv=None) -> int:
             f"{args.baseline}: missing — commit one with --update-baseline"
         )
     base, cur = _load(args.baseline), _load(args.current)
-    return compare(base, cur, args.threshold)
+    return compare(base, cur, args.threshold, args.tail_threshold,
+                   args.obs_threshold)
 
 
 if __name__ == "__main__":
