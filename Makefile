@@ -12,26 +12,32 @@
 #                     again with an injected NaN (nonfinite-guard smoke)
 #   make bench-smoke  serving throughput smoke (baseline + spec-decode +
 #                     scheduler + compile-cache arms) + paged-attention
-#                     microbench + overload arm
+#                     microbench + overload arm + replica-router chaos arm
 #                     -> results/BENCH_serving.json + BENCH_serving_spec.json
 #                        + BENCH_serving_sched.json
 #                        + BENCH_paged_attention.json
 #                        + BENCH_serving_overload.json
+#                        + BENCH_serving_chaos.json
 #   make bench-attn   paged-attention decode microbench (kernel vs gather
 #                     oracle) -> results/BENCH_paged_attention.json
 #   make bench-overload  oversubscribed serving arm (~50% pool, optimistic
 #                     admission: preemption bit-exactness vs the uncontended
 #                     oracle, deadline + shed sub-arms)
 #                     -> results/BENCH_serving_overload.json
+#   make bench-chaos  replica-router fault arms (kill-and-migrate oracle
+#                     exactness, NaN breaker, stall degrade/heal, retry
+#                     burst) -> results/BENCH_serving_chaos.json
 #   make bench-compare  regression gate: diff the fresh BENCH_serving.json
 #                     against the committed BENCH_baseline.json; fails on
-#                     >25% regression of itl_p50 / ttft_p50 / throughput
+#                     >25% regression of itl_p50 / ttft_p50 / throughput;
+#                     then gate the chaos artifact's absolute recovery
+#                     invariants (migrated > 0, lost == 0, oracle_exact)
 #   make bench        every paper table + serving (slow; trains subjects once)
 
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-strict example-smoke bench-smoke bench-attn \
-	bench-overload bench-compare bench
+	bench-overload bench-chaos bench-compare bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -50,6 +56,7 @@ bench-smoke:
 	$(PY) -m benchmarks.serving_throughput --quick
 	$(PY) -m benchmarks.paged_attention_bench --quick
 	$(PY) -m benchmarks.serving_overload --quick
+	$(PY) -m benchmarks.serving_chaos --quick
 
 bench-attn:
 	$(PY) -m benchmarks.paged_attention_bench
@@ -57,8 +64,12 @@ bench-attn:
 bench-overload:
 	$(PY) -m benchmarks.serving_overload
 
+bench-chaos:
+	$(PY) -m benchmarks.serving_chaos
+
 bench-compare:
 	$(PY) tools/compare_bench.py
+	$(PY) tools/compare_bench.py --chaos
 
 bench:
 	$(PY) -m benchmarks.run --quick

@@ -318,7 +318,12 @@ def save_json(name: str, obj) -> None:
 # absolutely at 5% by tools/compare_bench.py), and the obs arm exports
 # results/TRACE_serving.json (Chrome trace) + METRICS_serving.prom
 # (Prometheus text) + METRICS_serving.jsonl (registry snapshots).
-BENCH_SCHEMA_VERSION = 8
+# v9: the fault-tolerant replica router — router stats add the router_*
+# counters / replica_health gauges / migrate-latency percentiles on top of
+# the per-replica v8 engine schema, and the chaos arm lands as
+# BENCH_serving_chaos.json (scripted kill/NaN/stall/retry faults; CI gates
+# the kill arm absolutely: migrated > 0, lost == 0, oracle_exact == 1).
+BENCH_SCHEMA_VERSION = 9
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:

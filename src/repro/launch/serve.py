@@ -45,7 +45,10 @@ from repro.optim import adamw_init
 from repro.serving import (
     EngineConfig,
     KernelChoice,
+    ReplicaSet,
     Request,
+    Router,
+    RouterConfig,
     SamplingParams,
     ServingEngine,
     add_engine_config_args,
@@ -83,6 +86,13 @@ def build_parser():
                     choices=sorted(_PAGED_ATTN_ALIAS),
                     help="DEPRECATED alias for --attn-kernel "
                          "(on = pallas, off = gather)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through N data-parallel engine replicas "
+                         "behind the fault-tolerant router (1 = the plain "
+                         "single-engine path)")
+    ap.add_argument("--placement", default="least_loaded",
+                    choices=["least_loaded", "round_robin"],
+                    help="router placement policy (only with --replicas > 1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace-out", default="",
                     help="export the span ring as Chrome trace JSON "
@@ -133,6 +143,46 @@ def _make_requests(n, vocab, rng, max_new, sampling=None):
                     sampling=sampling)
         )
     return reqs
+
+
+# Additive per-replica counters the replicated report sums; point-in-time
+# percentiles report the worst replica instead (summing a p95 is nonsense).
+_SUM_STATS = (
+    "completed", "cancelled", "decoded_tokens", "decode_steps", "preempted",
+    "shed", "timed_out", "errors", "kernel_fallbacks", "prefill_tokens",
+    "prefill_calls", "prefill_requests", "kv_pages_capacity",
+    "kv_pages_in_use", "sched_chunks", "sched_budget_limited_steps",
+    "sched_aging_promotions",
+)
+_MAX_STATS = (
+    "ttft_p50_s", "ttft_p95_s", "itl_p50_s", "itl_p95_s", "mean_latency_s",
+    "step_p50_ms", "step_p95_ms", "step_stalled", "queue_wait_p50_s",
+    "queue_wait_p95_s", "kv_pool_peak_occupancy",
+)
+
+
+def serve_replicated(cfg, params, reqs, ecfg: EngineConfig, n: int,
+                     placement: str):
+    """Serve through the fault-tolerant router (`--replicas N`): stats are
+    replica 0's view with additive counters summed (and percentiles taken
+    from the worst replica) plus the router's ``router_*`` layer."""
+    router = Router(ReplicaSet.build(cfg, params, ecfg, n),
+                    RouterConfig(placement=placement))
+    for r in reqs:
+        router.submit(r)
+    t0 = time.time()
+    router.run(max_steps=100_000)
+    wall = time.time() - t0
+    per = [rep.engine.stats() for rep in router.replicas]
+    s = dict(per[0])
+    for key in _SUM_STATS:
+        s[key] = sum(p[key] for p in per)
+    for key in _MAX_STATS:
+        s[key] = max(p[key] for p in per)
+    s.update(router.stats())
+    s["wall_s"] = round(wall, 2)
+    s["tokens_per_s"] = round(s["decoded_tokens"] / max(wall, 1e-9), 1)
+    return reqs, s, router
 
 
 def serve_once(cfg, params, reqs, ecfg: EngineConfig, *,
@@ -218,11 +268,31 @@ def main(argv=None):
         )
     reqs = _make_requests(args.n_requests, cfg.vocab, rng, args.max_new,
                           sampling=sampling)
-    done, stats, eng = serve_once(
-        cfg, qparams, reqs, ecfg,
-        metrics_jsonl=args.metrics_jsonl, metrics_every=args.metrics_every,
-    )
+    if args.replicas > 1:
+        if args.trace_out or args.metrics_jsonl:
+            raise SystemExit(
+                "serve.py: --trace-out/--metrics-jsonl export one engine's "
+                "telemetry; with --replicas > 1 use --metrics-out (router "
+                "registry) instead"
+            )
+        done, stats, router = serve_replicated(
+            cfg, qparams, reqs, ecfg, args.replicas, args.placement)
+        eng = router.replicas[0].engine
+    else:
+        done, stats, eng = serve_once(
+            cfg, qparams, reqs, ecfg,
+            metrics_jsonl=args.metrics_jsonl,
+            metrics_every=args.metrics_every,
+        )
     log.info("%s", stats)
+    reasons = {}
+    for r in done:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    log.info(
+        "finish reasons: %s",
+        " ".join(f"{k}={v}" for k, v in sorted(reasons.items(),
+                                               key=lambda kv: str(kv[0]))),
+    )
     log.info(
         "latency: ttft p50 %.0f ms / p95 %.0f ms | itl p50 %.1f ms / "
         "p95 %.1f ms",
@@ -259,6 +329,16 @@ def main(argv=None):
         "queue wait: p50 %.0f ms / p95 %.0f ms",
         stats["queue_wait_p50_s"] * 1e3, stats["queue_wait_p95_s"] * 1e3,
     )
+    if args.replicas > 1:
+        log.info(
+            "router: %d replicas (%d healthy) | placed %.0f | retried %.0f "
+            "| migrated %.0f | drained %.0f | dead %.0f | migrate p50 "
+            "%.1f ms",
+            args.replicas, int(stats["router_healthy_replicas"]),
+            stats["router_placed"], stats["router_retried"],
+            stats["router_migrated"], stats["router_drained"],
+            stats["router_dead_replicas"], stats["router_migrate_p50_ms"],
+        )
     if stats.get("sched_prefill_budget"):
         log.info(
             "scheduler: %s | budget %.0f tok/step | chunks %.0f | "
@@ -291,6 +371,8 @@ def main(argv=None):
         )
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
+            if args.replicas > 1:
+                f.write(router.metrics_text())  # router_* / replica_health_*
             f.write(eng.metrics_text())
         log.info("metrics: Prometheus exposition -> %s", args.metrics_out)
     if args.metrics_jsonl:

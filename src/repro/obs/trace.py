@@ -28,7 +28,16 @@ kind                      ph    emitted on
 ``prefix_miss``           i     prefix-cache lookup found nothing
 ``sched_budget_limited``  i     step scheduler hit the token budget
 ``sched_promote``         i     aged request promoted to queue head
+``place``                 i     router placed a request on a replica
+``retry``                 i     router queued a backoff retry
+``migrate``               i     in-flight request moved between replicas
+``drain``                 i     replica breaker opened (degraded/drain)
+``replica_dead``          i     replica declared dead
 ========================  ====  =======================================
+
+The ``place`` .. ``replica_dead`` rows are emitted by the replica router
+(:mod:`repro.serving.router`) into its *own* ring — request instants on
+the request's track, replica lifecycle instants on the engine lane.
 
 ``ph`` follows the Chrome trace-event format: ``X`` = complete span with a
 duration, ``i`` = instant. :meth:`TraceRing.chrome_trace` renders the ring

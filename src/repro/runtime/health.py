@@ -127,6 +127,20 @@ class HeartbeatMonitor:
         except (FileNotFoundError, json.JSONDecodeError):
             return None
 
+    def stale(self, timeout: Optional[float] = None) -> bool:
+        """Is this monitor's own heartbeat file stale (older than
+        ``timeout`` seconds, default the monitor's ``timeout``)?
+
+        The single-file form of :meth:`stale_hosts`, used by the serving
+        replica router's liveness gate: an unreadable file only counts as
+        stale after the first write landed (a replica that has not beaten
+        yet is *cold*, not dead)."""
+        limit = self.timeout if timeout is None else timeout
+        rec = self.read()
+        if rec is None:
+            return self.writes > 0
+        return time.time() - rec.get("time", 0.0) > limit
+
     def stale_hosts(self, paths: List[str]) -> List[int]:
         """Watchdog: which heartbeat files have gone stale?"""
         now = time.time()

@@ -15,8 +15,28 @@ from .engine import (  # noqa: F401
     TokenEvent,
 )
 from .kv_cache import PageAllocator, pages_needed  # noqa: F401
+from .router import (  # noqa: F401
+    DEAD,
+    DRAINING,
+    HEALTHY,
+    Replica,
+    ReplicaSet,
+    Router,
+    RouterConfig,
+)
+from .chaos import (  # noqa: F401
+    ChaosHarness,
+    DrainReplica,
+    FaultPlan,
+    InjectNaN,
+    KillReplica,
+    PagePressure,
+    StallSteps,
+)
 from .spec_decode import AdaptiveK, SpecConfig, SpecDecoder  # noqa: F401
+from . import chaos  # noqa: F401
 from . import config  # noqa: F401
 from . import kv_cache  # noqa: F401
+from . import router  # noqa: F401
 from . import sampling  # noqa: F401
 from . import spec_decode  # noqa: F401

@@ -153,7 +153,22 @@ class EngineOverloaded(RuntimeError):
     """Typed rejection: the bounded submit queue (EngineConfig.max_queue)
     is full. The request was never queued; its ``finish_reason`` is
     ``"shed"`` and ``t_done`` is set, so ``stream()``/``generate()`` yield
-    the single shed sentinel event instead of hanging."""
+    the single shed sentinel event instead of hanging.
+
+    Carries enough context for an *informed* retry (the replica router's
+    backoff policy, docs/serving.md §Replicated serving): ``queue_depth``
+    is the depth of the queue that rejected the request, and
+    ``retry_after_hint_s`` estimates when a slot may free up — the
+    engine's rolling median step time times the queue depth (0.0 on a
+    cold engine that has never stepped: no information, not advice to
+    retry immediately at all costs).
+    """
+
+    def __init__(self, msg: str = "", *, queue_depth: int = 0,
+                 retry_after_hint_s: float = 0.0):
+        super().__init__(msg)
+        self.queue_depth = queue_depth
+        self.retry_after_hint_s = retry_after_hint_s
 
 _GREEDY = SamplingParams()
 _UNSET = object()  # legacy-kwarg sentinel: None is a meaningful value
@@ -1755,7 +1770,11 @@ class ServingEngine:
                                 where="queue_full")
             raise EngineOverloaded(
                 f"queue full ({len(self.queue)}/{self.config.max_queue}): "
-                f"request {req.uid} shed"
+                f"request {req.uid} shed",
+                queue_depth=len(self.queue),
+                retry_after_hint_s=(
+                    self._step_timer.percentile(50) * len(self.queue)
+                ),
             )
         self.queue.append(req)
 

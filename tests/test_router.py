@@ -1,0 +1,622 @@
+"""Fault-tolerant replica router (ISSUE 9): health-gated placement,
+crash-and-migrate resume, retry/backoff, and the deterministic chaos
+harness.
+
+The acceptance bar: a request migrated off a killed replica mid-decode
+completes on a survivor with output token-identical to the uncontended
+single-engine oracle — greedy AND seeded sampling, dense AND MoE, at
+every migration offset; random interleavings of the router lifecycle
+never leak pages on any replica; the same FaultPlan replayed twice
+produces bit-identical outputs.
+"""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.serving import (
+    DEAD,
+    DRAINING,
+    HEALTHY,
+    ChaosHarness,
+    EngineConfig,
+    EngineOverloaded,
+    FaultPlan,
+    InjectNaN,
+    DrainReplica,
+    KillReplica,
+    PagePressure,
+    ReplicaSet,
+    Request,
+    Router,
+    RouterConfig,
+    SamplingParams,
+    ServingEngine,
+    StallSteps,
+)
+
+_PARAM_CACHE = {}
+
+
+def _setup(arch):
+    if arch not in _PARAM_CACHE:
+        cfg = smoke_config(arch)
+        _PARAM_CACHE[arch] = (cfg, T.init_params(cfg, jax.random.PRNGKey(0)))
+    return _PARAM_CACHE[arch]
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    return _setup("glm4-9b")
+
+
+_ECONF = dict(max_batch=2, max_len=64, page_size=8)
+
+
+def _router(cfg, params, n=2, rconf=None, **conf):
+    kw = dict(_ECONF, **conf)
+    return Router(ReplicaSet.build(cfg, params, EngineConfig(**kw), n),
+                  rconf or RouterConfig(placement="round_robin"))
+
+
+def _oracle(cfg, params, reqs, **conf):
+    """The single uncontended engine every exactness claim compares to."""
+    kw = dict(_ECONF, **conf)
+    eng = ServingEngine(cfg, params, EngineConfig(**kw))
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.finish_reason in ("eos", "length") for r in reqs)
+    return {r.uid: list(r.output) for r in reqs}
+
+
+def _mk(rng, vocab, lengths, max_new=8, sampling=None):
+    return [
+        Request(uid=i, prompt=rng.integers(0, vocab, n).tolist(),
+                max_new_tokens=max_new, sampling=sampling)
+        for i, n in enumerate(lengths)
+    ]
+
+
+def _clone(reqs):
+    return [
+        Request(uid=r.uid, prompt=list(r.prompt),
+                max_new_tokens=r.max_new_tokens, sampling=r.sampling)
+        for r in reqs
+    ]
+
+
+def _assert_no_leaks(router):
+    for rep in router.replicas:
+        a = rep.engine.allocator
+        assert a.in_use() + a.available() == a.capacity, (
+            f"replica {rep.rid} ({rep.state}) leaked pages"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Tentpole (a): placement
+
+
+def test_round_robin_rotates_over_healthy(dense_setup):
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=3)
+    reqs = _mk(np.random.default_rng(0), cfg.vocab, [4, 5, 6, 7, 4, 5])
+    for r in reqs:
+        router.submit(r)
+    # uid i lands on replica i % 3 before any step runs
+    by_rep = [[r.uid for r in rep.engine.queue] for rep in router.replicas]
+    assert by_rep == [[0, 3], [1, 4], [2, 5]]
+    router.run()
+    assert all(r.finish_reason == "length" for r in reqs)
+
+
+def test_least_loaded_prefers_empty_replica(dense_setup):
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=2,
+                     rconf=RouterConfig(placement="least_loaded"))
+    heavy = Request(uid=0, prompt=list(range(1, 20)), max_new_tokens=30)
+    light = Request(uid=1, prompt=[1, 2], max_new_tokens=2)
+    router.submit(heavy)  # replica 0 (tie -> lowest rid)
+    router.submit(light)  # replica 1 is strictly emptier now
+    assert [r.uid for r in router.replicas[0].engine.queue] == [0]
+    assert [r.uid for r in router.replicas[1].engine.queue] == [1]
+    router.run()
+    assert heavy.finish_reason == "length"
+    assert light.finish_reason == "length"
+
+
+def test_draining_and_dead_take_no_placements(dense_setup):
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=3)
+    router.drain(0)
+    router.kill(1)
+    reqs = _mk(np.random.default_rng(1), cfg.vocab, [4, 5], max_new=2)
+    for r in reqs:
+        router.submit(r)
+    assert not router.replicas[0].engine.queue
+    assert not router.replicas[1].engine.queue
+    assert len(router.replicas[2].engine.queue) == 2
+    router.run()
+    assert all(r.finish_reason == "length" for r in reqs)
+
+
+def test_router_rejects_unpaged_replicas(dense_setup):
+    cfg, params = dense_setup
+    eng = ServingEngine(cfg, params,
+                        EngineConfig(max_batch=2, max_len=64, paged=False))
+    with pytest.raises(ValueError, match="paged"):
+        ReplicaSet([eng])
+
+
+def test_router_config_validation():
+    with pytest.raises(ValueError, match="placement"):
+        RouterConfig(placement="random")
+    with pytest.raises(ValueError, match="degraded_after"):
+        RouterConfig(degraded_after=5, dead_after=2)
+    with pytest.raises(ValueError, match="backoff_jitter"):
+        RouterConfig(backoff_jitter=1.5)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole (b): crash-and-migrate is oracle-exact
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "deepseek-moe-16b"])
+def test_kill_migrate_greedy_exact(arch):
+    """Kill a replica mid-decode: every request — including the harvested
+    in-flight lanes carrying committed tokens — completes on the survivor
+    token-identical to the uncontended oracle."""
+    cfg, params = _setup(arch)
+    # MoE smoke models have argmax knife-edges at some seeds (see
+    # test_overload); pinned to a well-posed region.
+    rng = np.random.default_rng(7 if arch == "glm4-9b" else 3)
+    reqs = _mk(rng, cfg.vocab, [7, 5, 3, 6])
+    oracle = _oracle(cfg, params, _clone(reqs))
+
+    router = _router(cfg, params, n=2)
+    for r in reqs:
+        router.submit(r)
+    for _ in range(4):  # prefill + a few decode steps on both replicas
+        router.step()
+    assert any(len(r.output) > 0 for r in reqs)
+    router.kill(0)
+    assert router.stats()["router_migrated"] > 0
+    router.run()
+    assert {r.uid: list(r.output) for r in reqs} == oracle
+    assert all(r.finish_reason in ("eos", "length") for r in reqs)
+    _assert_no_leaks(router)
+    assert router.replicas[0].state == DEAD
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "deepseek-moe-16b"])
+@pytest.mark.parametrize("kill_at", [1, 2, 3, 4, 5])
+def test_migration_offset_sweep_seeded_sampling_exact(arch, kill_at):
+    """The strongest exactness claim: seeded (non-greedy) sampling migrated
+    at EVERY offset reproduces the oracle stream bit for bit — sampling
+    keys fold (seed, position), so where a token is produced cannot change
+    which token it is."""
+    cfg, params = _setup(arch)
+    rng = np.random.default_rng(7 if arch == "glm4-9b" else 3)
+    sampling = SamplingParams(temperature=0.8, top_k=20, seed=123)
+    reqs = _mk(rng, cfg.vocab, [6, 4], max_new=6, sampling=sampling)
+    oracle = _oracle(cfg, params, _clone(reqs))
+
+    router = _router(cfg, params, n=2)
+    for r in reqs:
+        router.submit(r)
+    for _ in range(kill_at):
+        router.step()
+    router.kill(0)
+    router.run()
+    assert {r.uid: list(r.output) for r in reqs} == oracle, (
+        f"migration at step {kill_at} changed a sampled stream"
+    )
+    _assert_no_leaks(router)
+
+
+def test_drain_finishes_active_lanes_in_place(dense_setup):
+    """drain(): queued requests migrate immediately, active lanes finish on
+    the draining replica (graceful), and undrain() reopens it."""
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=2, max_batch=1)
+    rng = np.random.default_rng(3)
+    active = Request(uid=0, prompt=rng.integers(0, cfg.vocab, 5).tolist(),
+                     max_new_tokens=6)
+    queued = Request(uid=1, prompt=rng.integers(0, cfg.vocab, 4).tolist(),
+                     max_new_tokens=6)
+    router.submit(active)  # replica 0
+    router.submit(queued)  # replica 1 (round robin)
+    router.step()  # active takes replica 0's lane
+    router.replicas[1].engine.queue.clear()  # re-stage: both on replica 0
+    router.replicas[0].engine.queue.append(queued)
+    router.drain(0)
+    # The queued request moved to replica 1; the active lane stayed put.
+    assert [r.uid for r in router.replicas[1].engine.queue] == [1]
+    assert router.replicas[0].active() == 1
+    assert router.replicas[0].state == DRAINING
+    router.run()
+    assert active.finish_reason == "length"
+    assert queued.finish_reason == "length"
+    assert router.replicas[0].engine.stats()["completed"] == 1
+    # Pinned: the gate never healed it. undrain() does.
+    assert router.replicas[0].state == DRAINING
+    router.undrain(0)
+    assert router.replicas[0].state == HEALTHY
+
+
+def test_step_exception_kills_replica_not_router(dense_setup):
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=2)
+    reqs = _mk(np.random.default_rng(4), cfg.vocab, [5, 4], max_new=4)
+    for r in reqs:
+        router.submit(r)
+
+    def boom():
+        raise RuntimeError("device went away")
+
+    router.replicas[0].engine.step = boom
+    router.run()
+    assert router.replicas[0].state == DEAD
+    assert all(r.finish_reason == "length" for r in reqs)
+    assert router.stats()["router_dead_replicas"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Tentpole (c): health gate (faults, stragglers, heartbeat)
+
+
+def test_fault_streak_opens_then_kills_breaker(dense_setup):
+    """Quarantines on one replica walk it healthy -> draining -> dead
+    through the fault-score breaker; bystanders complete oracle-exact on
+    the survivor."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(5)
+    reqs = _mk(rng, cfg.vocab, [5, 6, 4, 7], max_new=6)
+    oracle = _oracle(cfg, params, _clone(reqs))
+    router = _router(
+        cfg, params, n=2,
+        rconf=RouterConfig(placement="round_robin", degraded_after=1,
+                           dead_after=2),
+    )
+    for r in reqs:
+        router.submit(r)
+    # Poison both requests routed to replica 0 (uids 0 and 2): the first
+    # quarantine drains it, the second kills it.
+    router.replicas[0].engine.inject_fault(0, 1)
+    router.replicas[0].engine.inject_fault(2, 2)
+    router.run()
+    assert router.replicas[0].state == DEAD
+    got = {r.uid: r.finish_reason for r in reqs}
+    assert got[0] == "error" and got[2] == "error"
+    for uid in (1, 3):
+        r = next(x for x in reqs if x.uid == uid)
+        assert r.finish_reason in ("eos", "length")
+        assert list(r.output) == oracle[uid]
+    s = router.stats()
+    assert s["router_drained"] >= 1.0 and s["router_dead_replicas"] == 1.0
+    _assert_no_leaks(router)
+
+
+def test_straggler_drains_then_heals(dense_setup):
+    """A stalled replica degrades via the router-side StepTimer and heals
+    on the step that proves the stall passed — outputs unaffected."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(6)
+    router = _router(
+        cfg, params, n=2,
+        rconf=RouterConfig(placement="round_robin", straggle_factor=3.0,
+                           straggle_patience=2),
+    )
+    warm = _mk(rng, cfg.vocab, [5, 4], max_new=6)
+    oracle = _oracle(cfg, params, _clone(warm))
+    for r in warm:
+        router.submit(r)
+    router.run()  # warm jit + the step-time windows
+    drained_before = router.stats()["router_drained"]
+
+    reqs = _clone(warm)
+    for r in reqs:
+        router.submit(r)
+    harness = ChaosHarness(
+        router,
+        FaultPlan((StallSteps(step=2, replica=0, steps=3, seconds=0.25),)),
+    )
+    harness.run()
+    s = router.stats()
+    assert s["router_drained"] - drained_before >= 1.0
+    assert router.replicas[0].state == HEALTHY  # healed
+    assert {r.uid: list(r.output) for r in reqs} == oracle
+    _assert_no_leaks(router)
+
+
+def test_stale_heartbeat_kills_replica(dense_setup, tmp_path):
+    """A replica whose heartbeat file stops advancing past the timeout is
+    declared dead and its work migrates (the multi-process liveness path;
+    the writer is silenced to simulate a wedged process)."""
+    cfg, params = dense_setup
+    hb = tmp_path / "hb.json"
+    engines = [
+        ServingEngine(cfg, params, EngineConfig(
+            max_batch=2, max_len=64, page_size=8,
+            heartbeat_path=str(hb) if i == 0 else None))
+        for i in range(2)
+    ]
+    router = Router(ReplicaSet(engines),
+                    RouterConfig(heartbeat_timeout_s=0.05))
+    reqs = _mk(np.random.default_rng(8), cfg.vocab, [4, 5], max_new=3)
+    for r in reqs:
+        router.submit(r)
+    router.step()  # replica 0 beats once
+    engines[0]._heartbeat.beat = lambda *a, **k: None  # writer wedges
+    time.sleep(0.08)  # the last written beat ages past the timeout
+    router.run()
+    assert router.replicas[0].state == DEAD
+    assert all(r.finish_reason == "length" for r in reqs)
+    _assert_no_leaks(router)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole (d): retry / timeout / backoff
+
+
+def test_overloaded_carries_informed_retry_context(dense_setup):
+    """Satellite 1: EngineOverloaded exposes queue_depth and a
+    retry_after_hint derived from the step-time median x queue depth."""
+    cfg, params = dense_setup
+    eng = ServingEngine(cfg, params, EngineConfig(
+        max_batch=1, max_len=64, max_queue=2))
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    eng.run()  # populate the step-time window
+    eng.submit(Request(uid=1, prompt=[1, 2, 3], max_new_tokens=8))
+    eng.submit(Request(uid=2, prompt=[4, 5, 6], max_new_tokens=8))
+    with pytest.raises(EngineOverloaded) as ei:
+        eng.submit(Request(uid=3, prompt=[7, 8, 9], max_new_tokens=8))
+    assert ei.value.queue_depth == 2
+    assert ei.value.retry_after_hint_s > 0.0
+    assert ei.value.retry_after_hint_s == pytest.approx(
+        eng._step_timer.percentile(50) * 2)
+
+
+def test_router_retries_sheds_until_capacity_frees(dense_setup):
+    """Bounded queues shed a burst; the router converts every shed into a
+    backoff retry and all requests complete — router.submit never raises."""
+    cfg, params = dense_setup
+    router = _router(
+        cfg, params, n=2, max_queue=1,
+        rconf=RouterConfig(max_retries=10, backoff_base_s=0.01,
+                           backoff_cap_s=0.1),
+    )
+    rng = np.random.default_rng(9)
+    reqs = _mk(rng, cfg.vocab, [4, 5, 6, 4, 5, 6], max_new=4)
+    oracle = _oracle(cfg, params, _clone(reqs))
+    for r in reqs:
+        router.submit(r)
+    router.run(max_steps=100_000)
+    s = router.stats()
+    assert s["router_retried"] > 0
+    assert s["router_shed"] == 0.0
+    assert {r.uid: list(r.output) for r in reqs} == oracle
+    _assert_no_leaks(router)
+
+
+def test_retries_exhaust_to_terminal_shed(dense_setup):
+    """With zero healthy replicas a request burns its retries and goes
+    terminal 'shed' at the router; the stream yields one typed sentinel."""
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=1,
+                     rconf=RouterConfig(max_retries=2, backoff_base_s=0.001,
+                                        backoff_cap_s=0.002))
+    router.kill(0)
+    req = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    router.submit(req)
+    events = list(router.stream(req))
+    assert req.finish_reason == "shed" and req.t_done > 0.0
+    assert req in router.done
+    assert [e.finish_reason for e in events] == ["shed"]
+    assert events[0].finished and events[0].token == -1
+    assert router.stats()["router_shed"] == 1.0
+    assert router.stats()["router_retried"] == 2.0
+
+
+def test_end_to_end_deadline_survives_hops(dense_setup):
+    """The deadline clock never resets across retry hops: a request whose
+    remaining budget cannot absorb the backoff expires 'timeout' (not
+    'shed', not a fresh per-engine deadline)."""
+    cfg, params = dense_setup
+    router = _router(
+        cfg, params, n=1,
+        rconf=RouterConfig(max_retries=50, backoff_base_s=0.05,
+                           backoff_cap_s=0.05, backoff_jitter=0.0),
+    )
+    router.kill(0)
+    req = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4, deadline_s=0.12)
+    router.submit(req)
+    t0 = time.perf_counter()
+    router.run(max_steps=100_000)
+    assert req.finish_reason == "timeout"
+    assert router.stats()["router_timed_out"] == 1.0
+    # Expired around the end-to-end budget, long before 50 retries' worth.
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_generate_streams_across_migration(dense_setup):
+    """Satellite 2: the router's generate() facade streams TokenEvents with
+    the terminal finish_reason even when the request migrates mid-stream."""
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=2)
+    events = []
+    stream = router.generate([1, 2, 3, 4], max_new_tokens=5)
+    for ev in stream:
+        events.append(ev)
+        if len(events) == 2:
+            router.kill(router._placed[ev.uid])
+    assert len(events) == 5
+    assert events[-1].finished and events[-1].finish_reason == "length"
+    assert [e.index for e in events] == list(range(5))
+    _assert_no_leaks(router)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: stats schema v9 + metrics exposition
+
+
+def test_router_stats_schema_v9(dense_setup):
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=2)
+    req = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=3)
+    router.submit(req)
+    router.run()
+    s = router.stats()
+    for key in (
+        "router_steps", "router_placed", "router_retried", "router_migrated",
+        "router_drained", "router_dead_replicas", "router_shed",
+        "router_timed_out", "router_replicas", "router_healthy_replicas",
+        "router_pending_retries", "router_migrate_p50_ms",
+        "router_migrate_p95_ms",
+    ):
+        assert key in s, key
+        assert isinstance(s[key], float), key
+    for rid in range(2):
+        assert s[f"replica{rid}_health"] == 1.0
+        assert f"replica{rid}_step_p50_ms" in s
+    assert s["router_placed"] == 1.0
+    # Per-replica engine stats stay pure v8 — no router keys bleed in.
+    eng_stats = router.replicas[0].engine.stats()
+    assert not any(k.startswith("router_") for k in eng_stats)
+    text = router.metrics_text()
+    assert "router_placed" in text and "replica_health_0" in text
+    assert "router_migrate_seconds_bucket" in text
+
+
+# ---------------------------------------------------------------------------
+# Satellite: chaos determinism
+
+
+def test_chaos_plan_validation():
+    with pytest.raises(TypeError):
+        FaultPlan(("kill",))
+    with pytest.raises(ValueError):
+        FaultPlan((KillReplica(step=-1, replica=0),))
+    plan = FaultPlan((KillReplica(step=3, replica=0),
+                      InjectNaN(step=1, replica=1, uid=4)))
+    assert plan.last_step == 3
+    assert [f.step for f in plan.at(1)] == [1]
+
+
+def test_chaos_same_plan_replays_bit_identical(dense_setup):
+    """Two runs of one FaultPlan over cloned requests produce identical
+    outputs, finish reasons, and router counters — chaos is scripted, not
+    rolled."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(10)
+    base = _mk(rng, cfg.vocab, [6, 5, 4, 7], max_new=6)
+    plan = FaultPlan((InjectNaN(step=0, replica=1, uid=1),
+                      DrainReplica(step=1, replica=2),
+                      KillReplica(step=3, replica=0)))
+
+    def run_once():
+        router = _router(cfg, params, n=3)
+        reqs = _clone(base)
+        for r in reqs:
+            router.submit(r)
+        ChaosHarness(router, plan).run()
+        _assert_no_leaks(router)
+        s = router.stats()
+        return (
+            {r.uid: (r.finish_reason, list(r.output)) for r in reqs},
+            (s["router_placed"], s["router_migrated"],
+             s["router_dead_replicas"]),
+        )
+
+    out1, counters1 = run_once()
+    out2, counters2 = run_once()
+    assert out1 == out2
+    assert counters1 == counters2
+    assert counters1[2] == 1.0  # the scripted kill landed both times
+
+
+def test_chaos_page_pressure_forces_preemption_under_router(dense_setup):
+    """PagePressure starves a replica's pool mid-decode: the PR-6
+    preemption path fires under the router, the harness releases its held
+    pages at end of run, and everything completes with no leak."""
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=1, n_pages=9, admission="optimistic")
+    rng = np.random.default_rng(12)
+    reqs = _mk(rng, cfg.vocab, [5, 5], max_new=14)
+    for r in reqs:
+        router.submit(r)
+    harness = ChaosHarness(
+        router,
+        FaultPlan((PagePressure(step=2, replica=0, pages=3, hold_steps=30),)),
+    )
+    harness.run()
+    eng = router.replicas[0].engine
+    assert eng.stats()["preempted"] > 0, "held pages never starved the pool"
+    assert all(r.finish_reason == "length" for r in reqs)
+    assert not harness._held  # run() released everything it took
+    assert eng.allocator.in_use() == 0
+    _assert_no_leaks(router)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: property test — router lifecycle never leaks pages
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=6), min_size=1,
+                max_size=20))
+def test_property_router_lifecycle_never_leaks_pages(ops):
+    """Random interleavings of submit / step / kill / drain / undrain /
+    deadline-expiry hold ``in_use + available == capacity`` on EVERY
+    replica after every event, and drain to zero pages on live replicas."""
+    cfg, params = _setup("glm4-9b")
+    router = Router(
+        ReplicaSet.build(cfg, params,
+                         EngineConfig(max_batch=2, max_len=64, page_size=8,
+                                      max_queue=3), 2),
+        RouterConfig(max_retries=2, backoff_base_s=0.001,
+                     backoff_cap_s=0.005),
+    )
+    rng = np.random.default_rng(sum(ops) + len(ops))
+    uid = 0
+    live = []
+    for op in ops:
+        if op in (0, 1):  # submit short/long
+            r = Request(
+                uid=uid,
+                prompt=rng.integers(0, cfg.vocab, 2 + op * 5).tolist(),
+                max_new_tokens=3 + op * 10,
+                deadline_s=None if op == 0 else 10.0,
+            )
+            uid += 1
+            router.submit(r)  # never raises
+            live.append(r)
+        elif op == 2:  # kill a random replica (idempotent on dead)
+            router.kill(int(rng.integers(0, 2)))
+        elif op == 3:  # drain a random replica
+            router.drain(int(rng.integers(0, 2)))
+        elif op == 4:  # undrain (no-op unless draining)
+            router.undrain(int(rng.integers(0, 2)))
+        elif op == 5 and live:  # force a deadline expiry
+            live[int(rng.integers(0, len(live)))].deadline_s = 0.0
+        else:
+            router.step()
+        _assert_no_leaks(router)
+        live = [r for r in live if r.t_done == 0.0]
+    router.run(max_steps=50_000)
+    _assert_no_leaks(router)
+    for rep in router.replicas:
+        if rep.state != DEAD:
+            assert rep.engine.allocator.in_use() == 0
+    # Bounded retries guarantee termination: every request left the router
+    # with a terminal finish_reason (completed/error/shed/timeout).
+    for r in live:
+        assert r.t_done > 0.0, (r.uid, r.finish_reason)

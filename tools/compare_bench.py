@@ -25,6 +25,12 @@ any *guarded* metric regressed by more than its threshold:
   baseline recorded. This is the PR-8 observability contract, not a
   trend diff.
 
+A second mode, ``--chaos``, gates ``BENCH_serving_chaos.json`` (PR 9)
+against its absolute recovery invariants — kill-arm ``lost == 0`` /
+``oracle_exact == 1`` / ``migrated > 0``, burst fully retried, stalled
+replica healed — with no baseline involved: these are correctness
+contracts and may never drift.
+
 Every other shared numeric metric is printed informationally (schema drift
 is visible, not fatal — the BENCH schema is append-only). Runs are gated
 only against a baseline with the same workload meta (arch / n_requests /
@@ -71,6 +77,17 @@ OBS_GUARDED = (
     "obs_overhead_prefill_frac",
     "obs_overhead_itl_p50_frac",
 )
+
+# chaos-arm recovery invariants (PR 9): absolute gates on the current
+# BENCH_serving_chaos.json — no baseline involved, these may never drift.
+# metric -> (comparator, bound, meaning)
+CHAOS_GUARDED = {
+    "oracle_exact": ("==", 1.0, "kill-arm outputs token-exact to oracle"),
+    "lost": ("==", 0.0, "no request lost across the replica kill"),
+    "migrated": (">", 0.0, "kill fired mid-flight (migration exercised)"),
+    "retry_shed": ("==", 0.0, "burst fully absorbed by backoff retries"),
+    "stall_healed": ("==", 1.0, "stalled replica healed after the stall"),
+}
 
 
 def _load(path: str) -> dict:
@@ -165,6 +182,36 @@ def compare(base: dict, cur: dict, threshold: float,
     return 0
 
 
+def check_chaos(path: str) -> int:
+    """Gate the chaos artifact's recovery invariants absolutely. These are
+    correctness contracts, not perf trends: a run that violated them
+    already asserted inside benchmarks/serving_chaos.py, so this re-check
+    guards the *artifact* consumers (CI parses the json independently)."""
+    cm = _load(path)["metrics"]
+    failures = []
+    print(f"{'chaos invariant':<34} {'bound':>12} {'current':>12}")
+    for name, (op, bound, meaning) in CHAOS_GUARDED.items():
+        if name not in cm:
+            failures.append((name, f"missing (need {op} {bound})"))
+            print(f"{name:<34} {op + ' ' + str(bound):>12} {'MISSING':>12}")
+            continue
+        val = float(cm[name])
+        ok = val == bound if op == "==" else val > bound
+        flag = "" if ok else "  << VIOLATED"
+        if not ok:
+            failures.append((name, f"{val} not {op} {bound} ({meaning})"))
+        print(f"{name:<34} {op + ' ' + str(bound):>12} {val:>12.4f}{flag}")
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} chaos invariant(s) violated: "
+            + "; ".join(f"{n}: {why}" for n, why in failures)
+        )
+        return 1
+    print("\nOK: chaos recovery invariants hold "
+          "(zero lost, oracle-exact, migration exercised)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -183,8 +230,18 @@ def main(argv=None) -> int:
                          "of the current run (0.05 = 5%%)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="copy --current over --baseline and exit")
+    ap.add_argument("--chaos", action="store_true",
+                    help="gate the chaos artifact's absolute recovery "
+                         "invariants instead of the baseline diff")
+    ap.add_argument(
+        "--chaos-current",
+        default=os.path.join(_RESULTS, "BENCH_serving_chaos.json"),
+        help="chaos artifact checked by --chaos",
+    )
     args = ap.parse_args(argv)
 
+    if args.chaos:
+        return check_chaos(args.chaos_current)
     if args.update_baseline:
         shutil.copyfile(args.current, args.baseline)
         print(f"baseline updated from {args.current}")
