@@ -14,7 +14,7 @@ that owns placement, liveness, and recovery:
   ``round_robin`` rotates. Draining and dead replicas take no placements.
 * **health gating** — a 3-state circuit breaker per replica
   (``healthy -> draining -> dead``) driven by the PR-6 fault machinery
-  (consecutive-quarantine streak + kernel fallbacks), a router-side
+  (consecutive-quarantine streak + recent kernel fallbacks), a router-side
   :class:`repro.runtime.health.StepTimer` around each replica's steps
   (a straggling replica degrades to draining and heals when it stops
   straggling), and :class:`HeartbeatMonitor` staleness for replicas
@@ -96,11 +96,16 @@ class RouterConfig:
     backoff_cap_s: float = 1.0
     backoff_jitter: float = 0.25  # fraction of the delay, symmetric
     # Circuit breaker: fault score = engine consecutive-quarantine streak
-    # (PR 6) + kernel fallbacks taken. degraded_after trips healthy ->
-    # draining (heals when the score drops back below); dead_after is
+    # (PR 6) + recent kernel-fallback strikes. degraded_after trips healthy
+    # -> draining (heals when the score drops back below); dead_after is
     # terminal. A straggling router-side StepTimer also degrades.
     degraded_after: int = 2
     dead_after: int = 4
+    # A kernel-fallback strike is forgiven after this many fallback-free
+    # engine steps (one strike per window), so the breaker scores *recent*
+    # fallbacks — a lifetime total would walk every long-running replica
+    # toward dead no matter how healthy it is now.
+    fallback_forget_steps: int = 200
     straggle_factor: float = 4.0  # router StepTimer straggler threshold
     straggle_patience: int = 3
     heartbeat_timeout_s: float = 60.0  # staleness bound for replicas with
@@ -130,6 +135,11 @@ class RouterConfig:
             raise ValueError(
                 "need 1 <= degraded_after <= dead_after, got "
                 f"{self.degraded_after}/{self.dead_after}"
+            )
+        if self.fallback_forget_steps < 1:
+            raise ValueError(
+                "fallback_forget_steps must be >= 1, got "
+                f"{self.fallback_forget_steps}"
             )
         if self.straggle_factor <= 1.0:
             raise ValueError(
@@ -167,13 +177,39 @@ class Replica:
             window=50, factor=config.straggle_factor,
             patience=config.straggle_patience,
         )
+        # Windowed kernel-fallback strikes (engine.kernel_fallbacks is a
+        # lifetime counter; the breaker must score recent behaviour only).
+        self.fallback_forget_steps = config.fallback_forget_steps
+        self._fallback_strikes = 0
+        self._fallbacks_seen = 0  # engine.kernel_fallbacks accounted so far
+        self._clean_since_step = 0  # engine.steps at the last new fallback
 
     def fault_score(self) -> int:
         """The circuit-breaker input: the PR-6 consecutive-quarantine
-        streak plus one standing strike per kernel fallback taken (a
-        fallback consumed a streak of 3 to fire; the engine keeps serving,
-        but the replica earned lasting suspicion)."""
-        return self.engine._fault_streak + self.engine.kernel_fallbacks
+        streak plus one strike per *recent* kernel fallback (a fallback
+        consumed a quarantine streak of 3 to fire, so it earns suspicion —
+        but suspicion expires: each strike is forgiven after
+        ``fallback_forget_steps`` fallback-free engine steps, so a
+        long-lived replica's lifetime total never creeps it toward dead).
+        Idempotent per engine step — safe to call any number of times."""
+        fb = self.engine.kernel_fallbacks
+        steps = self.engine.steps
+        if fb > self._fallbacks_seen:
+            self._fallback_strikes += fb - self._fallbacks_seen
+            self._fallbacks_seen = fb
+            self._clean_since_step = steps
+        elif self._fallback_strikes > 0:
+            forgiven = (
+                (steps - self._clean_since_step) // self.fallback_forget_steps
+            )
+            if forgiven > 0:
+                self._fallback_strikes = max(
+                    0, self._fallback_strikes - forgiven
+                )
+                self._clean_since_step += (
+                    forgiven * self.fallback_forget_steps
+                )
+        return self.engine._fault_streak + self._fallback_strikes
 
     def active(self) -> int:
         return sum(1 for s in self.engine.slots if s.req is not None)
@@ -254,6 +290,7 @@ class Router:
             # (straggle knobs live on the router's config).
             rep.step_timer.factor = self.config.straggle_factor
             rep.step_timer.patience = self.config.straggle_patience
+            rep.fallback_forget_steps = self.config.fallback_forget_steps
         self._rr_next = 0  # round-robin cursor
         self._last_hint = 0.0  # retry_after_hint_s of the latest shed
         self._pending: Deque[_Pending] = deque()
@@ -376,8 +413,9 @@ class Router:
         rep = self._pick()
         if rep is None:
             return False
-        # A shed attempt left terminal markings behind; a fresh attempt
-        # must clear them or the engine-side deadline check misfires.
+        # Invariant: a request the router is placing carries no terminal
+        # markings (shed markings are cleared at shed time below; this is
+        # the defensive backstop for harvested lanes).
         req.finish_reason = None
         req.t_done = 0.0
         if left is not None:
@@ -385,6 +423,12 @@ class Router:
         try:
             rep.engine.submit(req)
         except EngineOverloaded as e:
+            # The engine marked the request terminal ("shed", t_done) before
+            # raising, but the router still owns it — a retry is coming.
+            # Clear the markings or stream() sees t_done > 0 and yields a
+            # false terminal shed sentinel while the retry is pending.
+            req.finish_reason = None
+            req.t_done = 0.0
             self._last_hint = e.retry_after_hint_s
             return False
         self._placed[req.uid] = rep.rid
@@ -563,8 +607,11 @@ class Router:
             if rep.state == DEAD:
                 continue
             score = rep.fault_score()
-            if score >= c.dead_after or self._heartbeat_stale(rep):
+            if score >= c.dead_after:
                 self._to_dead(rep, why="fault_streak")
+                continue
+            if self._heartbeat_stale(rep):
+                self._to_dead(rep, why="heartbeat_stale")
                 continue
             degraded = score >= c.degraded_after or rep.step_timer.is_straggling
             if rep.state == HEALTHY and degraded:
@@ -619,11 +666,13 @@ class Router:
         return out
 
     def _migrate(self, src: Replica, reqs: List[Request]) -> None:
-        t0 = time.perf_counter()
         for req in reqs:
             if req.t_done > 0.0:
-                continue  # already terminal (e.g. shed marking) — not ours
+                continue  # already router-terminal — not ours to move
+            t0 = time.perf_counter()  # per request, or the Nth observed
+            # latency would include every earlier placement in the batch
             self._placed.pop(req.uid, None)
+            self._last_hint = 0.0
             handled = self._try_place(req, 0)
             dst = self._placed.get(req.uid)
             if dst is not None:  # genuinely re-placed on another replica
@@ -639,7 +688,7 @@ class Router:
                 # request alive (committed tokens intact) until a replica
                 # heals or retries run out. migrated counts completed
                 # moves only; a retry that lands later books router_placed.
-                self._enqueue_retry(req, 0, 0.0)
+                self._enqueue_retry(req, 0, self._last_hint)
 
     def _flush_retries(self) -> None:
         if not self._pending:
@@ -651,11 +700,15 @@ class Router:
             if p.not_before > now:
                 still.append(p)
                 continue
+            self._last_hint = 0.0
             if not self._try_place(p.req, p.attempt):
                 if p.attempt >= self.config.max_retries:
                     self._terminal(p.req, "shed", now)
                 else:
-                    self._enqueue_retry(p.req, p.attempt, 0.0)
+                    # _try_place just refreshed _last_hint from the shed's
+                    # retry_after_hint_s — backoff stays informed on every
+                    # hop, not just the first submit.
+                    self._enqueue_retry(p.req, p.attempt, self._last_hint)
         self._pending = still
 
     # -------------------------------------------------------------- stats

@@ -337,6 +337,30 @@ def test_straggler_drains_then_heals(dense_setup):
     _assert_no_leaks(router)
 
 
+def test_fallback_strikes_decay_not_lifetime(dense_setup):
+    """Kernel-fallback strikes are windowed, not cumulative: a replica that
+    took fallbacks long ago scores clean again after fallback_forget_steps
+    clean steps — lifetime totals must never walk a healthy replica to
+    dead."""
+    cfg, params = dense_setup
+    router = _router(cfg, params, n=2,
+                     rconf=RouterConfig(fallback_forget_steps=10))
+    rep = router.replicas[0]
+    rep.engine.kernel_fallbacks = 4  # lifetime total >= dead_after
+    rep.engine.steps = 100
+    assert rep.fault_score() == 4  # fresh strikes count in full
+    rep.engine.steps = 120  # 20 clean steps -> 2 strikes forgiven
+    assert rep.fault_score() == 2
+    rep.engine.steps = 140  # all forgiven
+    assert rep.fault_score() == 0
+    # New fallbacks strike again from a clean slate.
+    rep.engine.kernel_fallbacks = 5
+    assert rep.fault_score() == 1
+    # And the health gate no longer sees a dead replica either way.
+    router._health_gate()
+    assert rep.state != DEAD
+
+
 def test_stale_heartbeat_kills_replica(dense_setup, tmp_path):
     """A replica whose heartbeat file stops advancing past the timeout is
     declared dead and its work migrates (the multi-process liveness path;
@@ -350,7 +374,7 @@ def test_stale_heartbeat_kills_replica(dense_setup, tmp_path):
         for i in range(2)
     ]
     router = Router(ReplicaSet(engines),
-                    RouterConfig(heartbeat_timeout_s=0.05))
+                    RouterConfig(heartbeat_timeout_s=0.05, trace=True))
     reqs = _mk(np.random.default_rng(8), cfg.vocab, [4, 5], max_new=3)
     for r in reqs:
         router.submit(r)
@@ -360,6 +384,9 @@ def test_stale_heartbeat_kills_replica(dense_setup, tmp_path):
     router.run()
     assert router.replicas[0].state == DEAD
     assert all(r.finish_reason == "length" for r in reqs)
+    # The trail attributes the death to the heartbeat, not a fault streak.
+    dead = [e for e in router.trace.events() if e.kind == "replica_dead"]
+    assert [e.args["why"] for e in dead] == ["heartbeat_stale"]
     _assert_no_leaks(router)
 
 
@@ -404,6 +431,33 @@ def test_router_retries_sheds_until_capacity_frees(dense_setup):
     assert s["router_retried"] > 0
     assert s["router_shed"] == 0.0
     assert {r.uid: list(r.output) for r in reqs} == oracle
+    _assert_no_leaks(router)
+
+
+def test_stream_survives_transient_shed(dense_setup):
+    """An engine-side shed the router retries must not leak its terminal
+    'shed' marking into the stream: stream() stays open across the retry
+    and yields the real tokens once capacity frees — no false sentinel."""
+    cfg, params = dense_setup
+    router = _router(
+        cfg, params, n=1, max_queue=1, max_batch=1,
+        rconf=RouterConfig(max_retries=20, backoff_base_s=0.001,
+                           backoff_cap_s=0.01),
+    )
+    first = Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    burst = Request(uid=1, prompt=[4, 5, 6], max_new_tokens=4)
+    router.submit(first)
+    router.submit(burst)  # engine queue full -> shed -> router retry
+    assert router.stats()["router_retried"] >= 1.0
+    # The engine marked it terminal before raising; the router cleared the
+    # marking because a retry is pending — the request is still live.
+    assert burst.t_done == 0.0 and burst.finish_reason is None
+    events = list(router.stream(burst))
+    assert burst.finish_reason == "length"
+    assert [e.token for e in events] == list(burst.output)
+    assert events[-1].finished and events[-1].finish_reason == "length"
+    assert all(e.token != -1 for e in events), "false shed sentinel"
+    assert first.finish_reason == "length"
     _assert_no_leaks(router)
 
 
