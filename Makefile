@@ -27,17 +27,26 @@
 #   make bench-chaos  replica-router fault arms (kill-and-migrate oracle
 #                     exactness, NaN breaker, stall degrade/heal, retry
 #                     burst) -> results/BENCH_serving_chaos.json
+#   make bench-kv     precision-tier capacity bench: int4 vs int8 KV pools
+#                     at matched memory (~2x lane capacity asserted) +
+#                     greedy-agreement / decode-throughput decode arm
+#                     -> results/BENCH_kv_precision.json
+#   make quality-gate precision-tier quality eval (float / int8 / w4a8_ocs
+#                     / w4a8_naive logit MSE + top-1 agreement + pseudo-ppl;
+#                     outlier separation must beat naive W4A8)
+#                     -> results/QUALITY_tiers.json
 #   make bench-compare  regression gate: diff the fresh BENCH_serving.json
 #                     against the committed BENCH_baseline.json; fails on
 #                     >25% regression of itl_p50 / ttft_p50 / throughput;
 #                     then gate the chaos artifact's absolute recovery
 #                     invariants (migrated > 0, lost == 0, oracle_exact)
+#                     and the kv-precision artifact's capacity invariants
 #   make bench        every paper table + serving (slow; trains subjects once)
 
 PY := PYTHONPATH=src python
 
 .PHONY: test test-fast test-strict example-smoke bench-smoke bench-attn \
-	bench-overload bench-chaos bench-compare bench
+	bench-overload bench-chaos bench-kv quality-gate bench-compare bench
 
 test:
 	$(PY) -m pytest -x -q
@@ -57,6 +66,7 @@ bench-smoke:
 	$(PY) -m benchmarks.paged_attention_bench --quick
 	$(PY) -m benchmarks.serving_overload --quick
 	$(PY) -m benchmarks.serving_chaos --quick
+	$(PY) -m benchmarks.kv_precision_bench --quick
 
 bench-attn:
 	$(PY) -m benchmarks.paged_attention_bench
@@ -67,9 +77,16 @@ bench-overload:
 bench-chaos:
 	$(PY) -m benchmarks.serving_chaos
 
+bench-kv:
+	$(PY) -m benchmarks.kv_precision_bench
+
+quality-gate:
+	$(PY) tools/quality_eval.py
+
 bench-compare:
 	$(PY) tools/compare_bench.py
 	$(PY) tools/compare_bench.py --chaos
+	$(PY) tools/compare_bench.py --kv
 
 bench:
 	$(PY) -m benchmarks.run --quick

@@ -323,7 +323,16 @@ def save_json(name: str, obj) -> None:
 # the per-replica v8 engine schema, and the chaos arm lands as
 # BENCH_serving_chaos.json (scripted kill/NaN/stall/retry faults; CI gates
 # the kill arm absolutely: migrated > 0, lost == 0, oracle_exact == 1).
-BENCH_SCHEMA_VERSION = 9
+# v10: the sub-8-bit precision tiers — engine stats gain kv_bits /
+# kv_bytes_per_token / kv_pool_capacity_tokens, router stats gain
+# router_tier_rejected (cross-tier migration is rejected, never resumed),
+# the int4-vs-int8 matched-memory arm lands as BENCH_kv_precision.json
+# (CI gates the lane-capacity ratio >= 1.9 and the greedy-agreement floor
+# absolutely via tools/compare_bench.py --kv), and the tier quality gate
+# exports QUALITY_tiers.json (tools/quality_eval.py: logit MSE / top-1
+# agreement / pseudo-ppl of int8, w4a8_ocs, w4a8_naive vs the float
+# oracle; outlier separation must beat naive W4A8).
+BENCH_SCHEMA_VERSION = 10
 
 
 def save_bench_json(bench: str, metrics: Dict, meta: Optional[Dict] = None) -> str:

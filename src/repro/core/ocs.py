@@ -56,6 +56,8 @@ __all__ = [
     "collapse_expanded",
     "oracle_expand",
     "OCSQuantLinear",
+    "W4A8Linear",
+    "to_w4a8",
 ]
 
 
@@ -358,6 +360,151 @@ class OCSQuantLinear:
 
     def dequant_weight(self, dtype=jnp.float32) -> jnp.ndarray:
         return self.weight.dequant(dtype)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class W4A8Linear:
+    """Sub-8-bit serving tier: packed int4 weights + 8-bit outlier channels.
+
+    The W4A8 failure mode is exactly the paper's outlier problem one tier
+    down: a handful of input channels dominate ``max|W[k, :]|`` and stretch
+    the 4-bit grid until every other channel quantizes to a couple of
+    levels. Instead of *splitting* those channels (which doubles their
+    footprint), this tier *separates* them — the OCS ranking criterion
+    (§3.4: channels holding the global max |value|) selects the rows that
+    stay at 8-bit, and everything else drops to int4:
+
+    ``y = q_a @ deq4(w4)  +  q_a[:, outlier_idx] @ deq8(w8)``
+
+    with ``q_a`` the per-row dynamically int8-quantized (OCS-expanded)
+    activations. ``w4`` stores two nibbles per byte along the contraction
+    axis using the split-half convention of
+    :func:`repro.kernels.paged_attention.pack_int4` (byte row ``j`` holds
+    rows ``j`` and ``j + K/2``); outlier rows are **zeroed** inside ``w4``
+    so the two integer accumulators partition the sum exactly.
+    """
+
+    w4: jnp.ndarray  # uint8 [K_exp//2, Cout] packed nibbles, outlier rows zero
+    s4: jnp.ndarray  # f32 [Cout] per-output-column int4 grid scale
+    w8: jnp.ndarray  # int8 [S, Cout] outlier rows at 8-bit
+    s8: jnp.ndarray  # f32 [Cout] per-output-column int8 grid scale
+    outlier_idx: jnp.ndarray  # int32 [S] row indices into the expanded K
+    spec: OCSSpec
+    n_orig: int = dataclasses.field(metadata=dict(static=True), default=0)
+    a_bits: int = dataclasses.field(metadata=dict(static=True), default=8)
+
+    @property
+    def n_outliers(self) -> int:
+        return self.w8.shape[0]
+
+    @property
+    def k_expanded(self) -> int:
+        return self.w4.shape[0] * 2
+
+    def dequant_weight(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Reconstruct the full expanded float weight [K_exp, Cout]."""
+        from repro.kernels.paged_attention import unpack_int4
+
+        wq = unpack_int4(self.w4.T).T  # int8 [K_exp, Cout]
+        w = wq.astype(jnp.float32) * self.s4[None, :]
+        if self.n_outliers:
+            w = w.at[self.outlier_idx].add(
+                self.w8.astype(jnp.float32) * self.s8[None, :]
+            )
+        return w.astype(dtype)
+
+
+def _w4a8_split(w: np.ndarray, ratio: float):
+    """Separate + quantize one [K_exp, Cout] float matrix for the W4A8 tier.
+
+    Returns numpy ``(w4 packed uint8, s4, q8, s8, outlier_idx)``.
+    """
+    from repro.kernels.paged_attention import pack_int4
+
+    k_exp, n = w.shape
+    if k_exp % 2:
+        raise ValueError(
+            f"w4a8 split-half packing needs an even contraction dim, got {k_exp}"
+        )
+    s_out = n_splits_for_ratio(k_exp, ratio)
+    if s_out:
+        order = np.argsort(-np.abs(w).max(axis=1), kind="stable")
+        outlier_idx = np.sort(order[:s_out]).astype(np.int32)
+    else:
+        outlier_idx = np.zeros((0,), np.int32)
+
+    w_lo = w.copy()
+    w_lo[outlier_idx] = 0.0
+    s4 = (np.maximum(np.abs(w_lo).max(axis=0), 1e-30) / 7.0).astype(np.float32)
+    q4 = np.clip(np.floor(w_lo / s4[None, :] + 0.5), -7, 7).astype(np.int8)
+    w4 = np.asarray(pack_int4(jnp.asarray(q4.T))).T
+
+    w_out = w[outlier_idx]  # [S, N]
+    if s_out:
+        s8 = (np.maximum(np.abs(w_out).max(axis=0), 1e-30) / 127.0).astype(
+            np.float32
+        )
+    else:
+        s8 = np.ones((n,), np.float32)
+    q8 = np.clip(np.floor(w_out / s8[None, :] + 0.5), -127, 127).astype(np.int8)
+    return w4, s4, q8, s8, outlier_idx
+
+
+def to_w4a8(lin: OCSQuantLinear, ratio: float) -> "W4A8Linear":
+    """Convert an int8-tier :class:`OCSQuantLinear` to the W4A8 tier.
+
+    ``ratio`` is the outlier fraction: ``ceil(ratio * K_exp)`` expanded
+    input channels — ranked by ``max|W[k, :]|``, the OCS §3.4 criterion —
+    keep 8-bit rows; the rest drop to packed int4. ``ratio == 0`` is the
+    naive-W4A8 ablation arm (no outlier separation). Host-side numpy, like
+    the rest of the offline PTQ pipeline. Stacked (scan-sliced) leaves keep
+    their leading layer dims; the outlier count is shape-static so per-layer
+    index sets stack cleanly.
+    """
+    if not 0.0 <= ratio <= 1.0:
+        raise ValueError(f"outlier ratio must be in [0, 1], got {ratio}")
+    w = np.asarray(lin.weight.dequant(jnp.float32), dtype=np.float32)
+    spec = lin.spec
+    if w.shape[-2] % 2:
+        # Split-half packing needs an even contraction dim: append one zero
+        # weight row plus a dead spec entry (src 0, mult 0 — the duplicated
+        # activation hits a zero row, contributing nothing).
+        def _pad1(a, v):
+            return jnp.concatenate(
+                [a, jnp.full(a.shape[:-1] + (1,), v, a.dtype)], axis=-1
+            )
+
+        spec = OCSSpec(
+            src=_pad1(spec.src, 0),
+            mult=_pad1(spec.mult, 0.0),
+            bias=_pad1(spec.bias, 0.0),
+        )
+        w = np.concatenate(
+            [w, np.zeros(w.shape[:-2] + (1, w.shape[-1]), w.dtype)], axis=-2
+        )
+    lead = w.shape[:-2]
+    flat = w.reshape((-1,) + w.shape[-2:])
+    parts = [_w4a8_split(flat[i], ratio) for i in range(flat.shape[0])]
+    if lead:
+        def stk(i):
+            return np.stack([p[i] for p in parts]).reshape(
+                lead + parts[0][i].shape
+            )
+        w4, s4, q8, s8, oidx = (stk(i) for i in range(5))
+    else:
+        w4, s4, q8, s8, oidx = parts[0]
+
+    return W4A8Linear(
+        w4=jnp.asarray(w4, jnp.uint8),
+        s4=jnp.asarray(s4, jnp.float32),
+        w8=jnp.asarray(q8, jnp.int8),
+        s8=jnp.asarray(s8, jnp.float32),
+        outlier_idx=jnp.asarray(oidx, jnp.int32),
+        spec=spec,
+        n_orig=lin.n_orig,
+        a_bits=lin.a_bits if lin.a_bits is not None else 8,
+    )
 
 
 def _pad_expanded(w_exp: np.ndarray, spec: OCSSpec, pad: int):

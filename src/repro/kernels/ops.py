@@ -18,6 +18,7 @@ from . import ref
 from . import paged_attention as _pa
 from .dynamic_quant import dynamic_quant as _dynamic_quant_pallas
 from .fused_qmatmul import fused_quant_matmul as _fused_qmatmul_pallas
+from .fused_qmatmul import w4a8_quant_matmul as _w4a8_qmatmul_pallas
 from .ocs_matmul import ocs_quant_matmul as _ocs_matmul_pallas
 from .quant_matmul import quant_matmul as _quant_matmul_pallas
 
@@ -26,6 +27,7 @@ __all__ = [
     "dynamic_quant",
     "ocs_quant_matmul",
     "fused_quant_matmul",
+    "w4a8_matmul",
     "paged_attention",
     "backend_mode",
 ]
@@ -91,6 +93,30 @@ def fused_quant_matmul(
     return _fused_qmatmul_pallas(
         x, w8, w_scale, src_tail, bits=bits, out_dtype=out_dtype,
         interpret=(mode == "interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "force", "out_dtype"))
+def w4a8_matmul(
+    x, w4, s4, w8, s8, src_tail, outlier_idx, *, bits: int = 8,
+    force: Optional[str] = None, out_dtype=None,
+):
+    """W4A8 matmul with OCS-separated 8-bit outlier channels.
+
+    ``w4``: [(K+S)//2, N] uint8 split-half packed int4 weights with the
+    outlier rows zeroed (:class:`repro.core.ocs.W4A8Linear` layout);
+    ``w8``: [T, N] int8 outlier rows; ``outlier_idx``: [T] int32 expanded-K
+    row indices. The ref backend runs the same numerics as the pure-jnp
+    composition (bit-exact with the kernel).
+    """
+    mode = backend_mode(force)
+    if mode == "ref":
+        return ref.w4a8_matmul_ref(
+            x, w4, s4, w8, s8, src_tail, outlier_idx, bits, out_dtype
+        )
+    return _w4a8_qmatmul_pallas(
+        x, w4, s4, w8, s8, src_tail, outlier_idx, bits=bits,
+        out_dtype=out_dtype, interpret=(mode == "interpret"),
     )
 
 

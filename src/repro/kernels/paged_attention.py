@@ -59,7 +59,11 @@ from .dynamic_quant import VMEM_BUDGET_BYTES
 
 __all__ = [
     "TRASH_PAGE",
+    "KV4_QMAX",
     "quant_rows",
+    "pack_int4",
+    "unpack_int4",
+    "pool_kind",
     "append_rows",
     "paged_attention_gather_ref",
     "paged_attention_xla",
@@ -70,6 +74,7 @@ __all__ = [
 
 NEG_INF = -1e30  # finite: exp(NEG_INF - NEG_INF) == 1, never NaN
 TRASH_PAGE = 0  # reserved pool page (serving.kv_cache.TRASH_PAGE): never read
+KV4_QMAX = 7.0  # symmetric int4 grid: quantized values live in [-7, 7]
 
 
 def quant_rows(x: jnp.ndarray, qmax: float = 127.0):
@@ -78,12 +83,58 @@ def quant_rows(x: jnp.ndarray, qmax: float = 127.0):
     The single source of truth for KV-cache-row quantization: the dense int8
     cache, the int8 page pool, and this kernel's fused append all call (or
     mirror bit-for-bit) this function, so pools written by any path agree
-    bitwise. ``models.attention._quant_rows`` is an alias of this.
+    bitwise. ``models.attention._quant_rows`` is an alias of this. The int4
+    tier reuses the same formula at ``qmax=KV4_QMAX`` — one grid family for
+    every precision tier.
     """
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = jnp.maximum(amax, 1e-30) / qmax
-    q = jnp.clip(jnp.floor(x.astype(jnp.float32) / scale + 0.5), -qmax, qmax)
+    # Reciprocal-multiply, not division: XLA rewrites a loop-invariant
+    # ``amax / qmax`` into ``amax * (1/qmax)`` inside compiled loop bodies (a
+    # 1-ulp difference), so eager and in-kernel quantization would disagree
+    # bitwise. Spelling the reciprocal out makes every context compute the
+    # same thing — the cross-path pool bit-exactness contract depends on it.
+    scale = jnp.maximum(amax, 1e-30) * (1.0 / qmax)
+    q = jnp.clip(jnp.floor(x.astype(jnp.float32) * (1.0 / scale) + 0.5),
+                 -qmax, qmax)
     return q.astype(jnp.int8), scale[..., 0]
+
+
+def pack_int4(q: jnp.ndarray) -> jnp.ndarray:
+    """Pack int8 nibble values (in [-8, 7]) two-per-byte along the last axis.
+
+    Split-half convention: byte ``j`` of a C-channel row holds channel ``j``
+    in its low nibble and channel ``j + C/2`` in its high nibble. Pack and
+    unpack are then contiguous half-row slices + a concat — no strided
+    interleave, which keeps the in-kernel (Mosaic) forms trivial.
+    """
+    c = q.shape[-1]
+    lo = q[..., : c // 2].astype(jnp.uint8) & jnp.uint8(0xF)
+    hi = q[..., c // 2 :].astype(jnp.uint8) & jnp.uint8(0xF)
+    return lo | jnp.left_shift(hi, 4)
+
+
+def unpack_int4(b: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`pack_int4`: uint8 [..., C/2] -> int8 [..., C].
+
+    Sign extension by int8 *arithmetic* shifts (``(b << 4) >> 4`` for the low
+    nibble, ``b >> 4`` for the high) — no lookup table, no compare/select.
+    """
+    b8 = b.astype(jnp.int8)
+    lo = jnp.right_shift(jnp.left_shift(b8, 4), 4)
+    hi = jnp.right_shift(b8, 4)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def pool_kind(pool) -> str:
+    """Precision tier of a page pool, discriminated by the value dtype
+    (jit-static): int8 values -> "int8", packed uint8 nibbles -> "int4",
+    anything else -> "float"."""
+    dt = pool["k"].dtype
+    if dt == jnp.int8:
+        return "int8"
+    if dt == jnp.uint8:
+        return "int4"
+    return "float"
 
 
 def append_rows(pool: Dict, k_new, v_new, table, pos) -> Dict:
@@ -101,11 +152,19 @@ def append_rows(pool: Dict, k_new, v_new, table, pos) -> Dict:
     pidx = jnp.take_along_axis(table, lin // ps, axis=1)  # [B, Q]
     slot = lin % ps
     out = dict(pool)
-    if pool["k"].dtype == jnp.int8:
+    kind = pool_kind(pool)
+    if kind == "int8":
         k_q, k_s = quant_rows(k_new)
         v_q, v_s = quant_rows(v_new)
         out["k"] = pool["k"].at[pidx, :, slot, :].set(k_q)
         out["v"] = pool["v"].at[pidx, :, slot, :].set(v_q)
+        out["k_scale"] = pool["k_scale"].at[pidx, :, slot].set(k_s)
+        out["v_scale"] = pool["v_scale"].at[pidx, :, slot].set(v_s)
+    elif kind == "int4":
+        k_q, k_s = quant_rows(k_new, qmax=KV4_QMAX)
+        v_q, v_s = quant_rows(v_new, qmax=KV4_QMAX)
+        out["k"] = pool["k"].at[pidx, :, slot, :].set(pack_int4(k_q))
+        out["v"] = pool["v"].at[pidx, :, slot, :].set(pack_int4(v_q))
         out["k_scale"] = pool["k_scale"].at[pidx, :, slot].set(k_s)
         out["v_scale"] = pool["v_scale"].at[pidx, :, slot].set(v_s)
     else:
@@ -142,6 +201,38 @@ def _dequant_zero_trash(vals, scale, readable):
     return jnp.where(readable, x, 0.0)
 
 
+def _int4_flash_step(qv, kf, vf, vis, carry):
+    """One page's online-softmax update for the int4 tier.
+
+    The int4 bit-exactness contract: the gather oracle, the XLA fallback,
+    and the Pallas kernel all run THIS function (the kernel on per-``(b, g)``
+    2-D slices, the XLA paths batched over ``[B, KV]``) against bitwise-equal
+    dequantized page tiles, so the three paths' outputs agree *bitwise* — not
+    merely to tolerance like the int8 tier, whose fallback requantizes q and
+    the softmax weights. ``qv``: [..., QR, hd] f32 pre-scaled; ``kf``/``vf``:
+    [..., ps, hd] f32 dequantized; ``vis``: broadcastable to the [..., QR, ps]
+    scores. Carry is ``(m [..., QR], l [..., QR], acc [..., QR, hd])``.
+    """
+    m, l, acc = carry
+    s = jnp.einsum("...rd,...sd->...rs", qv, kf,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.where(vis, 0.0, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "...rs,...sd->...rd", p, vf, preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _int4_finish(m, l, acc):
+    """Normalize the int4 flash carry; fully-masked rows (retired lanes'
+    all-trash tables) emit exact zeros like every other path."""
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.where(m[..., None] > 0.5 * NEG_INF, out, 0.0)
+
+
 # ---------------------------------------------------------------------------
 # Reference oracle: gather everything, one-shot softmax
 
@@ -155,10 +246,44 @@ def paged_attention_gather_ref(pool, table, pos, q, k_new, v_new) -> Tuple:
     kvh, ps = pool["k"].shape[1:3]
     t = table.shape[1]
     new_pool = append_rows(pool, k_new, v_new, table, pos)
-    int8 = pool["k"].dtype == jnp.int8
+    kind = pool_kind(pool)
+    int8 = kind == "int8"
 
     def flat(x):  # [B, T, KV, ps, ...] -> [B, KV, T*ps, ...]
         return jnp.moveaxis(x, 2, 1).reshape((b, kvh, t * ps) + x.shape[4:])
+
+    if kind == "int4":
+        # Independent *data* path (dense gather + flatten, like the int8/
+        # float oracle) but the kernel's page-blocked recurrence: the int4
+        # tier's oracle is bit-exact against the kernel and XLA fallback.
+        rep = h // kvh
+        qr = qn * rep
+        rd = jnp.repeat(table != TRASH_PAGE, ps, axis=1)[:, None, :, None]
+        kf = _dequant_zero_trash(
+            unpack_int4(flat(new_pool["k"][table])),
+            flat(new_pool["k_scale"][table]), rd)
+        vf = _dequant_zero_trash(
+            unpack_int4(flat(new_pool["v"][table])),
+            flat(new_pool["v_scale"][table]), rd)
+        q2 = _q_rows(q, kvh)  # [B, KV, QR, hd]
+        bound = pos[:, None] + (jnp.arange(qr) // rep)[None, :]  # [B, QR]
+        k5 = kf.reshape(b, kvh, t, ps, hd)
+        v5 = vf.reshape(b, kvh, t, ps, hd)
+        page_ok = table != TRASH_PAGE  # [B, T]
+
+        def body(i, carry):
+            kb = jax.lax.dynamic_index_in_dim(k5, i, 2, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(v5, i, 2, keepdims=False)
+            gpos = i * ps + jnp.arange(ps)
+            ok = jax.lax.dynamic_index_in_dim(page_ok, i, 1, keepdims=True)
+            vis = (gpos[None, None, :] <= bound[:, :, None]) & ok[:, :, None]
+            return _int4_flash_step(q2, kb, vb, vis[:, None], carry)
+
+        m0 = jnp.full((b, kvh, qr), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, qr), jnp.float32)
+        acc0 = jnp.zeros((b, kvh, qr, hd), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, t, body, (m0, l0, acc0))
+        return _rows_out(_int4_finish(m, l, acc), qn), new_pool
 
     readable = jnp.repeat(table != TRASH_PAGE, ps, axis=1)[:, None, :, None]
     kf = _dequant_zero_trash(
@@ -206,8 +331,44 @@ def paged_attention_xla(
     t = table.shape[1]
     rep = h // kvh
     qr = qn * rep
-    int8 = pool["k"].dtype == jnp.int8
+    kind = pool_kind(pool)
+    int8 = kind == "int8"
     new_pool = append_rows(pool, k_new, v_new, table, pos)
+
+    if kind == "int4":
+        # One page per block, f32 after in-register dequant, the shared
+        # _int4_flash_step recurrence: bit-exact vs the kernel and the
+        # gather oracle (no s8 requant of q / softmax weights — the int4
+        # tier's fallback IS the oracle). Trash pages are remapped to page 1
+        # like the int8 path; their slots are invisible, so p underflows to
+        # exact zero against any finite running max and the remapped values
+        # never contribute; fully-masked rows are zeroed in _int4_finish.
+        q2 = _q_rows(q, kvh)  # [B, KV, QR, hd]
+        bound = pos[:, None] + (jnp.arange(qr) // rep)[None, :]  # [B, QR]
+        n_active = jnp.minimum(
+            t, (jnp.max(pos) + qn - 1) // ps + 1
+        ).astype(jnp.int32)
+
+        def body(i, carry):
+            cols = jax.lax.dynamic_slice(table, (0, i), (b, 1))  # [B, 1]
+            ok = cols != TRASH_PAGE
+            safe = jnp.where(ok, cols, 1)
+            kf = unpack_int4(new_pool["k"][safe]).astype(jnp.float32)
+            vf = unpack_int4(new_pool["v"][safe]).astype(jnp.float32)
+            kf = kf * new_pool["k_scale"][safe][..., None]
+            vf = vf * new_pool["v_scale"][safe][..., None]
+            # [B, 1, KV, ps, hd] -> [B, KV, ps, hd]
+            kf = jnp.moveaxis(kf, 2, 1).reshape(b, kvh, ps, hd)
+            vf = jnp.moveaxis(vf, 2, 1).reshape(b, kvh, ps, hd)
+            gpos = i * ps + jnp.arange(ps)
+            vis = (gpos[None, None, :] <= bound[:, :, None]) & ok[:, :, None]
+            return _int4_flash_step(q2, kf, vf, vis[:, None], carry)
+
+        m0 = jnp.full((b, kvh, qr), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, qr), jnp.float32)
+        acc0 = jnp.zeros((b, kvh, qr, hd), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, n_active, body, (m0, l0, acc0))
+        return _rows_out(_int4_finish(m, l, acc), qn), new_pool
 
     nb = max(1, min(t, block_tokens // ps))
     n_blocks = -(-t // nb)
@@ -311,9 +472,10 @@ def _paged_attn_kernel(
     qn: int,
     rep: int,
     t: int,
-    int8: bool,
+    kind: str,
 ):
-    if int8:
+    scaled = kind in ("int8", "int4")
+    if scaled:
         (ks_in, vs_in, out_ref, k_out, v_out, ks_out, vs_out,
          k_scr, v_scr, ks_scr, vs_scr, kw_scr, vw_scr, ksw_scr, vsw_scr,
          sems) = rest
@@ -333,15 +495,19 @@ def _paged_attn_kernel(
         slot = lin % ps
         kr = kn_ref[0, 0, j : j + 1, :].astype(jnp.float32)  # [1, hd]
         vr = vn_ref[0, 0, j : j + 1, :].astype(jnp.float32)
-        if int8:
-            # quant_rows, inlined: same grid as every other pool writer.
+        if scaled:
+            # quant_rows, inlined: same grid as every other pool writer
+            # (qmax 127 for int8 pages, KV4_QMAX for packed int4 pages —
+            # int4 rows are packed with pack_int4's split-half convention).
+            qm = 127.0 if kind == "int8" else KV4_QMAX
             for row, w_scr, s_scr in ((kr, kw_scr, ksw_scr),
                                       (vr, vw_scr, vsw_scr)):
                 amax = jnp.max(jnp.abs(row), axis=-1, keepdims=True)
-                sc = jnp.maximum(amax, 1e-30) / 127.0
-                w_scr[...] = jnp.clip(
-                    jnp.floor(row / sc + 0.5), -127.0, 127.0
+                sc = jnp.maximum(amax, 1e-30) * (1.0 / qm)
+                qrow = jnp.clip(
+                    jnp.floor(row * (1.0 / sc) + 0.5), -qm, qm
                 ).astype(jnp.int8)
+                w_scr[...] = pack_int4(qrow) if kind == "int4" else qrow
                 s_scr[...] = sc
             copies = (
                 (kw_scr, k_out.at[pid, g, pl.ds(slot, 1), :], 0),
@@ -368,16 +534,14 @@ def _paged_attn_kernel(
     bound = pos_b + jax.lax.broadcasted_iota(jnp.int32, (qr, 1), 0) // rep
     n_active = jnp.minimum(t, (pos_b + qn - 1) // ps + 1)
 
-    def body(ti, carry):
-        m, l, acc = carry
-        pid = table_ref[b, ti]
+    def load_page(pid):
         # Page tile loads: reads go through the *output* refs (the aliased
         # buffer) so the fused append above is visible.
         loads = [
             pltpu.make_async_copy(k_out.at[pid, g], k_scr, sems.at[0]),
             pltpu.make_async_copy(v_out.at[pid, g], v_scr, sems.at[1]),
         ]
-        if int8:
+        if scaled:
             loads += [
                 pltpu.make_async_copy(ks_out.at[pid, g], ks_scr, sems.at[2]),
                 pltpu.make_async_copy(vs_out.at[pid, g], vs_scr, sems.at[3]),
@@ -386,6 +550,37 @@ def _paged_attn_kernel(
             d.start()
         for d in loads:
             d.wait()
+
+    if kind == "int4":
+        # int4 tier: unpack nibbles in VMEM, dequantize, and run the shared
+        # _int4_flash_step recurrence on 2-D per-(b, g) slices — the same op
+        # sequence the XLA fallback and the gather oracle run batched, so
+        # the three paths agree bitwise (the tier's exactness contract).
+        def body(ti, carry):
+            pid = table_ref[b, ti]
+            load_page(pid)
+            readable = pid != TRASH_PAGE
+            kf = unpack_int4(k_scr[...]).astype(jnp.float32) * ks_scr[...]
+            vf = unpack_int4(v_scr[...]).astype(jnp.float32) * vs_scr[...]
+            kf = jnp.where(readable, kf, 0.0)  # select: NaN poison dies here
+            vf = jnp.where(readable, vf, 0.0)
+            gpos = ti * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+            vis = (gpos <= bound) & readable
+            return _int4_flash_step(qv, kf, vf, vis, carry)
+
+        m0 = jnp.full((qr,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((qr,), jnp.float32)
+        acc0 = jnp.zeros((qr, q_ref.shape[-1]), jnp.float32)
+        m, l, acc = jax.lax.fori_loop(0, n_active, body, (m0, l0, acc0))
+        out_ref[0, 0] = _int4_finish(m, l, acc)
+        return
+
+    int8 = kind == "int8"
+
+    def body(ti, carry):
+        m, l, acc = carry
+        pid = table_ref[b, ti]
+        load_page(pid)
         readable = pid != TRASH_PAGE
         kf = k_scr[...].astype(jnp.float32)
         vf = v_scr[...].astype(jnp.float32)
@@ -426,11 +621,12 @@ def paged_attention_kernel(
     Returns (out [B, Q, H, hd] f32, new pool — appended in place via
     input/output aliasing)."""
     b, qn, h, hd = q.shape
-    p_pages, kvh, ps, _ = pool["k"].shape
+    p_pages, kvh, ps, hdp = pool["k"].shape  # hdp = hd (hd//2 packed int4)
     t = table.shape[1]
     rep = h // kvh
     qr = qn * rep
-    int8 = pool["k"].dtype == jnp.int8
+    kind = pool_kind(pool)
+    scaled = kind in ("int8", "int4")
 
     q2 = _q_rows(q, kvh)  # [B, KV, QR, hd] f32 pre-scaled
     kn2 = jnp.moveaxis(k_new.astype(jnp.float32), 1, 2)  # [B, KV, Q, hd]
@@ -451,10 +647,10 @@ def paged_attention_kernel(
     # Input indices include the 2 scalar-prefetch args (table, pos).
     aliases = {5: 1, 6: 2}
     scratch = [
-        pltpu.VMEM((ps, hd), pdt),  # k page tile
-        pltpu.VMEM((ps, hd), pdt),  # v page tile
+        pltpu.VMEM((ps, hdp), pdt),  # k page tile
+        pltpu.VMEM((ps, hdp), pdt),  # v page tile
     ]
-    if int8:
+    if scaled:
         # Scales carried as [P, KV, ps, 1] so row tiles stay 2-D.
         ks4 = pool["k_scale"][..., None]
         vs4 = pool["v_scale"][..., None]
@@ -471,10 +667,10 @@ def paged_attention_kernel(
             pltpu.VMEM((ps, 1), jnp.float32),  # v scale tile
         ]
     scratch += [
-        pltpu.VMEM((1, hd), pdt),  # append row staging (k)
-        pltpu.VMEM((1, hd), pdt),  # append row staging (v)
+        pltpu.VMEM((1, hdp), pdt),  # append row staging (k)
+        pltpu.VMEM((1, hdp), pdt),  # append row staging (v)
     ]
-    if int8:
+    if scaled:
         scratch += [
             pltpu.VMEM((1, 1), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
@@ -490,7 +686,7 @@ def paged_attention_kernel(
     )
     res = pl.pallas_call(
         functools.partial(
-            _paged_attn_kernel, ps=ps, qn=qn, rep=rep, t=t, int8=int8
+            _paged_attn_kernel, ps=ps, qn=qn, rep=rep, t=t, kind=kind
         ),
         grid_spec=grid_spec,
         out_shape=out_shape,
@@ -499,7 +695,7 @@ def paged_attention_kernel(
     )(table, jnp.broadcast_to(pos, (b,)).astype(jnp.int32), *inputs)
     out = res[0]
     new_pool = {"k": res[1], "v": res[2]}
-    if int8:
+    if scaled:
         new_pool["k_scale"] = res[3][..., 0]
         new_pool["v_scale"] = res[4][..., 0]
     return _rows_out(out, qn), new_pool
@@ -525,10 +721,10 @@ def paged_attention(
     lives in :func:`repro.kernels.ops.paged_attention`.
     """
     b, qn, h, hd = q.shape
-    ps = pool["k"].shape[2]
-    itemsize = 1 if pool["k"].dtype == jnp.int8 else 4
+    ps, hdp = pool["k"].shape[2:]  # hdp: stored width (hd//2 for packed int4)
+    itemsize = jnp.dtype(pool["k"].dtype).itemsize
     qr = qn * (h // pool["k"].shape[1])
-    tile_bytes = 2 * (2 * ps * hd * itemsize + 2 * ps * 4) + 2 * qr * hd * 4
+    tile_bytes = 2 * (2 * ps * hdp * itemsize + 2 * ps * 4) + 2 * qr * hd * 4
     if tile_bytes > vmem_budget_bytes:
         return paged_attention_xla(
             pool, table, pos, q, k_new, v_new, block_tokens=block_tokens

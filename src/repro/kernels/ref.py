@@ -9,6 +9,7 @@ __all__ = [
     "dynamic_quant_ref",
     "ocs_gather_ref",
     "fused_quant_matmul_ref",
+    "w4a8_matmul_ref",
 ]
 
 
@@ -85,6 +86,58 @@ def fused_quant_matmul_ref(
     # mode bit-equivalence test can assert exact equality (f32 product
     # ordering matters at the ulp level).
     return (acc.astype(jnp.float32) * (scale[:, None] * ws)).astype(out_dtype)
+
+
+def w4a8_matmul_ref(
+    x: jnp.ndarray,
+    w4: jnp.ndarray,
+    s4: jnp.ndarray,
+    w8: jnp.ndarray,
+    s8: jnp.ndarray,
+    src_tail: jnp.ndarray,
+    outlier_idx: jnp.ndarray,
+    bits: int = 8,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Oracle for the W4A8 outlier-separated serving path.
+
+    x: [M, K] float; w4: [(K+S)//2, N] uint8 split-half packed int4 weights
+    with outlier rows zeroed (``repro.core.ocs.W4A8Linear`` layout); w8:
+    [T, N] int8 outlier rows; s4/s8: [N] f32 per-column scales; src_tail:
+    [S] int32 OCS duplicate sources; outlier_idx: [T] int32 rows of the
+    expanded K kept at 8-bit.
+
+    Two exact integer accumulations (the zeroed rows in ``w4`` make them a
+    partition of the sum) with the f32 epilogue grouped like the kernel —
+    ``acc4*(a_s*s4) + acc8*(a_s*s8)`` — so interpret-mode equivalence tests
+    can assert bit-exact equality. The activation quant is the
+    reciprocal-multiply form of ``paged_attention.quant_rows`` (not
+    ``dynamic_quant_ref``): inside a compiled loop body XLA rewrites a
+    loop-invariant ``amax / qmax`` into ``amax * (1/qmax)`` (a 1-ulp
+    difference), so the division form cannot be reproduced bit-exactly by
+    a grid-looped kernel.
+    """
+    from .paged_attention import quant_rows, unpack_int4
+
+    if out_dtype is None:
+        out_dtype = jnp.float32
+    q, a_s = quant_rows(x, qmax=float((1 << (bits - 1)) - 1))
+    q_exp = jnp.concatenate([q, jnp.take(q, src_tail, axis=1)], axis=1) \
+        if src_tail.shape[0] else q
+    wq = unpack_int4(w4.T).T  # int8 [K+S, N], outlier rows zero
+    acc4 = jax.lax.dot_general(
+        q_exp, wq, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    ).astype(jnp.float32)
+    s4r = jnp.asarray(s4, jnp.float32).reshape(1, -1)
+    y = acc4 * (a_s[:, None] * s4r)
+    if outlier_idx.shape[0]:
+        acc8 = jax.lax.dot_general(
+            jnp.take(q_exp, outlier_idx, axis=1), w8,
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+        ).astype(jnp.float32)
+        s8r = jnp.asarray(s8, jnp.float32).reshape(1, -1)
+        y = y + acc8 * (a_s[:, None] * s8r)
+    return y.astype(out_dtype)
 
 
 def ocs_quant_matmul_ref(

@@ -457,8 +457,9 @@ def main():
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--float-serve", action="store_true")
-    ap.add_argument("--kv-bits", type=int, default=0,
-                    help="int8 KV cache for decode cells (perf iteration)")
+    ap.add_argument("--kv-bits", type=int, default=0, choices=[0, 4, 8],
+                    help="quantized KV cache for decode cells (8 = int8, "
+                    "4 = packed int4 pages; 0 = float)")
     ap.add_argument("--n-micro", type=int, default=8)
     ap.add_argument("--out", default="")
     ap.add_argument("--hlo-out", default="")

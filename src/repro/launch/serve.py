@@ -69,8 +69,7 @@ def build_parser():
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--bits", type=int, default=8)
-    ap.add_argument("--kv-bits", type=int, default=0,
-                    help="8 = int8 KV cache (see EXPERIMENTS.md §Perf C1)")
+    # --kv-bits is auto-generated from EngineConfig.kv_bits below.
     ap.add_argument("--ocs-ratio", type=float, default=0.02)
     ap.add_argument("--clip", default="mse")
     ap.add_argument("--float-serve", action="store_true",
@@ -226,8 +225,6 @@ def main(argv=None):
     if args.trace_out and not args.trace:
         raise SystemExit("serve.py: --trace-out requires --trace")
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.kv_bits:
-        cfg = dataclasses.replace(cfg, kv_bits=args.kv_bits)
     rng = np.random.default_rng(args.seed)
 
     params = T.init_params(cfg, jax.random.PRNGKey(args.seed))

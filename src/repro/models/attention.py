@@ -475,16 +475,21 @@ def attention_decode(
         from repro.serving import kv_cache as _kvc
 
         kernel = _coerce_attn_kernel(attn_kernel)
-        if kernel in ("pallas", "xla"):
+        packed4 = cache["k"].dtype == jnp.uint8
+        if kernel in ("pallas", "xla") or packed4:
             # Fused dispatch: append + page-indexed flash attention in one
             # call ("pallas" = Mosaic on TPU with the gather-free XLA loop
             # as the off-TPU/VMEM fallback; "xla" pins that loop outright).
+            # Packed int4 pools route *every* kernel choice here — including
+            # "gather", as the dispatch's gather oracle: the legacy s8 x s8
+            # path below has no nibble unpack, and the int4 tier's contract
+            # is bit-exact agreement across all three paths anyway.
             from repro.kernels import ops as kops
 
+            force = {"pallas": None, "xla": "ref", "gather": "gather"}[kernel]
             with jax.named_scope(f"paged_attention_{kernel}"):
                 out, new_cache = kops.paged_attention(
-                    cache, table, pos, q, k, v,
-                    force=None if kernel == "pallas" else "ref",
+                    cache, table, pos, q, k, v, force=force,
                 )
             new_cache = _kvc._shard_pool(new_cache)
             out = out.astype(x.dtype).reshape(b, qn, h * hd)

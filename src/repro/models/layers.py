@@ -21,7 +21,7 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.ocs import OCSQuantLinear, expand_activations
+from repro.core.ocs import OCSQuantLinear, W4A8Linear, expand_activations
 from repro.core.quantizer import qmax
 from repro.core import actquant, tap
 
@@ -36,7 +36,7 @@ __all__ = [
     "gelu",
 ]
 
-Weight = Union[jnp.ndarray, OCSQuantLinear]
+Weight = Union[jnp.ndarray, OCSQuantLinear, W4A8Linear]
 
 # Default matmul mode for OCSQuantLinear weights when the call site doesn't
 # pass ``mode`` explicitly (model code never does — attention/mlp/moe call
@@ -55,9 +55,12 @@ SERVING_KERNEL = "xla"
 
 @contextlib.contextmanager
 def serving_mode(mode: str, kernel: Optional[str] = None):
-    """Set the default quantized-matmul mode ('dequant' | 'w8a8') — and
-    optionally the kernel backend ('xla' | 'pallas') — for every ``dense``
-    call traced inside the context."""
+    """Set the default quantized-matmul mode ('dequant' | 'w8a8' | 'w4a8')
+    — and optionally the kernel backend ('xla' | 'pallas') — for every
+    ``dense`` call traced inside the context. 'w4a8' requires the params
+    tree converted to :class:`~repro.core.ocs.W4A8Linear` leaves
+    (``repro.core.ocs.to_w4a8``; the engine does this when
+    ``matmul_mode="w4a8"``)."""
     global SERVING_MODE, SERVING_KERNEL
     prev = (SERVING_MODE, SERVING_KERNEL)
     SERVING_MODE = mode
@@ -175,6 +178,33 @@ def _dynamic_w8a8_xla(w: OCSQuantLinear, x: jnp.ndarray, bits: int) -> jnp.ndarr
     )
 
 
+def _w4a8_xla(w: W4A8Linear, x: jnp.ndarray) -> jnp.ndarray:
+    """Pure-XLA W4A8: the sharded/fallback path and the kernel oracle."""
+    from repro.kernels.ref import w4a8_matmul_ref
+
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    src_tail = w.spec.src[w.n_orig:]
+    y = w4a8_matmul_ref(
+        x2, w.w4, w.s4, w.w8, w.s8, src_tail, w.outlier_idx,
+        bits=w.a_bits, out_dtype=x.dtype,
+    )
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def _pallas_w4a8(w: W4A8Linear, x: jnp.ndarray) -> jnp.ndarray:
+    from repro.kernels import ops as kops
+
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    src_tail = w.spec.src[w.n_orig:]
+    y = kops.w4a8_matmul(
+        x2, w.w4, w.s4, w.w8, w.s8, src_tail, w.outlier_idx,
+        bits=w.a_bits, out_dtype=x.dtype,
+    )
+    return y.reshape(lead + (y.shape[-1],))
+
+
 def dense(
     w: Weight,
     x: jnp.ndarray,
@@ -199,12 +229,37 @@ def dense(
     kernel). The choice is threaded per call/engine — ``dense`` never reads
     the deprecated ``USE_PALLAS_SERVING`` module global.
     """
+    if isinstance(w, W4A8Linear):
+        tap.tag(name, x)
+        if mode is None:
+            mode = SERVING_MODE
+        if kernel is None:
+            kernel = SERVING_KERNEL
+        if mode == "w4a8":
+            if kernel == "pallas":
+                return _pallas_w4a8(w, x)
+            return _w4a8_xla(w, x)
+        if mode == "dequant":
+            # Weight-only fallback (eager drift sampling, debugging): run
+            # the reconstructed float weights through the expansion.
+            xe = expand_activations(x, w.spec)
+            return xe.astype(x.dtype) @ w.dequant_weight(x.dtype)
+        raise ValueError(
+            f"W4A8Linear weights serve in mode 'w4a8' (or 'dequant'), "
+            f"got {mode!r}"
+        )
     if isinstance(w, OCSQuantLinear):
         tap.tag(name, x)
         if mode is None:
             mode = SERVING_MODE
         if kernel is None:
             kernel = SERVING_KERNEL
+        if mode == "w4a8":
+            raise ValueError(
+                "mode 'w4a8' needs W4A8Linear weights — convert the params "
+                "tree with repro.core.ocs.to_w4a8 (the serving engine does "
+                "this when matmul_mode='w4a8')"
+            )
         pallas = kernel == "pallas"
         two_d = w.weight.values.ndim == 2 and jnp.asarray(w.spec.mult).ndim == 1
         if mode == "w8a8":

@@ -28,8 +28,10 @@ Mechanics — every piece reuses existing machinery:
 A site is **flagged** when it has seen at least ``min_values`` live values
 and its EMA saturation rate exceeds ``factor * calib_rate`` where
 ``calib_rate`` is the outlier mass the calibration window put above the
-clip (floored at ``1 - quantile`` so an empty tail can't make any exceed
-an alarm).
+clip, floored at a per-precision-tier rate (``(1 - quantile)`` scaled up
+``2x`` per bit below 8 — see ``grid_bits``) so an empty tail can't make
+any exceedance an alarm, and so the coarser int4/w4a8 grids' naturally
+higher saturation never false-flags ordinary traffic.
 """
 from __future__ import annotations
 
@@ -90,17 +92,27 @@ class QuantDriftMonitor:
     def __init__(self, *, clips: Optional[Dict[str, float]] = None,
                  quantile: float = 0.999, factor: float = 4.0,
                  calib_samples: int = 8, min_values: int = 2048,
-                 ema_alpha: float = 0.25):
+                 ema_alpha: float = 0.25, grid_bits: int = 8):
         if not 0.0 < quantile < 1.0:
             raise ValueError(f"quantile must be in (0,1), got {quantile}")
         if factor <= 1.0:
             raise ValueError(f"drift factor must be > 1, got {factor}")
+        if grid_bits < 2 or grid_bits > 8:
+            raise ValueError(f"grid_bits must be in [2, 8], got {grid_bits}")
         self.clips = dict(clips or {})
         self.quantile = quantile
         self.factor = factor
         self.calib_samples = calib_samples
         self.min_values = min_values
         self.ema_alpha = ema_alpha
+        # Per-precision-tier calibration floor: a b-bit grid has 2^(8-b)x
+        # fewer levels than int8, so the same calibrated clip saturates a
+        # proportionally larger activation mass *by design* — the sub-8-bit
+        # tiers budget that much more baseline outlier mass before a site
+        # counts as drifted. Without this, an engine serving the int4 tier
+        # would false-flag every site from its ordinary traffic.
+        self.grid_bits = grid_bits
+        self.rate_floor = (1.0 - quantile) * float(2 ** (8 - grid_bits))
         self.sites: Dict[str, _SiteState] = {}
         self.samples = 0  # sampled forward passes observed
 
@@ -138,7 +150,7 @@ class QuantDriftMonitor:
                 if not st.fixed_clip:
                     st.clip = float(st.hist.quantile(self.quantile))
                 st.calib_rate = max(
-                    self._mass_above(st.hist, st.clip), 1.0 - self.quantile
+                    self._mass_above(st.hist, st.clip), self.rate_floor
                 )
             return
         rate = float((a > st.clip).mean())
@@ -228,7 +240,7 @@ def clips_from_params(params) -> Dict[str, float]:
     try:
         import jax
 
-        from repro.core.ocs import OCSQuantLinear
+        from repro.core.ocs import OCSQuantLinear, W4A8Linear
         from repro.core.quantizer import qmax
     except Exception:  # pragma: no cover - import cycle safety
         return {}
@@ -258,7 +270,10 @@ def clips_from_params(params) -> Dict[str, float]:
     try:
         jax.tree_util.tree_map_with_path(
             visit, params,
-            is_leaf=lambda l: isinstance(l, OCSQuantLinear),
+            # W4A8Linear activations are dynamically quantized — treat the
+            # whole container as a (skipped) leaf rather than recursing
+            # into its packed arrays.
+            is_leaf=lambda l: isinstance(l, (OCSQuantLinear, W4A8Linear)),
         )
     except Exception:
         return {}

@@ -38,6 +38,7 @@ from typing import Optional
 from .spec_decode import SpecConfig
 
 __all__ = [
+    "ConfigError",
     "KernelChoice",
     "KernelConfig",
     "EngineConfig",
@@ -45,6 +46,17 @@ __all__ = [
     "add_engine_config_args",
     "engine_config_from_args",
 ]
+
+
+class ConfigError(ValueError):
+    """A structurally valid but *unsupported* knob combination.
+
+    Raised when individually valid fields contradict each other (e.g. a
+    precision tier paired with a speculative draft mode it cannot verify
+    against, or ``kv_bits=4`` on an unpaged engine). A distinct type so
+    launchers and the router can surface "fix your config" separately from
+    programming errors — but still a ``ValueError`` for existing handlers.
+    """
 
 
 class KernelChoice(str, enum.Enum):
@@ -200,8 +212,25 @@ class EngineConfig:
         default="dequant",
         metadata={
             "help": "dequant = weight-only int8; w8a8 = dynamic per-row "
-            "int8 activations",
-            "choices": ["dequant", "w8a8"],
+            "int8 activations; w4a8 = packed int4 weights with an "
+            "OCS-selected outlier-channel set kept at int8",
+            "choices": ["dequant", "w8a8", "w4a8"],
+        },
+    )
+    kv_bits: Optional[int] = dataclasses.field(
+        default=None,
+        metadata={
+            "help": "KV-cache precision tier: 8 = int8 rows, 4 = packed "
+            "nibble pages (paged engines only; halves KV bytes/token), "
+            "0/unset = the model config's default",
+            "optional_int": True,
+        },
+    )
+    w4a8_outlier_ratio: float = dataclasses.field(
+        default=0.05,
+        metadata={
+            "help": "w4a8: fraction of input channels kept at int8 "
+            "(OCS absmax ranking; 0 = naive all-int4 weights)",
         },
     )
     paged: Optional[bool] = dataclasses.field(
@@ -371,9 +400,34 @@ class EngineConfig:
             raise ValueError(
                 f"max_len must leave room for prompt + 1 token, got {self.max_len}"
             )
-        if self.matmul_mode not in ("dequant", "w8a8"):
+        if self.matmul_mode not in ("dequant", "w8a8", "w4a8"):
             raise ValueError(
-                f"matmul_mode must be dequant|w8a8, got {self.matmul_mode!r}"
+                f"matmul_mode must be dequant|w8a8|w4a8, got {self.matmul_mode!r}"
+            )
+        if self.kv_bits is not None and self.kv_bits not in (4, 8):
+            raise ValueError(
+                f"kv_bits must be 4 or 8 (or unset), got {self.kv_bits}"
+            )
+        if self.kv_bits == 4 and self.paged is False:
+            raise ConfigError(
+                "kv_bits=4 packs nibbles into page pools; the dense cache "
+                "has no int4 layout — drop paged=False or use kv_bits=8"
+            )
+        if not 0.0 <= self.w4a8_outlier_ratio <= 1.0:
+            raise ValueError(
+                "w4a8_outlier_ratio must be in [0, 1], got "
+                f"{self.w4a8_outlier_ratio}"
+            )
+        if (
+            self.matmul_mode == "w4a8"
+            and self.spec is not None
+            and getattr(self.spec, "draft_mode", None) != "w4a8"
+        ):
+            raise ConfigError(
+                "matmul_mode='w4a8' serves a W4A8Linear parameter tree; a "
+                f"draft_mode={getattr(self.spec, 'draft_mode', None)!r} "
+                "drafter cannot trace it (the int8/float matmul modes need "
+                "the OCSQuantLinear tree) — set spec.draft_mode='w4a8'"
             )
         if self.page_size < 1 or self.page_size & (self.page_size - 1):
             raise ValueError(

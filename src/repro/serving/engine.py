@@ -83,8 +83,8 @@ float model in low precision. This engine is that provider's serving loop:
   grid; ``EngineConfig.profile_dir`` wraps :meth:`ServingEngine.run` in a
   ``jax.profiler`` trace window (``jax.named_scope`` labels the jitted
   prefill/decode/verify dispatches);
-* **stats** — a typed :class:`EngineStats` (schema v8: v7 plus the
-  tracing/drift telemetry fields), *derived from the metrics registry* —
+* **stats** — a typed :class:`EngineStats` (schema v10: v8 plus the
+  precision-tier fields), *derived from the metrics registry* —
   percentiles come from registry histograms, counts from registry
   counters; ``stats()`` keeps returning the flat dict view and
   :meth:`ServingEngine.metrics_text` renders the same registry as
@@ -118,7 +118,13 @@ from repro.runtime.health import HeartbeatMonitor, StepTimer
 from . import kv_cache as kvc
 from . import sampling as sampling_mod
 from . import spec_decode as spec_mod
-from .config import EngineConfig, KernelChoice, KernelConfig, SamplingParams
+from .config import (
+    ConfigError,
+    EngineConfig,
+    KernelChoice,
+    KernelConfig,
+    SamplingParams,
+)
 from .scheduler import StepScheduler
 
 __all__ = [
@@ -211,11 +217,20 @@ class TokenEvent:
 
 @dataclasses.dataclass
 class EngineStats:
-    """Typed serving counters (stats schema v8, frozen).
+    """Typed serving counters (stats schema v10, frozen).
 
     The dict view (:meth:`as_dict`, what ``ServingEngine.stats()`` returns)
     is the stable cross-PR schema consumed by benchmarks — append fields,
-    never rename. v8 additions over v7 (the observability layer —
+    never rename. v10 additions over v8 (v9 was the router schema rev —
+    ``serving.router`` — no engine fields changed): the precision-tier
+    fields ``kv_bits`` (0 = float KV, 8 / 4 = quantized page tiers; pairs
+    with ``matmul_mode``, which gains the ``"w4a8"`` vocabulary) and the
+    capacity gauges ``kv_bytes_per_token`` (per-token KV footprint across
+    all layers, scales + nibble packing included) and
+    ``kv_pool_capacity_tokens`` (pool capacity expressed in tokens —
+    ``kv_pages_capacity * page_size``; the int4 tier doubles this at
+    matched pool memory). docs/serving.md §Precision tiers has the v9->v10
+    migration table. v8 additions over v7 (the observability layer —
     docs/serving.md §Observability has the migration table): the span-ring
     telemetry ``trace_enabled`` / ``trace_events`` / ``trace_dropped`` and
     the quant-drift telemetry ``drift_enabled`` / ``drift_samples`` /
@@ -276,6 +291,9 @@ class EngineStats:
     attn_kernel: str = "xla"
     matmul_kernel: str = "xla"
     matmul_mode: str = "dequant"
+    kv_bits: float = 0.0
+    kv_bytes_per_token: float = 0.0
+    kv_pool_capacity_tokens: float = 0.0
     attn_step_ms: float = 0.0
     spec_enabled: float = 0.0
     spec_rounds: float = 0.0
@@ -455,9 +473,32 @@ class ServingEngine:
                 attn_probe=attn_probe,
             ),
         )
+        # Precision tier: EngineConfig.kv_bits overrides the model config's
+        # cache precision, applied *before* any cache is built so every
+        # layer pool (and the drift monitor's tier calibration) sees it.
+        if config.kv_bits is not None and config.kv_bits != cfg.kv_bits:
+            cfg = dataclasses.replace(cfg, kv_bits=config.kv_bits)
+        self.kv_bits = cfg.kv_bits
         self.cfg = cfg
         self.params = params
         self.config = config
+        if config.matmul_mode == "w4a8":
+            # Sub-8-bit weight tier: rebuild the OCSQuantLinear leaves as
+            # packed W4A8Linear (OCS-ranked outlier channels stay int8).
+            # Host-side, once, at construction — like PTQ itself.
+            from repro.core.ocs import OCSQuantLinear, W4A8Linear, to_w4a8
+
+            def _to_tier(leaf):
+                if isinstance(leaf, OCSQuantLinear):
+                    return to_w4a8(leaf, config.w4a8_outlier_ratio)
+                return leaf
+
+            self.params = jax.tree.map(
+                _to_tier,
+                self.params,
+                is_leaf=lambda x: isinstance(x, (OCSQuantLinear, W4A8Linear)),
+            )
+            params = self.params
         # Observability (PR 8, docs/serving.md §Observability). The metrics
         # registry always exists — every legacy counter attribute below is a
         # registry-backed property (see _COUNTER_METRICS), so booking costs
@@ -491,11 +532,15 @@ class ServingEngine:
         # activation grids where present; other sites self-calibrate from
         # early traffic. Sampling happens in step(), outside the watchdog
         # timer; the first sampling failure disables the monitor for good
-        # (telemetry must never take the serving loop down).
+        # (telemetry must never take the serving loop down). The sub-8-bit
+        # tiers calibrate against a wider baseline-saturation floor — a
+        # 4-bit grid clips more ordinary-traffic mass by design.
+        grid_bits = 4 if (cfg.kv_bits == 4 or config.matmul_mode == "w4a8") else 8
         self._drift: Optional[QuantDriftMonitor] = (
             QuantDriftMonitor(
                 clips=clips_from_params(params),
                 factor=config.drift_threshold,
+                grid_bits=grid_bits,
             )
             if config.drift_every > 0
             else None
@@ -522,6 +567,12 @@ class ServingEngine:
         self.paged = (
             cfg.block in ("dense", "moe") if config.paged is None else config.paged
         )
+        if cfg.kv_bits == 4 and not self.paged:
+            raise ConfigError(
+                "kv_bits=4 packs nibbles into page pools; this engine "
+                f"resolved to an unpaged cache (block={cfg.block!r}) — the "
+                "dense cache has no int4 layout"
+            )
         if self.paged:
             if cfg.block not in ("dense", "moe"):
                 raise ValueError(f"paged KV cache: dense/moe only, got {cfg.block}")
@@ -2348,6 +2399,14 @@ class ServingEngine:
                     "span events aged out of the bounded ring").set(
                 float(self.trace.dropped)
             )
+        m.gauge("kv_bytes_per_token",
+                "per-token KV cache footprint across all layers").set(
+            float(kvc.kv_bytes_per_token(self.cfg)) if self.paged else 0.0
+        )
+        m.gauge("kv_pool_capacity_tokens",
+                "page-pool capacity expressed in tokens").set(
+            float(alloc.capacity * self.page_size) if alloc else 0.0
+        )
         if self._drift is not None:
             self._drift.publish(m)
 
@@ -2367,7 +2426,7 @@ class ServingEngine:
         return self._drift.report() if self._drift is not None else {}
 
     def engine_stats(self) -> EngineStats:
-        """The typed v8 stats record (``stats()`` is its flat dict view),
+        """The typed v10 stats record (``stats()`` is its flat dict view),
         derived from the metrics registry: counts read registry counters
         (through the legacy attribute facade), percentiles read the
         bounded-reservoir registry histograms booked live at the event
@@ -2433,6 +2492,9 @@ class ServingEngine:
             attn_kernel=self._attn_kernel_stat(),
             matmul_kernel=self.matmul_kernel,
             matmul_mode=self.matmul_mode,
+            kv_bits=float(self.kv_bits or 0),
+            kv_bytes_per_token=gv("kv_bytes_per_token"),
+            kv_pool_capacity_tokens=gv("kv_pool_capacity_tokens"),
             attn_step_ms=self._attn_step_ms(),
             spec_enabled=1.0 if self._spec is not None else 0.0,
             queue_wait_p50_s=self._hist_qwait.percentile(50),
@@ -2461,7 +2523,7 @@ class ServingEngine:
         return s
 
     def stats(self) -> Dict:
-        """The flat dict view of :meth:`engine_stats` (stats schema v8)."""
+        """The flat dict view of :meth:`engine_stats` (stats schema v10)."""
         return self.engine_stats().as_dict()
 
 

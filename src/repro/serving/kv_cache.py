@@ -49,11 +49,18 @@ from repro.sharding.specs import logical
 # Single source of truth for cache-row quantization and the page-pool
 # scatter: the contiguous int8 cache, the int8 page pool, and the fused
 # paged-attention kernel's in-kernel append must agree bitwise.
-from repro.kernels.paged_attention import append_rows as _append_rows
+from repro.kernels.paged_attention import (
+    KV4_QMAX,
+    append_rows as _append_rows,
+    pack_int4,
+    quant_rows as _quant_rows_q,
+    unpack_int4,
+)
 from repro.models.attention import _quant_rows
 
 __all__ = [
     "pages_needed",
+    "kv_bytes_per_token",
     "init_page_pool",
     "init_paged_cache",
     "append_token",
@@ -73,6 +80,21 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
     if n_tokens <= 0:
         return 0
     return -(-n_tokens // page_size)
+
+
+def kv_bytes_per_token(cfg: ModelConfig) -> int:
+    """Pool bytes one cache row costs across all layers (values + scales).
+
+    The precision-tier capacity lever in one number: at kv_bits=4 the value
+    bytes halve versus int8 (two nibbles per byte), so a matched-memory pool
+    holds ~2x the tokens. Scales are tier-independent (one f32 per token per
+    KV head per side).
+    """
+    if cfg.kv_bits is None:
+        per_row = 2 * cfg.hd * 4  # float32 k + v, no scales
+    else:
+        per_row = 2 * (cfg.hd * cfg.kv_bits // 8) + 2 * 4
+    return cfg.n_layers * cfg.n_kv_heads * per_row
 
 
 # ---------------------------------------------------------------------------
@@ -95,8 +117,22 @@ def init_page_pool(
     """One layer's pool: ``[n_pages, KV, page_size, hd]`` (+ scales if int8)."""
     shape = (n_pages, cfg.n_kv_heads, page_size, cfg.hd)
     if cfg.kv_bits is not None:
+        if cfg.kv_bits == 4:
+            # Packed nibbles: byte j of a row holds channel j (low nibble)
+            # and channel j + hd//2 (high nibble) — the split-half layout
+            # pack_int4/unpack_int4 implement. uint8 dtype is the tier
+            # discriminator (int8 pools quantize at qmax=127, packed pools
+            # at qmax=7); scales keep the int8 layout.
+            if cfg.hd % 2:
+                raise ValueError(f"kv_bits=4 needs an even head dim, got {cfg.hd}")
+            return {
+                "k": jnp.zeros(shape[:3] + (cfg.hd // 2,), jnp.uint8),
+                "v": jnp.zeros(shape[:3] + (cfg.hd // 2,), jnp.uint8),
+                "k_scale": jnp.zeros(shape[:3], jnp.float32),
+                "v_scale": jnp.zeros(shape[:3], jnp.float32),
+            }
         if cfg.kv_bits != 8:
-            raise NotImplementedError("kv_bits: only int8 pages implemented")
+            raise NotImplementedError("kv_bits: only int8/int4 pages implemented")
         return {
             "k": jnp.zeros(shape, jnp.int8),
             "v": jnp.zeros(shape, jnp.int8),
@@ -196,9 +232,15 @@ def gather_pages(pool: Dict, table) -> Tuple:
     """
     b, t = table.shape
     n_kv, ps, hd = pool["k"].shape[1:]
+    packed = pool["k"].dtype == jnp.uint8
+    if packed:
+        hd = hd * 2  # pool stores two nibbles per byte; callers see int8 rows
+
     trash = jnp.repeat(table == TRASH_PAGE, ps, axis=1)  # [B, T*ps]
 
     def flat4(x):  # [B, T, KV, ps, hd] -> [B, KV, T*ps, hd]
+        if packed:
+            x = unpack_int4(x)
         x = jnp.moveaxis(x, 2, 1).reshape(b, n_kv, t * ps, hd)
         return jnp.where(trash[:, None, :, None], jnp.zeros((), x.dtype), x)
 
@@ -229,7 +271,17 @@ def write_prompt_pages(pool: Dict, k, v, page_ids) -> Dict:
 
     k_p, v_p = paged(k), paged(v)
     out = dict(pool)
-    if pool["k"].dtype == jnp.int8:
+    if pool["k"].dtype == jnp.uint8:
+        # Packed int4 tier: same quant_rows as append_rows' in-place append
+        # (qmax=7), nibble-packed — prefill-written and decode-appended pages
+        # agree bitwise.
+        k_q, k_s = _quant_rows_q(k_p, qmax=KV4_QMAX)
+        v_q, v_s = _quant_rows_q(v_p, qmax=KV4_QMAX)
+        out["k"] = pool["k"].at[page_ids].set(pack_int4(k_q))
+        out["v"] = pool["v"].at[page_ids].set(pack_int4(v_q))
+        out["k_scale"] = pool["k_scale"].at[page_ids].set(k_s)
+        out["v_scale"] = pool["v_scale"].at[page_ids].set(v_s)
+    elif pool["k"].dtype == jnp.int8:
         k_q, k_s = _quant_rows(k_p)
         v_q, v_s = _quant_rows(v_p)
         out["k"] = pool["k"].at[page_ids].set(k_q)
@@ -251,16 +303,21 @@ def gather_prefix(pool: Dict, prefix_ids) -> Tuple:
     so the always-visible prefix semantics are exactly causal here).
     """
     n_hit, n_kv, ps, hd = (prefix_ids.shape[0],) + pool["k"].shape[1:]
+    packed = pool["k"].dtype == jnp.uint8
+    if packed:
+        hd = hd * 2
 
     def flat(vals, scale):  # [H, KV, ps, hd] -> [1, H*ps, KV, hd]
+        if packed:
+            vals = unpack_int4(vals)
         x = vals.astype(jnp.float32)
         if scale is not None:
             x = x * scale[..., None]
         return jnp.moveaxis(x, 1, 2).reshape(1, n_hit * ps, n_kv, hd)
 
-    int8 = pool["k"].dtype == jnp.int8
-    k = flat(pool["k"][prefix_ids], pool["k_scale"][prefix_ids] if int8 else None)
-    v = flat(pool["v"][prefix_ids], pool["v_scale"][prefix_ids] if int8 else None)
+    quant = pool["k"].dtype != jnp.float32 and "k_scale" in pool
+    k = flat(pool["k"][prefix_ids], pool["k_scale"][prefix_ids] if quant else None)
+    v = flat(pool["v"][prefix_ids], pool["v_scale"][prefix_ids] if quant else None)
     return k, v
 
 

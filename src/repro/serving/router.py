@@ -31,6 +31,16 @@ that owns placement, liveness, and recovery:
   *where* a token is produced cannot change *which* token it is.
   Migration needs the replay path, hence **paged replicas only**
   (dense/moe archs — their engine default).
+* **precision-tier affinity** — replicas carry a tier identity
+  ``(kv_bits, matmul_mode)``. A request with committed tokens resumes
+  on its source tier ONLY: replaying an int8-cache prefix through an
+  int4 pool (or a w8a8 trace through w4a8 weights) would decode the
+  continuation over different numerics than produced the committed
+  tokens, silently breaking the bit-identical-resume contract above.
+  Cross-tier migration is therefore **rejected** — when no same-tier
+  replica is left alive the request goes terminal with finish reason
+  ``"tier_mismatch"`` rather than resuming wrong. Requests with no
+  committed output (queued, never prefilled) carry no tier constraint.
 * **retry / timeout / backoff** — ``EngineOverloaded`` sheds retry with
   capped exponential backoff plus deterministic jitter, informed by the
   exception's ``retry_after_hint_s``; ``Request.deadline_s`` is enforced
@@ -79,6 +89,11 @@ DRAINING = "draining"
 DEAD = "dead"
 
 _HEALTH_VALUE = {HEALTHY: 1.0, DRAINING: 0.5, DEAD: 0.0}
+
+# Router-terminal reasons that must emit a synthetic finished=True event
+# from stream(): the engine's sentinels plus the router's own cross-tier
+# migration rejection (engines never produce "tier_mismatch").
+_ROUTER_SENTINELS = tuple(_SENTINEL_REASONS) + ("tier_mismatch",)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,6 +183,10 @@ class Replica:
             )
         self.rid = rid
         self.engine = engine
+        # Precision-tier identity: committed tokens only resume on a
+        # replica whose KV storage and matmul numerics match the engine
+        # that produced them (kv_bits 0 = float pool).
+        self.tier = (int(engine.kv_bits or 0), str(engine.matmul_mode))
         self.state = HEALTHY
         self.pinned = False  # explicit drain(): never self-heals
         # Router-side watchdog around THIS replica's steps — independent of
@@ -224,7 +243,10 @@ class ReplicaSet:
     Each replica gets its own :class:`EngineConfig`-shaped state (KV pool,
     jit caches, counters); the model config and parameter tree are shared
     (read-only under jit). Build homogeneous sets with :meth:`build`, or
-    pass pre-built engines (e.g. heterogeneous pools) directly.
+    pass pre-built engines (e.g. heterogeneous pools, mixed precision
+    tiers) directly — the router keys migration on each replica's
+    ``tier`` so mixed-tier sets stay correct (cross-tier resume is
+    rejected, never silently degraded).
     """
 
     def __init__(self, engines: Sequence[ServingEngine],
@@ -272,6 +294,9 @@ class _Pending:
     req: Request
     attempt: int  # placement attempts already consumed
     not_before: float  # perf_counter gate for the next attempt
+    tier: Optional[Tuple[int, str]] = None  # same-tier resume constraint
+    # (set when the request carries committed tokens from a harvested
+    # replica; None = any healthy replica may take it)
 
 
 class Router:
@@ -325,6 +350,10 @@ class Router:
         self._c_timed_out = self.metrics.counter(
             "router_timed_out", "requests expired at the router"
         )
+        self._c_tier_rejected = self.metrics.counter(
+            "router_tier_rejected",
+            "cross-tier migrations rejected (source precision tier extinct)",
+        )
         self._hist_migrate = self.metrics.histogram(
             "router_migrate_seconds",
             "harvest from the failed replica -> accepted resubmission",
@@ -338,6 +367,15 @@ class Router:
 
     def _live(self) -> List[Replica]:
         return [r for r in self.replicas if r.state == HEALTHY]
+
+    def _tier_alive(self, tier: Tuple[int, str]) -> bool:
+        """True while any non-dead replica of ``tier`` remains — a
+        draining one may heal, so a tier-pinned request keeps waiting;
+        once the tier is extinct the wait is hopeless and the request
+        is rejected."""
+        return any(
+            r.state != DEAD and r.tier == tier for r in self.replicas
+        )
 
     def _load(self, rep: Replica) -> float:
         """Placement score: outstanding tokens a replica still owes
@@ -356,8 +394,12 @@ class Router:
         pages = eng.allocator.in_use() if eng.paged else 0
         return tok + 8.0 * len(eng.queue) + 1.0 * pages
 
-    def _pick(self) -> Optional[Replica]:
+    def _pick(
+        self, tier: Optional[Tuple[int, str]] = None
+    ) -> Optional[Replica]:
         live = self._live()
+        if tier is not None:
+            live = [r for r in live if r.tier == tier]
         if not live:
             return None
         if self.config.placement == "round_robin":
@@ -365,7 +407,9 @@ class Router:
             for _ in range(n):
                 rep = self.replicas[self._rr_next % n]
                 self._rr_next += 1
-                if rep.state == HEALTHY:
+                if rep.state == HEALTHY and (
+                    tier is None or rep.tier == tier
+                ):
                     return rep
             return None
         # least_loaded; ties break toward the lowest rid (deterministic)
@@ -397,20 +441,25 @@ class Router:
             self._c_shed.inc()
         elif reason == "timeout":
             self._c_timed_out.inc()
+        elif reason == "tier_mismatch":
+            self._c_tier_rejected.inc()
         if self.trace is not None:
             self.trace.emit("retire", track=req.uid, step=self.steps,
                             finish_reason=reason, where="router")
 
-    def _try_place(self, req: Request, attempt: int) -> bool:
+    def _try_place(self, req: Request, attempt: int,
+                   tier: Optional[Tuple[int, str]] = None) -> bool:
         """One placement attempt. True if an engine accepted the request;
         False leaves it to the caller (retry or terminal-shed). A request
-        whose end-to-end deadline already lapsed goes terminal here."""
+        whose end-to-end deadline already lapsed goes terminal here;
+        ``tier`` pins the candidate set to one precision tier (committed
+        tokens resume on matching numerics only)."""
         now = time.perf_counter()
         left = self._remaining(req, now)
         if left is not None and left <= 0.0:
             self._terminal(req, "timeout", now)
             return True  # handled (terminally)
-        rep = self._pick()
+        rep = self._pick(tier)
         if rep is None:
             return False
         # Invariant: a request the router is placing carries no terminal
@@ -438,8 +487,8 @@ class Router:
                             replica=rep.rid, attempt=attempt)
         return True
 
-    def _enqueue_retry(self, req: Request, attempt: int,
-                       hint_s: float) -> None:
+    def _enqueue_retry(self, req: Request, attempt: int, hint_s: float,
+                       tier: Optional[Tuple[int, str]] = None) -> None:
         now = time.perf_counter()
         if attempt >= self.config.max_retries:
             self._terminal(req, "shed", now)
@@ -451,7 +500,7 @@ class Router:
             # than sleep into a guaranteed timeout.
             self._terminal(req, "timeout", now)
             return
-        self._pending.append(_Pending(req, attempt + 1, now + delay))
+        self._pending.append(_Pending(req, attempt + 1, now + delay, tier))
         self._c_retried.inc()
         if self.trace is not None:
             self.trace.emit("retry", track=req.uid, step=self.steps,
@@ -516,7 +565,7 @@ class Router:
                 )
                 seen += 1
             if req.t_done > 0.0:
-                if not sent_final and req.finish_reason in _SENTINEL_REASONS:
+                if not sent_final and req.finish_reason in _ROUTER_SENTINELS:
                     yield TokenEvent(
                         uid=req.uid, token=-1, index=len(req.output),
                         t=req.t_done, finished=True,
@@ -669,11 +718,20 @@ class Router:
         for req in reqs:
             if req.t_done > 0.0:
                 continue  # already router-terminal — not ours to move
+            # Committed tokens pin the resume to the source's precision
+            # tier: replaying an int8 trace through an int4 pool (or
+            # w8a8 output through w4a8 weights) decodes the continuation
+            # over numerics that never produced the prefix. A request
+            # with no output yet restarts cleanly anywhere.
+            tier = src.tier if req.output else None
+            if tier is not None and not self._tier_alive(tier):
+                self._reject_tier(req, tier, src.rid)
+                continue
             t0 = time.perf_counter()  # per request, or the Nth observed
             # latency would include every earlier placement in the batch
             self._placed.pop(req.uid, None)
             self._last_hint = 0.0
-            handled = self._try_place(req, 0)
+            handled = self._try_place(req, 0, tier)
             dst = self._placed.get(req.uid)
             if dst is not None:  # genuinely re-placed on another replica
                 self._c_migrated.inc()
@@ -688,7 +746,21 @@ class Router:
                 # request alive (committed tokens intact) until a replica
                 # heals or retries run out. migrated counts completed
                 # moves only; a retry that lands later books router_placed.
-                self._enqueue_retry(req, 0, self._last_hint)
+                self._enqueue_retry(req, 0, self._last_hint, tier)
+
+    def _reject_tier(self, req: Request, tier: Tuple[int, str],
+                     src_rid: int = -1) -> None:
+        """Terminal cross-tier rejection: the request's tier is extinct,
+        and resuming on a different tier would silently change the
+        numerics under its committed tokens."""
+        self._placed.pop(req.uid, None)
+        if self.trace is not None:
+            self.trace.emit(
+                "tier_reject", track=req.uid, step=self.steps,
+                src=src_rid, kv_bits=tier[0], matmul_mode=tier[1],
+                committed=len(req.output),
+            )
+        self._terminal(req, "tier_mismatch", time.perf_counter())
 
     def _flush_retries(self) -> None:
         if not self._pending:
@@ -700,15 +772,22 @@ class Router:
             if p.not_before > now:
                 still.append(p)
                 continue
+            if p.tier is not None and not self._tier_alive(p.tier):
+                # The tier went extinct while this retry waited out its
+                # backoff — reject now rather than burn the remaining
+                # attempts on placements that can never match.
+                self._reject_tier(p.req, p.tier)
+                continue
             self._last_hint = 0.0
-            if not self._try_place(p.req, p.attempt):
+            if not self._try_place(p.req, p.attempt, p.tier):
                 if p.attempt >= self.config.max_retries:
                     self._terminal(p.req, "shed", now)
                 else:
                     # _try_place just refreshed _last_hint from the shed's
                     # retry_after_hint_s — backoff stays informed on every
                     # hop, not just the first submit.
-                    self._enqueue_retry(p.req, p.attempt, self._last_hint)
+                    self._enqueue_retry(p.req, p.attempt, self._last_hint,
+                                        p.tier)
         self._pending = still
 
     # -------------------------------------------------------------- stats
@@ -735,11 +814,11 @@ class Router:
         )
 
     def stats(self) -> Dict:
-        """Flat router counters (stats schema v9 — the v8 engine schema
-        stays per-replica via ``replicas[rid].engine.stats()``; the
-        router adds the ``router_*`` / ``replica_health_*`` layer on
-        top — docs/serving.md §Replicated serving has the migration
-        note)."""
+        """Flat router counters (stats schema v9, plus the v10
+        ``router_tier_rejected`` counter — the engine schema stays
+        per-replica via ``replicas[rid].engine.stats()``; the router
+        adds the ``router_*`` / ``replica_health_*`` layer on top —
+        docs/serving.md §Replicated serving has the migration note)."""
         self._refresh_gauges()
         s = {
             "router_steps": float(self.steps),
@@ -750,6 +829,7 @@ class Router:
             "router_dead_replicas": self._c_dead.value,
             "router_shed": self._c_shed.value,
             "router_timed_out": self._c_timed_out.value,
+            "router_tier_rejected": self._c_tier_rejected.value,
             "router_replicas": float(len(self.replicas)),
             "router_healthy_replicas": float(len(self._live())),
             "router_pending_retries": float(len(self._pending)),

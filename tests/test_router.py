@@ -674,3 +674,110 @@ def test_property_router_lifecycle_never_leaks_pages(ops):
     # with a terminal finish_reason (completed/error/shed/timeout).
     for r in live:
         assert r.t_done > 0.0, (r.uid, r.finish_reason)
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision tiers: cross-tier migration is rejected, never resumed
+
+
+def _mixed_router(cfg, params, tiers, rconf=None):
+    """One replica per (kv_bits, matmul_mode) entry in ``tiers``."""
+    engines = [
+        ServingEngine(cfg, params, EngineConfig(
+            **_ECONF, kv_bits=kv, matmul_mode=mm))
+        for kv, mm in tiers
+    ]
+    return Router(ReplicaSet(engines),
+                  rconf or RouterConfig(placement="round_robin"))
+
+
+def test_replica_tier_identity(dense_setup):
+    cfg, params = dense_setup
+    router = _mixed_router(cfg, params,
+                           [(8, "dequant"), (4, "dequant"), (None, "dequant")])
+    assert router.replicas[0].tier == (8, "dequant")
+    assert router.replicas[1].tier == (4, "dequant")
+    assert router.replicas[2].tier == (0, "dequant")  # float pool
+
+
+def test_cross_tier_migration_rejected_when_tier_extinct(dense_setup):
+    """Kill the only int8 replica mid-decode in an {int8, int4} set: its
+    in-flight request (committed tokens were produced over int8 KV) must
+    NOT resume on the int4 survivor — it goes terminal 'tier_mismatch'.
+    The survivor's own request is untouched."""
+    cfg, params = dense_setup
+    router = _mixed_router(cfg, params, [(8, "dequant"), (4, "dequant")])
+    rng = np.random.default_rng(3)
+    reqs = _mk(rng, cfg.vocab, [5, 6], max_new=8)
+    for r in reqs:
+        router.submit(r)  # round_robin: uid 0 -> rep 0 (kv8), uid 1 -> rep 1
+    for _ in range(4):
+        router.step()
+    assert len(reqs[0].output) > 0  # committed tokens pin the tier
+    router.kill(0)
+    assert reqs[0].finish_reason == "tier_mismatch"
+    assert reqs[0].t_done > 0.0
+    s = router.stats()
+    assert s["router_tier_rejected"] == 1.0
+    assert s["router_migrated"] == 0.0
+    router.run()
+    assert reqs[1].finish_reason in ("eos", "length")  # survivor unaffected
+    _assert_no_leaks(router)
+
+
+def test_fresh_requests_cross_tiers_freely(dense_setup):
+    """A harvested request with NO committed output carries no tier
+    constraint — it restarts cleanly on any healthy replica."""
+    cfg, params = dense_setup
+    router = _mixed_router(cfg, params, [(8, "dequant"), (4, "dequant")])
+    req = Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=4)
+    router.submit(req)  # round_robin -> rep 0 (kv8)
+    router.kill(0)  # nothing committed yet: migrates to the int4 replica
+    assert router.stats()["router_tier_rejected"] == 0.0
+    assert router.stats()["router_migrated"] == 1.0
+    router.run()
+    assert req.finish_reason == "length"
+    _assert_no_leaks(router)
+
+
+def test_same_tier_migration_still_exact_in_mixed_set(dense_setup):
+    """Two int8 replicas plus one int4: killing one int8 replica
+    mid-decode resumes its lanes on the OTHER int8 replica (never the
+    int4 one) and the output stays oracle-exact."""
+    cfg, params = dense_setup
+    router = _mixed_router(
+        cfg, params, [(8, "dequant"), (8, "dequant"), (4, "dequant")])
+    rng = np.random.default_rng(7)
+    reqs = _mk(rng, cfg.vocab, [7, 5, 3], max_new=8)
+    oracle = _oracle(cfg, params, _clone(reqs), kv_bits=8)
+    for r in reqs:
+        router.submit(r)  # uid i -> replica i (round_robin)
+    for _ in range(4):
+        router.step()
+    assert len(reqs[0].output) > 0
+    router.kill(0)
+    assert router._placed.get(0) == 1, "must resume on the int8 peer"
+    assert router.stats()["router_tier_rejected"] == 0.0
+    router.run()
+    # uids 0/1 decoded entirely over int8 KV -> oracle-exact; uid 2 lives
+    # on the int4 replica (different numerics, no exactness claim).
+    assert {r.uid: list(r.output) for r in reqs[:2]} == {
+        u: oracle[u] for u in (0, 1)
+    }
+    assert reqs[2].finish_reason in ("eos", "length")
+    _assert_no_leaks(router)
+
+
+def test_stream_emits_tier_mismatch_sentinel(dense_setup):
+    """A consumer streaming a request that gets tier-rejected mid-decode
+    sees a finished=True event with finish_reason='tier_mismatch' instead
+    of a silently-ending iterator."""
+    cfg, params = dense_setup
+    router = _mixed_router(cfg, params, [(8, "dequant"), (4, "dequant")])
+    it = router.generate([1, 2, 3], max_new_tokens=16)  # -> rep 0 (kv8)
+    events = [next(it)]  # at least one committed token pins the tier
+    router.kill(0)
+    events.extend(it)
+    assert events[-1].finished
+    assert events[-1].finish_reason == "tier_mismatch"
+    _assert_no_leaks(router)

@@ -31,6 +31,12 @@ against its absolute recovery invariants — kill-arm ``lost == 0`` /
 replica healed — with no baseline involved: these are correctness
 contracts and may never drift.
 
+A third mode, ``--kv``, gates ``BENCH_kv_precision.json`` (PR 10) the
+same way: the int4 KV tier's matched-memory lane-capacity ratio
+(>= 1.9x arithmetic bound, >= 1.5x measured), the kv4/kv8 bytes-per-token
+ratio (<= 0.60), and the greedy int4-vs-int8 token-agreement floor are
+absolute invariants of the precision-tier subsystem, not trends.
+
 Every other shared numeric metric is printed informationally (schema drift
 is visible, not fatal — the BENCH schema is append-only). Runs are gated
 only against a baseline with the same workload meta (arch / n_requests /
@@ -77,6 +83,19 @@ OBS_GUARDED = (
     "obs_overhead_prefill_frac",
     "obs_overhead_itl_p50_frac",
 )
+
+# kv-precision-arm capacity invariants (PR 10): absolute gates on the
+# current BENCH_kv_precision.json — no baseline involved. The int4 tier's
+# whole reason to exist is ~2x lanes at matched pool memory with bounded
+# quality loss; a run below these bounds is a broken tier, not a slow one.
+# metric -> (comparator, bound, meaning)
+KV_GUARDED = {
+    "lane_bound_ratio": (">=", 1.9, "matched-memory admissible lanes ~2x"),
+    "peak_lane_ratio": (">=", 1.5, "measured concurrent lanes (sched slack)"),
+    "bytes_per_token_ratio": ("<=", 0.60, "kv4 bytes/token vs kv8"),
+    "greedy_agreement": (">=", 0.60, "int4-vs-int8 greedy token agreement"),
+}
+
 
 # chaos-arm recovery invariants (PR 9): absolute gates on the current
 # BENCH_serving_chaos.json — no baseline involved, these may never drift.
@@ -212,6 +231,44 @@ def check_chaos(path: str) -> int:
     return 0
 
 
+_OPS = {
+    ">=": lambda v, b: v >= b,
+    "<=": lambda v, b: v <= b,
+    ">": lambda v, b: v > b,
+    "==": lambda v, b: v == b,
+}
+
+
+def check_kv(path: str) -> int:
+    """Gate the kv-precision artifact's capacity/quality invariants
+    absolutely (the mirror of --chaos for the precision-tier subsystem:
+    the bench already asserted these, this re-check guards the artifact
+    CI parses independently)."""
+    cm = _load(path)["metrics"]
+    failures = []
+    print(f"{'kv-precision invariant':<34} {'bound':>12} {'current':>12}")
+    for name, (op, bound, meaning) in KV_GUARDED.items():
+        if name not in cm:
+            failures.append((name, f"missing (need {op} {bound})"))
+            print(f"{name:<34} {op + ' ' + str(bound):>12} {'MISSING':>12}")
+            continue
+        val = float(cm[name])
+        ok = _OPS[op](val, bound)
+        flag = "" if ok else "  << VIOLATED"
+        if not ok:
+            failures.append((name, f"{val} not {op} {bound} ({meaning})"))
+        print(f"{name:<34} {op + ' ' + str(bound):>12} {val:>12.4f}{flag}")
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} kv-precision invariant(s) violated: "
+            + "; ".join(f"{n}: {why}" for n, why in failures)
+        )
+        return 1
+    print("\nOK: kv-precision invariants hold "
+          "(~2x matched-memory lanes, bounded quality loss)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -238,10 +295,21 @@ def main(argv=None) -> int:
         default=os.path.join(_RESULTS, "BENCH_serving_chaos.json"),
         help="chaos artifact checked by --chaos",
     )
+    ap.add_argument("--kv", action="store_true",
+                    help="gate the kv-precision artifact's absolute "
+                         "capacity/quality invariants instead of the "
+                         "baseline diff")
+    ap.add_argument(
+        "--kv-current",
+        default=os.path.join(_RESULTS, "BENCH_kv_precision.json"),
+        help="kv-precision artifact checked by --kv",
+    )
     args = ap.parse_args(argv)
 
     if args.chaos:
         return check_chaos(args.chaos_current)
+    if args.kv:
+        return check_kv(args.kv_current)
     if args.update_baseline:
         shutil.copyfile(args.current, args.baseline)
         print(f"baseline updated from {args.current}")
